@@ -1,0 +1,34 @@
+"""Paper Tables I/II: accuracy drop + crossbar reduction of the FORMS pipeline.
+
+Synthetic-data analogue: the *relative* claim reproduced is that ADMM
+prune+polarize+quantize costs ~zero accuracy while multiplying crossbar
+reduction (prune x quant x polarization-vs-split).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn, trained_forms_cnn
+from repro.core import crossbar as xbar
+from repro.core.quantization import QuantSpec
+from repro.models import cnn as cnn_mod
+
+
+def run() -> None:
+    for fragment in (4, 8):
+        t = trained_forms_cnn(fragment=fragment)
+        shapes = cnn_mod.crossbar_weight_shapes(t["cfg"], t["projected"])
+        rep = xbar.reduction_report(shapes, shapes, xbar.CrossbarSpec(),
+                                    QuantSpec(bits=8), baseline_bits=16)
+        acc_drop = t["acc_pre"] - t["acc_post"]
+        emit(f"table1.accuracy_pretrained.m{fragment}", 0.0,
+             f"acc={t['acc_pre']:.3f}")
+        emit(f"table1.accuracy_forms.m{fragment}", 0.0,
+             f"acc={t['acc_post']:.3f};drop={acc_drop:.3f}")
+        emit(f"table1.crossbar_reduction.m{fragment}", 0.0,
+             f"total={rep.total:.1f}x;quant={rep.quant_factor:.0f}x;"
+             f"polarization={rep.polarization_factor:.0f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Paper Figs 13/14: frame-per-second speedup composition vs original ISAAC,
+driven by the measured crossbar reduction + measured EIC of the trained CNN."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, trained_forms_cnn
+from repro.core import crossbar as xbar
+from repro.core import perfmodel as pm
+from repro.core.quantization import QuantSpec, quantize_activations
+from repro.core.zeroskip import eic_stats
+from repro.data.synthetic import image_batch
+from repro.models import cnn as cnn_mod
+
+
+def run() -> None:
+    for fragment in (8, 16):
+        t = trained_forms_cnn(fragment=min(fragment, 8))
+        shapes = cnn_mod.crossbar_weight_shapes(t["cfg"], t["projected"])
+        rep = xbar.reduction_report(shapes, shapes, xbar.CrossbarSpec(),
+                                    QuantSpec(bits=8), baseline_bits=32)
+        img, _ = image_batch(t["ds"], 9100)
+        _, acts = cnn_mod.forward(t["cfg"], t["projected"], img,
+                                  collect_activations=True)
+        eics = []
+        for _, a in acts:
+            codes, _ = quantize_activations(a.reshape(a.shape[0], -1), 16)
+            eics.append(eic_stats(codes, fragment, 16).mean_eic)
+        mean_eic = float(np.mean(eics))
+        sp = pm.fps_speedup(crossbar_reduction_prune=rep.prune_factor,
+                            crossbar_reduction_quant=rep.quant_factor,
+                            fragment=fragment, mean_eic=mean_eic)
+        emit(f"fig13.pruned_quantized_isaac.m{fragment}", 0.0,
+             f"{sp['pruned_quantized_isaac']:.1f}x")
+        emit(f"fig13.forms_model_opt.m{fragment}", 0.0,
+             f"{sp['forms_model_opt']:.1f}x")
+        emit(f"fig13.forms_full_zero_skip.m{fragment}", 0.0,
+             f"{sp['forms_full_zero_skip']:.1f}x;mean_eic={mean_eic:.1f}")
+    # the paper's published envelope for reference
+    emit("fig13.published_envelope", 0.0,
+         "pruned-isaac=7.5-200.8x;forms-model=4-109.6x;forms-full=10.7-377.9x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Paper Tables III/IV/V: MCU + chip area/power roll-ups and normalized
+throughput, with the published values printed alongside for comparison."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import perfmodel as pm
+
+
+def run() -> None:
+    fp, fa = pm.mcu_rollup(pm.forms_mcu_components(8))
+    ip, ia = pm.mcu_rollup(pm.isaac_mcu_components())
+    emit("table3.forms_mcu", 0.0, f"power={fp:.2f}mW;area={fa:.5f}mm2")
+    emit("table3.isaac_mcu", 0.0, f"power={ip:.2f}mW;area={ia:.5f}mm2")
+
+    fc, ic = pm.forms_chip(8), pm.isaac_chip()
+    emit("table4.forms_chip", 0.0,
+         f"power={fc.chip_power_mw/1e3:.2f}W(pub 66.36);"
+         f"area={fc.chip_area_mm2:.1f}mm2(pub 89.15)")
+    emit("table4.isaac_chip", 0.0,
+         f"power={ic.chip_power_mw/1e3:.2f}W(pub 65.81);"
+         f"area={ic.chip_area_mm2:.1f}mm2(pub 85.09)")
+    emit("table4.dadiannao_chip", 0.0,
+         f"power={pm.DADIANNAO_CHIP_POWER_MW/1e3:.2f}W;"
+         f"area={pm.DADIANNAO_CHIP_AREA_MM2:.1f}mm2")
+
+    for frag, eic in ((8, 12.0), (16, 13.5)):
+        for row in pm.table_v(frag, mean_eic=eic):
+            pub = pm.TABLE_V_PUBLISHED.get(row.name)
+            pub_s = f";pub={pub[0]}/{pub[1]}" if pub else ""
+            emit(f"table5.{row.name.replace(' ', '_').replace(',', '')}",
+                 0.0, f"gops/mm2={row.gops_per_mm2_rel:.2f};"
+                      f"gops/W={row.gops_per_w_rel:.2f}{pub_s}")
+
+
+if __name__ == "__main__":
+    run()

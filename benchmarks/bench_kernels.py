@@ -1,0 +1,59 @@
+"""Kernel wall-times (CPU oracle path; the Pallas kernels are TPU-target and
+are timed here in interpret mode only at tiny shapes for sanity)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops, ref
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    M, K, N, m = 256, 1024, 1024, 8
+    x = jax.random.normal(key, (M, K))
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+    mags = jax.random.randint(jax.random.PRNGKey(2), (K, N), 0, 256).astype(jnp.uint8)
+    signs = jnp.where(jax.random.bernoulli(jax.random.PRNGKey(3), 0.5,
+                                           (K // m, N)), 1.0, -1.0)
+    scale = jnp.full((1, N), 0.01)
+
+    dense = jax.jit(lambda a, b: a @ b)
+    us_dense = time_fn(dense, x, w)
+    emit("kernel.dense_matmul.cpu", us_dense, f"{M}x{K}x{N}")
+
+    pol = jax.jit(lambda a: ops.polarized_matmul(a, mags, signs, scale, m=m,
+                                                 prefer_ref=True))
+    us_pol = time_fn(pol, x)
+    emit("kernel.polarized_matmul.oracle", us_pol,
+         f"vs_dense={us_pol/us_dense:.2f}x")
+
+    proj = jax.jit(lambda a: ops.admm_polarize(a, m=m, prefer_ref=True))
+    us_proj = time_fn(proj, w)
+    emit("kernel.admm_polarize.oracle", us_proj, f"{K}x{N}")
+
+    # bit-serial simulator at instrument scale
+    xc = jax.random.randint(jax.random.PRNGKey(4), (16, 128), 0, 256)
+    mc = jax.random.randint(jax.random.PRNGKey(5), (128, 64), 0, 256)
+    sg = jnp.where(jax.random.bernoulli(jax.random.PRNGKey(6), 0.5, (16, 64)),
+                   1, -1).astype(jnp.int32)
+    cells = jnp.stack([(mc >> (2 * c)) & 3 for c in range(4)], 0)
+    sim = jax.jit(lambda a: ops.bitserial_crossbar(a, cells, sg, m=8,
+                                                   input_bits=8,
+                                                   prefer_ref=True)[0])
+    us_sim = time_fn(sim, xc)
+    emit("kernel.bitserial_sim.oracle", us_sim, "16x128x64@8bit")
+
+    # interpret-mode Pallas sanity timings (tiny; NOT perf numbers)
+    from repro.kernels.polarized_matmul import polarized_matmul as kp
+    tiny = (jax.random.normal(key, (16, 64)), mags[:64, :32], signs[:8, :32],
+            scale[:, :32])
+    us_interp = time_fn(lambda: kp(*tiny, m=8, bm=16, bn=32, bk=32,
+                                   interpret=True), iters=3, warmup=1)
+    emit("kernel.polarized_matmul.pallas_interpret", us_interp,
+         "tiny-shape interpret-mode sanity only")
+
+
+if __name__ == "__main__":
+    run()

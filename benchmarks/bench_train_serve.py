@@ -1,0 +1,49 @@
+"""System-level CPU micro-benchmarks: train-step and decode-step wall time on
+a reduced arch (framework overhead sanity, not TPU perf)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs import get_reduced
+from repro.configs.base import TrainConfig
+from repro.data.synthetic import LMStreamConfig, lm_batch
+from repro.models.registry import build
+from repro.training import train_loop
+
+
+def run() -> None:
+    cfg = dataclasses.replace(get_reduced("yi-9b"), num_layers=2, d_model=64,
+                              num_heads=4, num_kv_heads=2, head_dim=16,
+                              d_ff=128, vocab_size=512)
+    m = build(cfg)
+    tcfg = TrainConfig(remat=False)
+    state, _ = train_loop.init_train_state(m, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(train_loop.make_train_step(m, tcfg))
+    ds = LMStreamConfig(vocab_size=512, seq_len=128, global_batch=8)
+    batch = lm_batch(ds, 0)
+    us = time_fn(lambda s: step(s, batch)[0], state, iters=3)
+    toks = 8 * 128
+    emit("system.train_step.reduced", us, f"tokens/s={toks/(us/1e6):.0f}")
+
+    cache = m.init_cache(8, 128)
+    dec = jax.jit(lambda p, c: m.decode_step(p, jnp.zeros((8, 1), jnp.int32),
+                                             c, jnp.array(5, jnp.int32)))
+    us = time_fn(lambda: dec(state.params, cache), iters=5)
+    emit("system.decode_step.reduced", us, f"tok/s={8/(us/1e6):.0f}")
+
+    # ADMM Z-update cost on the same params
+    from repro.core import admm as admm_mod
+    st, table = admm_mod.init_admm(state.params,
+                                   admm_mod.default_constraints())
+    upd = jax.jit(lambda p: admm_mod.admm_update(p, st, table))
+    us = time_fn(upd, state.params, iters=3)
+    emit("system.admm_update.reduced", us, f"layers={len(st)}")
+
+
+if __name__ == "__main__":
+    run()

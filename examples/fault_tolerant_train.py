@@ -1,0 +1,83 @@
+"""Fault tolerance demo: checkpoint/restart with bit-exact resume + elasticity.
+
+Simulates the production failure protocol on CPU:
+  1. train with async checkpointing;
+  2. "preempt" the run (drop all live state);
+  3. restore from the latest checkpoint and continue — the loss trajectory is
+     bit-exact vs an uninterrupted run (deterministic step-indexed data);
+  4. elastically reshard the restored state onto a different mesh.
+
+Usage:  PYTHONPATH=src python examples/fault_tolerant_train.py
+"""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_reduced
+from repro.configs.base import TrainConfig
+from repro.data.synthetic import LMStreamConfig, lm_batch
+from repro.distributed import sharding as shd
+from repro.launch.mesh import single_device_mesh
+from repro.models.registry import build
+from repro.training import train_loop
+
+
+def main():
+    cfg = dataclasses.replace(get_reduced("h2o-danube-1.8b"), vocab_size=128)
+    model = build(cfg)
+    tcfg = TrainConfig(learning_rate=1e-3, remat=False, keep_checkpoints=2)
+    ds = LMStreamConfig(vocab_size=128, seq_len=32, global_batch=8)
+    step = jax.jit(train_loop.make_train_step(model, tcfg))
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, keep=tcfg.keep_checkpoints)
+
+        # --- uninterrupted reference run -------------------------------
+        ref_state, _ = train_loop.init_train_state(model, tcfg,
+                                                   jax.random.PRNGKey(0))
+        ref_losses = []
+        for i in range(10):
+            ref_state, mtr = step(ref_state, lm_batch(ds, i))
+            ref_losses.append(float(mtr["loss"]))
+
+        # --- run that gets "preempted" at step 5 ------------------------
+        state, _ = train_loop.init_train_state(model, tcfg, jax.random.PRNGKey(0))
+        for i in range(5):
+            state, _ = step(state, lm_batch(ds, i))
+            mgr.save_async(state, i + 1)      # async: never blocks the step
+        mgr.wait()
+        print(f"preempted after step 5; latest checkpoint: {mgr.latest_step()}")
+        del state                              # the preemption
+
+        # --- restart: restore + continue --------------------------------
+        template, _ = train_loop.init_train_state(model, tcfg,
+                                                  jax.random.PRNGKey(0))
+        state, start = mgr.restore_latest(template)
+        print(f"restored step {start}; resuming")
+        resumed_losses = []
+        for i in range(start, 10):
+            state, mtr = step(state, lm_batch(ds, i))
+            resumed_losses.append(float(mtr["loss"]))
+
+        exact = np.allclose(ref_losses[5:], resumed_losses, rtol=0, atol=0)
+        print(f"resume bit-exact vs uninterrupted run: {exact}")
+        assert exact
+
+        # --- elastic rescale: move the state onto another mesh ----------
+        mesh = single_device_mesh()
+        ctx = shd.ParallelContext.for_mesh(mesh)
+        shardings = shd.params_shardings(state.params, ctx)
+        resharded = shd.reshard_state(state.params, shardings)
+        n = sum(x.size for x in jax.tree_util.tree_leaves(resharded))
+        print(f"elastically resharded {n/1e6:.2f}M params onto mesh "
+              f"{dict(mesh.shape)}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""End-to-end driver: the paper's full pipeline (Fig 1) on a CNN.
+
+pretrain -> crossbar-aware structured pruning + fragment polarization +
+ReRAM quantization (all via ADMM) -> hard projection -> crossbar mapping ->
+bit-serial in-situ inference with zero-skipping -> report: accuracy,
+crossbar reduction, EIC savings and the modeled FPS speedup (Figs 13/14).
+
+Usage:  PYTHONPATH=src python examples/forms_pipeline_cnn.py [--fragment 8]
+"""
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, _ROOT)                       # for benchmarks.*
+sys.path.insert(0, os.path.join(_ROOT, "src"))  # for repro.*
+
+from benchmarks.common import trained_forms_cnn  # noqa: E402
+from repro.core import crossbar as xbar  # noqa: E402
+from repro.core import forms_layer as FL  # noqa: E402
+from repro.core import perfmodel as pm  # noqa: E402
+from repro.core.admm import iter_weights  # noqa: E402
+from repro.core.fragments import FragmentSpec  # noqa: E402
+from repro.core.quantization import QuantSpec, quantize_activations  # noqa: E402
+from repro.core.zeroskip import eic_stats  # noqa: E402
+from repro.data.synthetic import image_batch  # noqa: E402
+from repro.models import cnn as cnn_mod  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fragment", type=int, default=8)
+    args = ap.parse_args()
+    m = args.fragment
+
+    print(f"=== FORMS pipeline, fragment size {m} ===")
+    t = trained_forms_cnn(fragment=m)
+    print(f"accuracy: pretrained {t['acc_pre']:.3f} -> FORMS {t['acc_post']:.3f}")
+
+    shapes = cnn_mod.crossbar_weight_shapes(t["cfg"], t["projected"])
+    rep = xbar.reduction_report(shapes, shapes, xbar.CrossbarSpec(),
+                                QuantSpec(bits=8), baseline_bits=16)
+    print(f"crossbar reduction: {rep.total:.1f}x "
+          f"(quant {rep.quant_factor:.0f}x, polarization "
+          f"{rep.polarization_factor:.0f}x vs split mapping)")
+
+    # in-situ (bit-serial) inference through one FC layer
+    w = next(leaf for name, leaf in iter_weights(t["projected"])
+             if name.startswith("fc") and hasattr(leaf, "ndim") and leaf.ndim == 2)
+    fp, err = FL.from_dense(w, FragmentSpec(m=m), QuantSpec(bits=8))
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (16, w.shape[0])))
+    y_sim, eic, _ = FL.apply_simulated(fp, x, input_bits=16)
+    rel = float(jnp.linalg.norm(y_sim - x @ w) / jnp.linalg.norm(x @ w))
+    print(f"bit-serial crossbar sim vs float: rel-L2 {rel:.4f} "
+          f"(conversion err {float(err):.4f})")
+
+    # zero-skipping on real activations
+    img, _ = image_batch(t["ds"], 9000)
+    _, acts = cnn_mod.forward(t["cfg"], t["projected"], img,
+                              collect_activations=True)
+    eics = []
+    for _, a in acts:
+        codes, _ = quantize_activations(a.reshape(a.shape[0], -1), 16)
+        eics.append(eic_stats(codes, m, 16).mean_eic)
+    mean_eic = float(np.mean(eics))
+    print(f"mean EIC {mean_eic:.1f}/16 -> zero-skip saves "
+          f"{(1 - mean_eic/16)*100:.0f}% of input cycles")
+
+    sp = pm.fps_speedup(rep.prune_factor, rep.quant_factor, fragment=m,
+                        mean_eic=mean_eic)
+    print(f"modeled FPS vs original ISAAC: pruned/quant-ISAAC "
+          f"{sp['pruned_quantized_isaac']:.1f}x, FORMS "
+          f"{sp['forms_model_opt']:.1f}x, FORMS+zero-skip "
+          f"{sp['forms_full_zero_skip']:.1f}x")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

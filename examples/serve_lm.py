@@ -1,0 +1,49 @@
+"""Serve a small LM with batched requests: dense vs FORMS-compressed weights.
+
+Demonstrates the serving engine (continuous batching over fixed decode slots,
+KV caches, greedy/temperature sampling) and the FORMS deployment story: the
+weights are projected onto the polarized+quantized set before serving.
+
+Usage:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models.registry import build
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    cfg = dataclasses.replace(get_reduced("qwen2-1.5b"), vocab_size=512)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.RandomState(0)
+    requests = [Request(uid=i,
+                        prompt=rng.randint(0, 512, size=rng.randint(2, 6)),
+                        max_new_tokens=16, temperature=0.0)
+                for i in range(10)]
+
+    for forms in (False, True):
+        engine = ServingEngine(model, params, max_len=128, batch_slots=4,
+                               forms=forms)
+        t0 = time.perf_counter()
+        results = engine.run([dataclasses.replace(r) for r in requests])
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.tokens) for r in results)
+        mode = "FORMS int8-polarized" if forms else "dense float"
+        print(f"[{mode:22s}] {len(results)} requests, {toks} tokens "
+              f"in {dt:.2f}s ({toks/dt:.1f} tok/s)")
+        if forms and engine.compression_errors:
+            worst = max(engine.compression_errors.values())
+            print(f"  weight-projection rel-L2: worst {worst:.3f} "
+                  f"(untrained weights; ADMM training drives this to ~0)")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: FORMS (polarized ReRAM in-situ computation) reproduced as a JAX/TPU framework."""
+
+__version__ = "1.0.0"

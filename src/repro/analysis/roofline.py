@@ -1,0 +1,95 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e targets).
+
+  compute term    = HLO_FLOPs_global  / (chips * 197e12 FLOP/s)
+  memory term     = HLO_bytes_global  / (chips * 819e9  B/s)
+  collective term = coll_bytes_global / (chips * 50e9   B/s per ICI link)
+
+``cost_analysis()`` on the compiled executable reports per-device numbers for
+the SPMD module; we scale by chip count for the global view (the two views
+give identical *terms*, we record both).  MODEL_FLOPS uses the classic
+6·N·D (train) / 2·N·D (inference) with N = active params and D = tokens
+processed per step; the ratio MODEL_FLOPS / HLO_FLOPS exposes remat and
+redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 per chip (TPU v5e)
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    kind: str                       # train | prefill | decode
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_global: float
+    tokens_per_step: int
+    peak_memory_bytes: Optional[float] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time: the dominant term (perfect overlap model)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS (global). >1 would mean XLA fused away work;
+        <1 exposes remat recompute / redundant einsum paths."""
+        hlo_global = self.hlo_flops_per_device * self.chips
+        return self.model_flops_global / max(hlo_global, 1.0)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        return (self.model_flops_global
+                / (self.chips * PEAK_FLOPS * max(self.step_time_s, 1e-12)))
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 collective_s=self.collective_s, bottleneck=self.bottleneck,
+                 step_time_s=self.step_time_s, mfu=self.mfu,
+                 useful_flops_fraction=self.useful_flops_fraction)
+        return d
+
+
+def model_flops(kind: str, active_params: int, tokens: int) -> float:
+    """6ND for training (fwd+bwd), 2ND for inference forward."""
+    factor = 6.0 if kind == "train" else 2.0
+    return factor * active_params * tokens
+
+
+def summarize(report: RooflineReport) -> str:
+    r = report
+    return (f"{r.arch:>20s} {r.shape:>12s} {r.mesh:>9s} "
+            f"compute {r.compute_s*1e3:9.3f}ms  memory {r.memory_s*1e3:9.3f}ms  "
+            f"collective {r.collective_s*1e3:9.3f}ms  -> {r.bottleneck:10s} "
+            f"mfu {r.mfu*100:5.1f}%  useful {r.useful_flops_fraction*100:5.1f}%")

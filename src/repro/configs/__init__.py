@@ -1,0 +1,35 @@
+"""Config registry: ``get_config(name)`` / ``get_reduced(name)`` for every arch."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import MeshConfig, ModelConfig, ShapeConfig, TrainConfig  # noqa: F401
+from repro.configs.shapes import SHAPES, shapes_for  # noqa: F401
+
+_ARCH_MODULES: Dict[str, str] = {
+    "yi-9b": "repro.configs.yi_9b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "qwen1.5-4b": "repro.configs.qwen1_5_4b",
+    "phi-3-vision-4.2b": "repro.configs.phi_3_vision_4_2b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "whisper-small": "repro.configs.whisper_small",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+}
+
+ARCH_NAMES: List[str] = list(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    return importlib.import_module(_ARCH_MODULES[name]).CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    return importlib.import_module(_ARCH_MODULES[name]).reduced()

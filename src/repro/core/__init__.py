@@ -1,0 +1,5 @@
+"""FORMS core: fragment polarization, ADMM optimization, crossbar modeling."""
+
+from repro.core.fragments import FragmentSpec  # noqa: F401
+from repro.core.pruning import PruneSpec  # noqa: F401
+from repro.core.quantization import QuantSpec  # noqa: F401

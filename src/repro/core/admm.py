@@ -1,0 +1,311 @@
+"""ADMM-regularized optimization (paper §III-D, Fig 4).
+
+The constrained problem
+
+    min  L(W)   s.t.  W_i in S_i (prune), P_i (polarize), Q_i (quantize)
+
+is split with auxiliary Z_i and dual U_i (scaled form).  Each training step
+optimizes the augmented loss
+
+    L(W) + sum_i rho_i/2 ||W_i - Z_i + U_i||_F^2            (Eq. 4)
+
+by SGD/Adam, and every ``update_every`` steps performs the Z/U update
+
+    Z_i <- proj_{S/P/Q}(W_i + U_i)                          (Eq. 6)
+    U_i <- U_i + W_i - Z_i
+
+Constraint sets compose by sequential projection (prune -> polarize ->
+quantize), mirroring the paper's multi-step flow: the pruning masks freeze the
+structure, the polarization signs refresh every M epochs (here: every
+``sign_refresh_every`` Z-updates), and quantization comes last.
+
+Everything is a pytree of plain arrays, so the whole ADMM step jits and shards
+(Z/U inherit the parameter shardings under pjit).  The polarization projection
+has a Pallas-kernel fast path (kernels/admm_polarize.py) used via
+``use_kernel=True`` on the hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fragments as fragmod
+from repro.core import polarization as polmod
+from repro.core import pruning as prunemod
+from repro.core import quantization as quantmod
+from repro.core.fragments import FragmentSpec
+from repro.core.pruning import PruneSpec
+from repro.core.quantization import QuantSpec
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerConstraint:
+    """Which FORMS constraints apply to one weight tensor."""
+
+    prune: Optional[PruneSpec] = None
+    polarize: Optional[FragmentSpec] = None
+    quantize: Optional[QuantSpec] = None
+    rho: float = 1e-3
+    sign_rule: str = "sum"  # "sum" (paper) | "energy" (exact projection)
+
+
+ConstraintFn = Callable[[str, Tuple[int, ...]], Optional[LayerConstraint]]
+
+
+def default_constraints(
+    prune: Optional[PruneSpec] = None,
+    polarize: Optional[FragmentSpec] = FragmentSpec(m=8),
+    quantize: Optional[QuantSpec] = QuantSpec(bits=8),
+    rho: float = 1e-3,
+    sign_rule: str = "sum",
+) -> ConstraintFn:
+    """Constraint policy: apply to every crossbar-mappable weight."""
+
+    def fn(path: str, shape: Tuple[int, ...]) -> Optional[LayerConstraint]:
+        if not fragmod.is_crossbar_weight(path, shape):
+            return None
+        return LayerConstraint(prune=prune, polarize=polarize,
+                               quantize=quantize, rho=rho, sign_rule=sign_rule)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Path utilities — ADMM state is keyed by flattened parameter paths.
+# ---------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def iter_weights(params: PyTree):
+    """Yield (path_str, leaf) for every array leaf."""
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in leaves:
+        yield _path_str(path), leaf
+
+
+# ---------------------------------------------------------------------------
+# ADMM state
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AdmmLayerState:
+    """Per-layer ADMM variables (a registered pytree)."""
+
+    z: jax.Array
+    u: jax.Array
+    signs: Optional[jax.Array]        # (F, N) frozen fragment signs or None
+    row_mask: Optional[jax.Array]     # frozen prune masks or None
+    col_mask: Optional[jax.Array]
+    scale: Optional[jax.Array]        # quant scale or None
+
+
+jax.tree_util.register_dataclass(
+    AdmmLayerState,
+    data_fields=["z", "u", "signs", "row_mask", "col_mask", "scale"],
+    meta_fields=[],
+)
+
+
+@dataclasses.dataclass
+class AdmmConfig:
+    update_every: int = 100          # gradient steps between Z/U updates
+    sign_refresh_every: int = 5      # Z-updates between sign re-elections (paper's N/M)
+    phases: Tuple[str, ...] = ("prune", "polarize", "quantize")
+
+
+def _as_matrix(w: jax.Array, c: LayerConstraint) -> jax.Array:
+    """2-D (or scan-stacked (L, K, N)) crossbar view of a weight tensor."""
+    if w.ndim == 3:      # scan-stacked matmul weights: keep the layer axis
+        return w
+    policy = c.polarize.policy if c.polarize else "W"
+    return fragmod.conv_to_matrix(w, policy)
+
+
+def _from_matrix(mat: jax.Array, shape, c: LayerConstraint) -> jax.Array:
+    if len(shape) == 4:
+        policy = c.polarize.policy if c.polarize else "W"
+        return fragmod.matrix_to_conv(mat, tuple(shape), policy)
+    return mat
+
+
+def constraint_table(params_like: PyTree, constraint_fn: ConstraintFn
+                     ) -> Dict[str, LayerConstraint]:
+    """Static constraint table from a params pytree (works on ShapeDtypeStructs)."""
+    table: Dict[str, LayerConstraint] = {}
+    for path, leaf in iter_weights(params_like):
+        if not hasattr(leaf, "shape"):
+            continue
+        c = constraint_fn(path, tuple(leaf.shape))
+        if c is not None:
+            table[path] = c
+    return table
+
+
+def init_admm(params: PyTree, constraint_fn: ConstraintFn
+              ) -> Tuple[Dict[str, AdmmLayerState], Dict[str, LayerConstraint]]:
+    """Build ADMM state + static constraint table for a parameter pytree."""
+    state: Dict[str, AdmmLayerState] = {}
+    table: Dict[str, LayerConstraint] = {}
+    for path, leaf in iter_weights(params):
+        if not hasattr(leaf, "shape"):
+            continue
+        c = constraint_fn(path, tuple(leaf.shape))
+        if c is None:
+            continue
+        table[path] = c
+        state[path] = AdmmLayerState(
+            z=jnp.asarray(leaf), u=jnp.zeros_like(leaf),
+            signs=None, row_mask=None, col_mask=None, scale=None)
+    return state, table
+
+
+def _project_fresh(mat: jax.Array, c: LayerConstraint):
+    """Projection with freshly elected structure; 2-D, vmap-able."""
+    out = mat
+    row_mask = jnp.ones((mat.shape[0],), bool)
+    col_mask = jnp.ones((mat.shape[1],), bool)
+    if c.prune is not None:
+        out, row_mask, col_mask = prunemod.project_prune(out, c.prune)
+    f = fragmod.FragmentSpec(m=c.polarize.m).num_fragments(mat.shape[0]) \
+        if c.polarize is not None else 1
+    signs = jnp.ones((f, mat.shape[1]), mat.dtype)
+    if c.polarize is not None:
+        out, signs = polmod.project_polarize(out, c.polarize.m, rule=c.sign_rule)
+    scale = jnp.ones((1, mat.shape[1]), jnp.float32)
+    if c.quantize is not None:
+        scale = quantmod.scale_for(out, c.quantize)
+        out = quantmod.project_quantize(out, c.quantize, scale)
+    return out, signs, row_mask, col_mask, scale
+
+
+def _project_frozen(mat: jax.Array, signs, row_mask, col_mask,
+                    c: LayerConstraint):
+    """Projection with frozen structure; 2-D, vmap-able."""
+    out = mat
+    if c.prune is not None:
+        out = prunemod.apply_masks(out, row_mask, col_mask)
+    if c.polarize is not None:
+        out, _ = polmod.project_polarize(out, c.polarize.m, rule="frozen",
+                                         signs=signs)
+    scale = jnp.ones((1, mat.shape[1]), jnp.float32)
+    if c.quantize is not None:
+        scale = quantmod.scale_for(out, c.quantize)
+        out = quantmod.project_quantize(out, c.quantize, scale)
+    return out, scale
+
+
+def project_layer(
+    mat: jax.Array,
+    c: LayerConstraint,
+    st: AdmmLayerState,
+    refresh_signs: bool = True,
+) -> Tuple[jax.Array, AdmmLayerState]:
+    """Sequential projection prune -> polarize -> quantize.
+
+    ``mat`` is (K, N) or scan-stacked (L, K, N) — the stacked case vmaps the
+    2-D projection per layer (fragments never cross layer boundaries).
+    """
+    stacked = mat.ndim == 3
+    fresh = refresh_signs or st.signs is None
+    if fresh:
+        fn = lambda m_: _project_fresh(m_, c)
+        if stacked:
+            fn = jax.vmap(fn)
+        out, signs, row_mask, col_mask, scale = fn(mat)
+    else:
+        fn = lambda m_, s_, rm, cm: _project_frozen(m_, s_, rm, cm, c)
+        if stacked:
+            fn = jax.vmap(fn)
+        out, scale = fn(mat, st.signs, st.row_mask, st.col_mask)
+        signs, row_mask, col_mask = st.signs, st.row_mask, st.col_mask
+    return out, dataclasses.replace(st, signs=signs, row_mask=row_mask,
+                                    col_mask=col_mask, scale=scale)
+
+
+def admm_penalty(params: PyTree, state: Dict[str, AdmmLayerState],
+                 table: Dict[str, LayerConstraint]) -> jax.Array:
+    """sum_i rho_i/2 ||W_i - Z_i + U_i||^2 — added to the task loss (Eq. 4)."""
+    total = jnp.zeros((), jnp.float32)
+    by_path = dict(iter_weights(params))
+    for path, st in state.items():
+        c = table[path]
+        w = by_path[path].astype(jnp.float32)
+        diff = w - st.z.astype(jnp.float32) + st.u.astype(jnp.float32)
+        total = total + 0.5 * c.rho * jnp.sum(jnp.square(diff))
+    return total
+
+
+def admm_update(params: PyTree, state: Dict[str, AdmmLayerState],
+                table: Dict[str, LayerConstraint],
+                refresh_signs: bool = True) -> Dict[str, AdmmLayerState]:
+    """Z/U update (Eq. 6): Z = proj(W + U); U += W - Z."""
+    by_path = dict(iter_weights(params))
+    new_state: Dict[str, AdmmLayerState] = {}
+    for path, st in state.items():
+        c = table[path]
+        w = by_path[path]
+        v = w + st.u
+        mat = _as_matrix(v, c)
+        zmat, st = project_layer(mat, c, st, refresh_signs=refresh_signs)
+        z = _from_matrix(zmat, w.shape, c)
+        u = st.u + w - z
+        new_state[path] = dataclasses.replace(st, z=z, u=u)
+    return new_state
+
+
+def project_hard(params: PyTree, state: Dict[str, AdmmLayerState],
+                 table: Dict[str, LayerConstraint]) -> PyTree:
+    """Final hard projection of W onto the constraint sets (end of training)."""
+    by_path = dict(iter_weights(params))
+    projected = dict(by_path)
+    for path, st in state.items():
+        c = table[path]
+        w = by_path[path]
+        mat = _as_matrix(w, c)
+        zmat, _ = project_layer(mat, c, st, refresh_signs=False
+                                if st.signs is not None else True)
+        projected[path] = _from_matrix(zmat, w.shape, c)
+    return _rebuild(params, projected)
+
+
+def _rebuild(params: PyTree, by_path: Dict[str, jax.Array]) -> PyTree:
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(params)
+    new_leaves = [by_path[_path_str(p)] for p, _ in leaves_with_path]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def constraint_metrics(params: PyTree, state: Dict[str, AdmmLayerState],
+                       table: Dict[str, LayerConstraint]) -> Dict[str, jax.Array]:
+    """Aggregate feasibility metrics (for logging / tests)."""
+    by_path = dict(iter_weights(params))
+    viol, dist, n = jnp.zeros(()), jnp.zeros(()), 0
+    spars = jnp.zeros(())
+    for path, st in state.items():
+        c = table[path]
+        w = by_path[path].astype(jnp.float32)
+        mat = _as_matrix(w, c)
+        if c.polarize is not None:
+            vfn = lambda m_: polmod.polarization_violation(m_, c.polarize.m)
+            v = jnp.mean(jax.vmap(vfn)(mat)) if mat.ndim == 3 else vfn(mat)
+            viol = viol + v
+        dist = dist + jnp.linalg.norm(w - st.z) / jnp.maximum(jnp.linalg.norm(w), 1e-12)
+        spars = spars + prunemod.sparsity(mat)
+        n += 1
+    n = max(n, 1)
+    return {"polarization_violation": viol / n, "wz_distance": dist / n,
+            "sparsity": spars / n}

@@ -1,0 +1,109 @@
+"""Fragment polarization: sign rules, Euclidean projection onto P, metrics.
+
+Paper §III-B / §III-D.2: the constraint set ``P_i`` = { weights of each
+fragment share one sign }.  The ADMM Z-update needs the Euclidean projection
+``proj_P(V)``:
+
+  1. choose a sign ``s_f`` for every fragment;
+  2. zero out the entries of the fragment whose sign disagrees with ``s_f``
+     (that is the closest point of the half-line set once the sign is fixed —
+     offending entries go to 0, agreeing entries stay).
+
+Sign rules
+----------
+``sum``    — the paper's rule (Eq. 2): ``s_f = +`` iff ``sum(V_f) >= 0``.
+``energy`` — beyond-paper exact projection: pick the sign whose *kept* energy
+             is larger, i.e. minimize the squared distance
+             ``min(sum(neg^2), sum(pos^2))``.  This is the true Euclidean
+             projection onto P (the paper's rule is a cheap proxy; we provide
+             both and ablate in benchmarks/bench_fragment_size.py).
+``frozen`` — keep externally supplied signs (used between the paper's
+             every-M-epoch sign refresh points, §III-B).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fragments as frag
+
+SIGN_RULES = ("sum", "energy", "frozen")
+
+
+def fragment_signs(mat: jax.Array, m: int, rule: str = "sum") -> jax.Array:
+    """Per-fragment signs in {+1, -1}, shape ``(F, N)`` for a ``(K, N)`` matrix."""
+    frs = frag.to_fragments(mat, m)  # (F, m, N)
+    if rule == "sum":
+        s = frs.sum(axis=1)
+        return jnp.where(s >= 0, 1.0, -1.0).astype(mat.dtype)
+    if rule == "energy":
+        pos_e = jnp.sum(jnp.square(jnp.maximum(frs, 0.0)), axis=1)
+        neg_e = jnp.sum(jnp.square(jnp.minimum(frs, 0.0)), axis=1)
+        return jnp.where(pos_e >= neg_e, 1.0, -1.0).astype(mat.dtype)
+    raise ValueError(f"unknown sign rule {rule!r}")
+
+
+def project_polarize(
+    mat: jax.Array,
+    m: int,
+    rule: str = "sum",
+    signs: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Euclidean projection of ``(K, N)`` onto the polarized set P.
+
+    Returns ``(projected, signs)`` where ``signs`` has shape ``(F, N)``.
+    If ``rule == 'frozen'`` the caller must pass ``signs``.
+    """
+    k = mat.shape[0]
+    if rule == "frozen":
+        if signs is None:
+            raise ValueError("rule='frozen' requires signs")
+    else:
+        signs = fragment_signs(mat, m, rule)
+    sign_grid = frag.expand_fragment_values(signs, m, k)  # (K, N)
+    # keep entries agreeing with the fragment sign, zero the rest
+    projected = jnp.where(mat * sign_grid >= 0, mat, jnp.zeros_like(mat))
+    return projected, signs
+
+
+def polarization_violation(mat: jax.Array, m: int, signs: Optional[jax.Array] = None,
+                           rule: str = "sum") -> jax.Array:
+    """Fraction of weight *magnitude* violating the fragment sign (0 = feasible)."""
+    if signs is None:
+        signs = fragment_signs(mat, m, rule)
+    sign_grid = frag.expand_fragment_values(signs, m, mat.shape[0])
+    bad = jnp.where(mat * sign_grid < 0, jnp.abs(mat), 0.0)
+    tot = jnp.abs(mat).sum()
+    return bad.sum() / jnp.maximum(tot, 1e-12)
+
+
+def is_polarized(mat: jax.Array, m: int) -> jax.Array:
+    """Boolean: every fragment's nonzeros share one sign."""
+    frs = frag.to_fragments(mat, m)
+    has_pos = jnp.any(frs > 0, axis=1)
+    has_neg = jnp.any(frs < 0, axis=1)
+    return jnp.logical_not(jnp.any(jnp.logical_and(has_pos, has_neg)))
+
+
+def decompose_polarized(mat: jax.Array, m: int) -> Tuple[jax.Array, jax.Array]:
+    """Split a polarized matrix into (magnitudes >= 0, fragment signs).
+
+    This is the storage format of the FORMS accelerator: magnitude bits on the
+    crossbar, one sign bit per fragment in the 1R sign indicator (§IV-A).
+    Requires the matrix to be polarized; for fragments that are entirely zero
+    the sign defaults to +1.
+    """
+    frs = frag.to_fragments(mat, m)
+    has_neg = jnp.any(frs < 0, axis=1)
+    signs = jnp.where(has_neg, -1.0, 1.0).astype(mat.dtype)  # (F, N)
+    sign_grid = frag.expand_fragment_values(signs, m, mat.shape[0])
+    mags = mat * sign_grid  # >= 0 when polarized
+    return mags, signs
+
+
+def recompose_polarized(mags: jax.Array, signs: jax.Array, m: int) -> jax.Array:
+    """Inverse of :func:`decompose_polarized`."""
+    sign_grid = frag.expand_fragment_values(signs, m, mags.shape[0])
+    return mags * sign_grid

@@ -1,0 +1,98 @@
+"""Crossbar-aware structured pruning (paper §III-A, §III-D.1).
+
+Two structured-sparsity types on the 2-D crossbar view ``H`` of shape (K, N):
+
+* **filter pruning** removes whole columns (output filters) — constraint
+  hyperparameter ``alpha`` = fraction of columns *kept*;
+* **filter-shape pruning** removes whole rows (same weight position across all
+  filters) — ``beta`` = fraction of rows kept.
+
+The Euclidean projection onto ``S`` keeps the columns/rows with the largest L2
+norms and zeroes the rest (the standard ADMM-NN projection: for group-sparsity
+constraints, the projection keeps the top-norm groups).
+
+**Crossbar-aware ratio snapping** (§III-A): pruning only saves hardware when
+the *remaining* rows reach a multiple of the sub-array row count ``m`` (rows)
+and remaining columns a multiple of the crossbar column width; any deeper
+pruning in between wastes accuracy without saving crossbars.  We snap the kept
+counts *up* to the next multiple so the accuracy loss is never paid for
+nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PruneSpec:
+    """Kept fractions for structured pruning of one layer."""
+
+    alpha: float = 1.0  # fraction of columns (filters) kept
+    beta: float = 1.0   # fraction of rows (filter-shapes) kept
+
+    def __post_init__(self):
+        if not (0.0 < self.alpha <= 1.0 and 0.0 < self.beta <= 1.0):
+            raise ValueError(f"alpha/beta must be in (0, 1], got {self}")
+
+
+def snap_kept_count(total: int, keep_fraction: float, multiple: int) -> int:
+    """Kept count snapped UP to a multiple (never exceeds total, always >= 1)."""
+    raw = max(1, int(round(total * keep_fraction)))
+    snapped = -(-raw // multiple) * multiple
+    return int(min(total, snapped))
+
+
+def crossbar_aware_spec(shape: Tuple[int, int], spec: PruneSpec,
+                        row_multiple: int, col_multiple: int) -> PruneSpec:
+    """Adjust a PruneSpec so kept rows/cols land on crossbar boundaries."""
+    k, n = shape
+    kept_rows = snap_kept_count(k, spec.beta, min(row_multiple, k))
+    kept_cols = snap_kept_count(n, spec.alpha, min(col_multiple, n))
+    return PruneSpec(alpha=kept_cols / n, beta=kept_rows / k)
+
+
+def _topk_mask(norms: jax.Array, kept: int) -> jax.Array:
+    """Boolean mask keeping the ``kept`` largest entries of a 1-D norm vector."""
+    n = norms.shape[0]
+    kept = int(min(max(kept, 1), n))
+    if kept == n:
+        return jnp.ones((n,), dtype=bool)
+    thresh = jax.lax.top_k(norms, kept)[0][-1]
+    mask = norms >= thresh
+    # tie-break: if ties push us above `kept`, keep the first `kept` by index
+    overflow = jnp.cumsum(mask.astype(jnp.int32)) > kept
+    return jnp.logical_and(mask, jnp.logical_not(overflow))
+
+
+def project_prune(mat: jax.Array, spec: PruneSpec) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Euclidean projection of ``(K, N)`` onto the structured-sparse set S.
+
+    Returns ``(projected, row_mask, col_mask)``.
+    """
+    k, n = mat.shape
+    col_norms = jnp.linalg.norm(mat, axis=0)
+    row_norms = jnp.linalg.norm(mat, axis=1)
+    col_mask = _topk_mask(col_norms, int(round(spec.alpha * n)))
+    row_mask = _topk_mask(row_norms, int(round(spec.beta * k)))
+    projected = mat * col_mask[None, :] * row_mask[:, None]
+    return projected, row_mask, col_mask
+
+
+def apply_masks(mat: jax.Array, row_mask: jax.Array, col_mask: jax.Array) -> jax.Array:
+    """Re-apply frozen pruning masks (used during fine-tuning after ADMM)."""
+    return mat * col_mask[None, :].astype(mat.dtype) * row_mask[:, None].astype(mat.dtype)
+
+
+def sparsity(mat: jax.Array) -> jax.Array:
+    """Fraction of exactly-zero entries."""
+    return jnp.mean((mat == 0).astype(jnp.float32))
+
+
+def dense_shape_after_prune(shape: Tuple[int, int], spec: PruneSpec) -> Tuple[int, int]:
+    """Shape of the dense matrix after removing pruned rows/columns."""
+    k, n = shape
+    return (max(1, int(round(spec.beta * k))), max(1, int(round(spec.alpha * n))))

@@ -1,0 +1,146 @@
+"""ReRAM-customized weight quantization (paper §III-C) + cell bit-slicing.
+
+The accelerator stores only **magnitude** bits on the crossbar (signs live in
+the fragment sign indicator), so the natural grid is a *symmetric magnitude
+grid*: ``w = s * delta * q`` with integer ``q in [0, 2^bits - 1]`` and the
+fragment sign ``s``.  With 2-bit ReRAM cells a ``bits``-bit magnitude needs
+``bits / cell_bits`` cells (paper: four 2-bit cells per 8-bit weight).
+
+Because polarization removes the sign bit from the crossbar, FORMS stores one
+*extra magnitude bit* per weight at equal cell count versus sign-magnitude
+designs (paper §IV-A) — i.e. 8-bit magnitudes where ISAAC-style mapping fits
+7+sign.  ``extra_magnitude_bit`` below accounts for that in comparisons.
+
+Projection onto Q (§III-D.3): round-to-nearest on the grid at fixed per-layer
+scale.  The scale is chosen from the current weights (max-abs calibration) —
+re-estimated at every Z-update, matching ADMM-NN practice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Quantization grid description.
+
+    Attributes:
+      bits: magnitude bits per weight (paper default 8).
+      cell_bits: bits per ReRAM cell (paper default 2).
+      per_channel: if True scale per output column (axis=1), else per-tensor.
+    """
+
+    bits: int = 8
+    cell_bits: int = 2
+    per_channel: bool = True
+
+    def __post_init__(self):
+        if self.bits % self.cell_bits != 0:
+            raise ValueError(
+                f"bits ({self.bits}) must be a multiple of cell_bits ({self.cell_bits}) "
+                "to fully utilize ReRAM cell resolution (paper §III-C)")
+
+    @property
+    def levels(self) -> int:
+        return (1 << self.bits) - 1  # max magnitude code
+
+    @property
+    def cells_per_weight(self) -> int:
+        return self.bits // self.cell_bits
+
+
+def scale_for(mat: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Max-abs calibration scale: largest code maps to the largest magnitude."""
+    if spec.per_channel:
+        amax = jnp.max(jnp.abs(mat), axis=0, keepdims=True)  # (1, N)
+    else:
+        amax = jnp.max(jnp.abs(mat))
+    return jnp.maximum(amax, 1e-12) / spec.levels
+
+
+def quantize_codes(mat: jax.Array, spec: QuantSpec,
+                   scale: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Signed integer codes in [-levels, levels] and the scale used."""
+    if scale is None:
+        scale = scale_for(mat, spec)
+    q = jnp.clip(jnp.round(mat / scale), -spec.levels, spec.levels)
+    return q, scale
+
+
+def project_quantize(mat: jax.Array, spec: QuantSpec,
+                     scale: Optional[jax.Array] = None) -> jax.Array:
+    """Euclidean projection onto the quantization grid Q (round to nearest)."""
+    q, scale = quantize_codes(mat, spec, scale)
+    return q * scale
+
+
+def quantization_error(mat: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Relative L2 error of projecting onto Q."""
+    pq = project_quantize(mat, spec)
+    return jnp.linalg.norm(mat - pq) / jnp.maximum(jnp.linalg.norm(mat), 1e-12)
+
+
+def is_on_grid(mat: jax.Array, spec: QuantSpec, scale: jax.Array,
+               atol: float = 1e-5) -> jax.Array:
+    """Boolean: every entry sits on the quantization grid (up to atol)."""
+    q = jnp.round(mat / scale)
+    ok_range = jnp.all(jnp.abs(q) <= spec.levels)
+    ok_grid = jnp.all(jnp.abs(q * scale - mat) <= atol * jnp.maximum(1.0, jnp.abs(mat)))
+    return jnp.logical_and(ok_range, ok_grid)
+
+
+# ---------------------------------------------------------------------------
+# Cell bit-slicing: magnitude codes -> per-cell planes (paper §III-C, §IV-A).
+# ---------------------------------------------------------------------------
+
+def slice_to_cells(mag_codes: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Split unsigned magnitude codes into ``cells_per_weight`` cell planes.
+
+    Input ``(K, N)`` integer codes in [0, 2^bits); output
+    ``(cells, K, N)`` with plane ``c`` holding bits ``[c*cell_bits, (c+1)*cell_bits)``
+    (least-significant plane first).  Reconstruction:
+    ``sum_c plane_c * 2**(c*cell_bits) == codes``.
+    """
+    codes = mag_codes.astype(jnp.int32)
+    planes = []
+    mask = (1 << spec.cell_bits) - 1
+    for c in range(spec.cells_per_weight):
+        planes.append((codes >> (c * spec.cell_bits)) & mask)
+    return jnp.stack(planes, axis=0)
+
+
+def cells_to_codes(planes: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Inverse of :func:`slice_to_cells`."""
+    c = planes.shape[0]
+    weights = (1 << (spec.cell_bits * jnp.arange(c, dtype=jnp.int32)))
+    return jnp.tensordot(weights, planes.astype(jnp.int32), axes=1)
+
+
+def input_bit_planes(x_codes: jax.Array, input_bits: int) -> jax.Array:
+    """Split unsigned activation codes into 1-bit planes, LSB first.
+
+    Input ``(..., K)`` integers in [0, 2^input_bits); output
+    ``(input_bits, ..., K)`` in {0, 1} — the bit-serial DAC stream (§IV-B).
+    """
+    x = x_codes.astype(jnp.int32)
+    planes = [(x >> b) & 1 for b in range(input_bits)]
+    return jnp.stack(planes, axis=0)
+
+
+def quantize_activations(x: jax.Array, input_bits: int = 16,
+                         scale: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Unsigned activation quantization (post-ReLU activations are >= 0).
+
+    FORMS streams 16-bit unsigned activations bit-serially.  Returns
+    ``(codes, scale)`` with codes in [0, 2^input_bits - 1].
+    """
+    levels = (1 << input_bits) - 1
+    if scale is None:
+        amax = jnp.max(jnp.abs(x))
+        scale = jnp.maximum(amax, 1e-12) / levels
+    codes = jnp.clip(jnp.round(jnp.maximum(x, 0.0) / scale), 0, levels)
+    return codes, scale

@@ -1,0 +1,304 @@
+"""Logical-axis sharding: rules -> PartitionSpec/NamedSharding, with fallback.
+
+Design
+------
+* Models name their parameters consistently (``blocks/attn/wq``,
+  ``blocks/moe/w1``, ...) and annotate *activations* through
+  :func:`constrain` with logical axes (``"batch"``, ``"model"``, ``None``).
+* A :class:`ParallelContext` (ambient, set by the launcher) maps logical axes
+  onto the physical mesh: ``batch -> ("pod", "data")`` (or ``("data",)`` on a
+  single pod), ``model -> ("model",)``.  Without a context every annotation is
+  a no-op, so the same model code runs in single-device tests.
+* Parameter specs come from :func:`param_spec` path+shape rules.  Every rule
+  is divisibility-checked against the mesh; a dim that does not divide falls
+  back to replication (never a compile error) — this is what lets e.g.
+  qwen2's 12 heads run on a 16-way model axis.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import re
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ParallelContext:
+    """Ambient mesh + logical-axis mapping."""
+
+    mesh: Mesh
+    batch_axes: Tuple[str, ...]          # physical axes backing logical "batch"
+    model_axes: Tuple[str, ...] = ("model",)
+
+    @classmethod
+    def for_mesh(cls, mesh: Mesh) -> "ParallelContext":
+        names = mesh.axis_names
+        batch = tuple(a for a in ("pod", "data") if a in names)
+        model = tuple(a for a in ("model",) if a in names)
+        return cls(mesh=mesh, batch_axes=batch, model_axes=model)
+
+    def _axes(self, logical: str) -> Tuple[str, ...]:
+        if logical == "batch":
+            return self.batch_axes
+        if logical == "model":
+            return self.model_axes
+        if logical == "tokens":   # MoE dispatch: tokens over every axis
+            return self.batch_axes + self.model_axes
+        raise ValueError(f"unknown logical axis {logical!r}")
+
+    def resolve(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        axes = self._axes(logical)
+        if not axes:
+            return None
+        return axes[0] if len(axes) == 1 else axes
+
+    def axis_size(self, logical: str) -> int:
+        size = 1
+        for a in self._axes(logical):
+            size *= self.mesh.shape[a]
+        return size
+
+
+_STATE = threading.local()
+
+
+def current_context() -> Optional[ParallelContext]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def parallel_context(ctx: Optional[ParallelContext]):
+    prev = current_context()
+    _STATE.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without a context.
+
+    Axes that do not divide the corresponding dim are dropped (replicated).
+    """
+    ctx = current_context()
+    if ctx is None:
+        return x
+    spec = _checked_spec(tuple(logical_axes), x.shape, ctx)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def grad_boundary(x: jax.Array, logical_axes: Tuple[Optional[str], ...]):
+    """Identity in the forward; in the backward, casts the cotangent to the
+    primal dtype and re-shards it.
+
+    Why: norms upcast the residual stream to f32, so the per-layer activation
+    cotangents (and their tensor-parallel all-reduces) run in f32 and
+    replicated — measured at 150 GiB/step on a 1.8B model.  Forcing the
+    cotangent to bf16 + the sequence-sharded layout at the sublayer boundary
+    halves the reduce bytes and lets GSPMD reduce-scatter instead of
+    all-reduce.
+    """
+    return x
+
+
+def _gb_fwd(x, logical_axes):
+    # residuals must be jax types: carry the primal dtype via an empty array
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _gb_bwd(logical_axes, res, cot):
+    cot = cot.astype(res.dtype)
+    ctx = current_context()
+    if ctx is not None:
+        spec = _checked_spec(logical_axes, cot.shape, ctx)
+        cot = jax.lax.with_sharding_constraint(
+            cot, NamedSharding(ctx.mesh, spec))
+    return (cot,)
+
+
+grad_boundary.defvjp(_gb_fwd, _gb_bwd)
+
+
+def _checked_spec(logical: Sequence[Optional[str]], shape: Sequence[int],
+                  ctx: ParallelContext) -> P:
+    entries = []
+    for dim, name in zip(shape, logical):
+        if name is None:
+            entries.append(None)
+            continue
+        size = ctx.axis_size(name)
+        if size <= 1 or dim % size != 0:
+            entries.append(None)   # fallback: replicate this dim
+        else:
+            entries.append(ctx.resolve(name))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules
+# ---------------------------------------------------------------------------
+
+# (path regex, logical spec per trailing dim). Scanned block params carry a
+# leading L axis handled by rank-padding below. Longest match wins.
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # embeddings / heads: shard the vocab dim
+    (r"(^|/)embed$", ("model", None)),
+    (r"(^|/)head$", (None, "model")),
+    (r"(^|/)pos_embed$", (None, None)),
+    # attention projections
+    (r"attn/wq(/q|/s)?$", (None, "model")),
+    (r"attn/wk(/q|/s)?$", (None, "model")),
+    (r"attn/wv(/q|/s)?$", (None, "model")),
+    (r"attn/wo(/q|/s)?$", ("model", None)),
+    (r"attn/b[qkv]$", ("model",)),
+    # MLA projections
+    (r"mla/q_down$", (None, None)),
+    (r"mla/q_up$", (None, "model")),
+    (r"mla/kv_down$", (None, None)),
+    (r"mla/kv_up$", (None, "model")),
+    (r"mla/wo$", ("model", None)),
+    # MLP
+    (r"mlp/gate(/q|/s)?$", (None, "model")),
+    (r"mlp/up(/q|/s)?$", (None, "model")),
+    (r"mlp/down(/q|/s)?$", ("model", None)),
+    # MoE: experts over the model axis
+    (r"moe/router$", (None, None)),
+    (r"moe/w_gate$", ("model", None, None)),
+    (r"moe/w_up$", ("model", None, None)),
+    (r"moe/w_down$", ("model", None, None)),
+    (r"moe/shared_gate$", (None, "model")),
+    (r"moe/shared_up$", (None, "model")),
+    (r"moe/shared_down$", ("model", None)),
+    # SSM (mamba2) projections: shard the inner dim
+    (r"ssm/in_proj$", (None, "model")),
+    (r"ssm/out_proj$", ("model", None)),
+    (r"ssm/(conv_w|conv_b|a_log|dt_bias|d_skip|norm)$", None),
+    # xLSTM projections
+    (r"(mlstm|slstm)/w(q|k|v|i|f|o|z)$", (None, "model")),
+    (r"(mlstm|slstm)/wout$", ("model", None)),
+    (r"(mlstm|slstm)/(b.|norm.*)$", None),
+    # norms, biases, scalars: replicate
+    (r"(norm|bias|b_gate|scale)", None),
+)
+
+
+def param_spec(path: str, shape: Tuple[int, ...], scanned: bool = False) -> P:
+    """PartitionSpec for a parameter by naming convention (replicate default)."""
+    logical: Optional[Tuple[Optional[str], ...]] = None
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path):
+            logical = spec
+            break
+    rank = len(shape)
+    offset = 1 if scanned else 0
+    entries: list = [None] * rank
+    if logical is not None:
+        # align logical spec to the trailing dims (skips scan/L axes)
+        for i, name in enumerate(reversed(logical)):
+            pos = rank - 1 - i
+            if pos >= offset and name is not None:
+                entries[pos] = name
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+FSDP_THRESHOLD = 1 << 22   # leaves above 4M elements get FSDP sharding
+
+
+def _fsdp_extend(entries: list, shape: Sequence[int], ctx: ParallelContext,
+                 threshold: int = FSDP_THRESHOLD) -> list:
+    """Additionally shard one unsharded dim over the data axes (ZeRO-3/FSDP).
+
+    Required at scale: a 671B parameter tree cannot live on a 16-way model
+    axis alone.  GSPMD turns this into per-layer all-gather (fwd) +
+    reduce-scatter (grads) around each scanned block — exactly FSDP.  Only
+    leaves above ``threshold`` elements participate, so norms/biases stay
+    replicated and cheap.
+    """
+    n_elems = 1
+    for d in shape:
+        n_elems *= int(d)
+    if n_elems < threshold:
+        return entries
+    fsdp_axes = ctx.batch_axes
+    size = 1
+    for a in fsdp_axes:
+        size *= ctx.mesh.shape[a]
+    if size <= 1:
+        return entries
+    # pick the largest unsharded, divisible dim
+    best, best_dim = -1, -1
+    for i, (d, e) in enumerate(zip(shape, entries)):
+        if e is None and d % size == 0 and d > best:
+            best, best_dim = d, i
+    if best_dim >= 0:
+        entries = list(entries)
+        entries[best_dim] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+    return entries
+
+
+def params_shardings(params: PyTree, ctx: ParallelContext,
+                     scanned_prefixes: Tuple[str, ...] = ("blocks", "enc_blocks",
+                                                          "dec_blocks", "groups"),
+                     fsdp: bool = True) -> PyTree:
+    """NamedSharding pytree for a parameter pytree (divisibility-checked).
+
+    Model-axis specs come from the naming rules; ``fsdp=True`` additionally
+    shards large leaves over the data axes (see :func:`_fsdp_extend`).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        scanned = any(seg in pstr.split("/") for seg in scanned_prefixes)
+        spec = param_spec(pstr, tuple(leaf.shape), scanned=scanned)
+        logical = tuple(spec) + (None,) * (len(leaf.shape) - len(tuple(spec)))
+        entries = []
+        for dim, name in zip(leaf.shape, logical):
+            if name is None:
+                entries.append(None)
+            else:
+                size = ctx.axis_size(name)
+                entries.append(ctx.resolve(name)
+                               if size > 1 and dim % size == 0 else None)
+        if fsdp:
+            entries = _fsdp_extend(entries, leaf.shape, ctx)
+        while entries and entries[-1] is None:
+            entries.pop()
+        out.append(NamedSharding(ctx.mesh, P(*entries)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_sharding(ctx: ParallelContext, rank: int = 2,
+                   extra: Tuple[Optional[str], ...] = ()) -> NamedSharding:
+    """Sharding for (batch, ...) arrays: batch over ('pod','data')."""
+    spec = [ctx.resolve("batch")] + [None] * (rank - 1)
+    for i, name in enumerate(extra):
+        spec[1 + i] = ctx.resolve(name)
+    return NamedSharding(ctx.mesh, P(*spec))
+
+
+def replicated(ctx: ParallelContext) -> NamedSharding:
+    return NamedSharding(ctx.mesh, P())
+
+
+def reshard_state(state: PyTree, shardings: PyTree) -> PyTree:
+    """Elastic re-sharding: move a pytree onto new shardings (new mesh ok)."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), state, shardings)

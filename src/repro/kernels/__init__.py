@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for FORMS compute hot-spots (validated in interpret mode)."""

@@ -1,0 +1,75 @@
+"""Pallas kernel: fused fragment-polarization projection (ADMM Z-update hot path).
+
+proj_P(V) per fragment: elect a sign (paper's sum rule or the exact-projection
+energy rule), then zero out disagreeing entries.  One pass over the weight
+tile in VMEM: a (m)-axis reduction, a select, a masked write — pure VPU work,
+fused so the ADMM Z-update reads each weight exactly once from HBM.
+
+Grid: (K/bk, N/bn) with bk a multiple of m.  Outputs the projected tile and
+the (bk/m, bn) sign tile (stored to drive the sign indicator and the frozen
+sign phase between refreshes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BK = 512
+DEFAULT_BN = 256
+
+
+def _kernel(v_ref, out_ref, signs_ref, *, m: int, rule: str):
+    v = v_ref[...].astype(jnp.float32)            # (bk, bn)
+    bk, bn = v.shape
+    vf = v.reshape(bk // m, m, bn)
+    if rule == "sum":
+        s = jnp.where(vf.sum(axis=1) >= 0, 1.0, -1.0)
+    else:  # "energy": exact Euclidean projection sign election
+        pos_e = jnp.sum(jnp.square(jnp.maximum(vf, 0.0)), axis=1)
+        neg_e = jnp.sum(jnp.square(jnp.minimum(vf, 0.0)), axis=1)
+        s = jnp.where(pos_e >= neg_e, 1.0, -1.0)
+    keep = vf * s[:, None, :] >= 0.0
+    out = jnp.where(keep, vf, 0.0).reshape(bk, bn)
+    out_ref[...] = out.astype(out_ref.dtype)
+    signs_ref[...] = s.astype(signs_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "rule", "bk", "bn", "interpret"))
+def admm_polarize(
+    v: jax.Array,            # (K, N), K a multiple of m
+    *,
+    m: int = 8,
+    rule: str = "sum",
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (projected (K, N), signs (K/m, N))."""
+    assert rule in ("sum", "energy"), rule
+    K, N = v.shape
+    assert K % m == 0, f"K ({K}) must be a multiple of m ({m}); use ops wrapper"
+    bk = max(m, (min(bk, K) // m) * m)
+    bn = min(bn, N)
+    assert K % bk == 0 and N % bn == 0, (
+        f"(K={K}, N={N}) must tile by (bk={bk}, bn={bn}); use ops wrapper")
+
+    grid = (K // bk, N // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, m=m, rule=rule),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bk, bn), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bk // m, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, N), v.dtype),
+            jax.ShapeDtypeStruct((K // m, N), v.dtype),
+        ],
+        interpret=interpret,
+    )(v)

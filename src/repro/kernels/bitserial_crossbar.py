@@ -1,0 +1,130 @@
+"""Pallas kernel: faithful FORMS bit-serial crossbar arithmetic simulator.
+
+This kernel reproduces the accelerator's *arithmetic pipeline* exactly
+(paper §IV-A/B, Figs 5, 7, 12):
+
+  for each input bit-plane b (LSB..MSB, the bit-serial DAC stream):
+    for each 2-bit weight cell plane c:
+      per-fragment analog column sums  S[b, c, frag]  (m rows active)
+      ADC: clip S at (2^adc_bits - 1)
+      digital: apply fragment sign, shift by c*cell_bits, accumulate
+    shift by b, accumulate
+
+plus the zero-skipping observables: the per-(row, fragment) EIC tensor (max
+effective bits over the fragment's m inputs), from which total conversion
+cycles with/without skipping are derived.
+
+Unlike ``polarized_matmul`` this kernel is a *fidelity instrument*, not a fast
+path — it exists to measure ADC-saturation error vs ADC resolution and to
+produce exact EIC statistics on real activations.  It still uses proper
+BlockSpec tiling so it lowers for TPU (fragment loops become batched
+dot_generals on (m)-thin operands), and is validated in interpret mode against
+``ref.ref_bitserial_crossbar``.
+
+Grid: (M/bm, N/bn).  K is kept whole in VMEM (the crossbar holds all rows).
+EIC is written once per row-block (at n-block 0) since it is N-independent.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BM = 32
+DEFAULT_BN = 128
+
+
+def _kernel(x_ref, cells_ref, signs_ref, acc_ref, eic_ref, *,
+            m: int, input_bits: int, cell_bits: int, adc_max: Optional[int]):
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.int32)              # (bm, K)
+    cells = cells_ref[...].astype(jnp.float32)    # (C, K, bn)
+    signs = signs_ref[...].astype(jnp.float32)    # (F, bn)
+    bm, k = x.shape
+    c, _, bn = cells.shape
+    f = k // m
+
+    xf = x.reshape(bm, f, m)
+    wf = cells.reshape(c, f, m, bn)
+
+    # NB: the per-plane dots are exact in f32 (values <= F*m*3 << 2^24), but
+    # the shift-add accumulation across input bits reaches ~2^29 — int32 only.
+    acc = jnp.zeros((bm, bn), jnp.int32)
+    eic = jnp.zeros((bm, f), jnp.int32)
+    for b in range(input_bits):                   # static unroll: DAC stream
+        xb = ((xf >> b) & 1).astype(jnp.float32)  # (bm, f, m)
+        live = jnp.any((xf >> b) != 0, axis=2)    # (bm, f) fragment still live
+        eic = jnp.where(live, b + 1, eic)
+        plane = jnp.zeros((bm, bn), jnp.int32)
+        for ci in range(c):                       # static unroll: cell planes
+            # per-fragment analog partial sums: batched thin matmul over f
+            part = jax.lax.dot_general(
+                xb.transpose(1, 0, 2), wf[ci],    # (f, bm, m) x (f, m, bn)
+                dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32)   # (f, bm, bn)
+            if adc_max is not None:
+                part = jnp.minimum(part, float(adc_max))   # ADC saturation
+            signed = part * signs[:, None, :]               # sign indicator
+            plane = plane + (signed.sum(axis=0).astype(jnp.int32)
+                             << (ci * cell_bits))
+        acc = acc + (plane << b)
+    acc_ref[...] = acc
+
+    @pl.when(j == 0)
+    def _write_eic():
+        eic_ref[...] = eic
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "input_bits", "cell_bits", "adc_bits",
+                     "bm", "bn", "interpret"))
+def bitserial_crossbar(
+    x_codes: jax.Array,      # (M, K) unsigned activation codes
+    cell_planes: jax.Array,  # (C, K, N) cell planes of magnitude codes
+    signs: jax.Array,        # (K/m, N) fragment signs
+    *,
+    m: int = 8,
+    input_bits: int = 16,
+    cell_bits: int = 2,
+    adc_bits: Optional[int] = None,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (acc (M, N) int32, eic (M, K/m) int32)."""
+    M, K = x_codes.shape
+    C, K2, N = cell_planes.shape
+    assert K == K2 and K % m == 0
+    F = K // m
+    assert signs.shape == (F, N)
+    bm = min(bm, M)
+    bn = min(bn, N)
+    assert M % bm == 0 and N % bn == 0, (
+        f"(M={M}, N={N}) must tile by (bm={bm}, bn={bn}); use ops wrapper")
+    adc_max = None if adc_bits is None else (1 << adc_bits) - 1
+
+    grid = (M // bm, N // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, m=m, input_bits=input_bits,
+                          cell_bits=cell_bits, adc_max=adc_max),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((C, K, bn), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((F, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, F), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), jnp.int32),
+            jax.ShapeDtypeStruct((M, F), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x_codes, cell_planes, signs)

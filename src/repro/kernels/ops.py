@@ -1,0 +1,124 @@
+"""Public kernel entry points: padding, backend dispatch, dequant plumbing.
+
+Each op pads inputs to kernel tile multiples, calls the Pallas kernel
+(``interpret=True`` automatically off-TPU so the same code path is exercised
+everywhere), and unpads.  ``prefer_ref=True`` (default on CPU for large
+shapes) routes to the jnp oracle, which XLA compiles to the same math — the
+kernels remain the TPU target, the oracle the portable fast path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.admm_polarize import admm_polarize as _admm_polarize_kernel
+from repro.kernels.bitserial_crossbar import bitserial_crossbar as _bitserial_kernel
+from repro.kernels.polarized_matmul import polarized_matmul as _polarized_kernel
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# polarized matmul
+# ---------------------------------------------------------------------------
+
+def polarized_matmul(
+    x: jax.Array, mags: jax.Array, signs: jax.Array, scale: jax.Array,
+    *, m: int = 8, prefer_ref: Optional[bool] = None,
+    bm: int = 128, bn: int = 128, bk: int = 512,
+) -> jax.Array:
+    """y[M,N] = x[M,K] @ (signs*mags)[K,N] * scale[1,N]."""
+    M, K = x.shape
+    _, N = mags.shape
+    if prefer_ref is None:
+        prefer_ref = not on_tpu()
+    if prefer_ref:
+        return ref.ref_polarized_matmul_fast(x, mags, signs, scale, m)
+
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    bk_ = max(m, (bk_ // m) * m)
+    xp = _pad_to(x, 0, bm_)
+    xp = _pad_to(xp, 1, bk_)
+    magsp = _pad_to(_pad_to(mags, 0, bk_), 1, bn_)
+    signsp = _pad_to(_pad_to(signs, 0, bk_ // m), 1, bn_)
+    scalep = _pad_to(scale.reshape(1, -1), 1, bn_)
+    out = _polarized_kernel(xp, magsp, signsp, scalep, m=m,
+                            bm=bm_, bn=bn_, bk=bk_, interpret=not on_tpu())
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# bit-serial crossbar simulation
+# ---------------------------------------------------------------------------
+
+def bitserial_crossbar(
+    x_codes: jax.Array, cell_planes: jax.Array, signs: jax.Array,
+    *, m: int = 8, input_bits: int = 16, cell_bits: int = 2,
+    adc_bits: Optional[int] = None, prefer_ref: Optional[bool] = None,
+    bm: int = 32, bn: int = 128,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (acc[M,N] int32, eic[M,F] int32)."""
+    M, K = x_codes.shape
+    C, _, N = cell_planes.shape
+    F = K // m
+    if prefer_ref is None:
+        prefer_ref = not on_tpu()
+    if prefer_ref:
+        acc, _cycles = ref.ref_bitserial_crossbar(
+            x_codes, cell_planes, signs, m, input_bits, cell_bits,
+            adc_bits=adc_bits, zero_skip=True)
+        from repro.core.zeroskip import fragment_eic
+        eic = fragment_eic(x_codes, m, input_bits)
+        return acc, eic
+
+    bm_, bn_ = min(bm, M), min(bn, N)
+    xp = _pad_to(x_codes, 0, bm_)
+    cellsp = _pad_to(cell_planes, 2, bn_)
+    signsp = _pad_to(signs, 1, bn_)
+    acc, eic = _bitserial_kernel(
+        xp, cellsp, signsp, m=m, input_bits=input_bits, cell_bits=cell_bits,
+        adc_bits=adc_bits, bm=bm_, bn=bn_, interpret=not on_tpu())
+    return acc[:M, :N], eic[:M]
+
+
+# ---------------------------------------------------------------------------
+# polarization projection
+# ---------------------------------------------------------------------------
+
+def admm_polarize(
+    v: jax.Array, *, m: int = 8, rule: str = "sum",
+    prefer_ref: Optional[bool] = None, bk: int = 512, bn: int = 256,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (projected[K,N], signs[F,N]); K is padded internally."""
+    K, N = v.shape
+    F = -(-K // m)
+    if prefer_ref is None:
+        prefer_ref = not on_tpu()
+    vp = _pad_to(v, 0, m)
+    if prefer_ref:
+        out, signs = ref.ref_admm_polarize(vp, m, rule)
+        return out[:K], signs
+
+    Kp = vp.shape[0]
+    bk_ = max(m, (min(bk, Kp) // m) * m)
+    bn_ = min(bn, N)
+    vpp = _pad_to(_pad_to(vp, 0, bk_), 1, bn_)
+    out, signs = _admm_polarize_kernel(vpp, m=m, rule=rule, bk=bk_, bn=bn_,
+                                       interpret=not on_tpu())
+    return out[:K, :N], signs[:F, :N]

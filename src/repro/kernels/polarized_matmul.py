@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: polarized-magnitude matmul (the FORMS MVM on the MXU).
+
+Computes ``y = x @ (expand(signs) * mags) * scale`` where
+
+* ``mags``  (K, N) are unsigned magnitude codes (the crossbar cells),
+* ``signs`` (K/m, N) are per-fragment signs (the 1R sign indicator),
+* ``scale`` (1, N) is the dequantization scale.
+
+TPU adaptation (DESIGN.md §2): the accelerator applies signs *after* the
+per-fragment analog partial sums; because the sign is constant within a
+fragment, folding it into the magnitudes *before* one big MXU matmul is
+bit-identical and keeps the MXU fully dense.  The fold happens in VMEM on the
+VPU (a broadcast-multiply over the (bk, bn) weight tile) so HBM only ever
+stores magnitudes + the 1/(8m)-sized sign plane — the paper's storage win —
+while the MXU sees an ordinary dense tile.
+
+Grid: (M/bm, N/bn, K/bk), K innermost for accumulation.  Blocks live in VMEM;
+accumulation in float32; the dequant scale is applied on the final K step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+
+
+def _kernel(x_ref, mags_ref, signs_ref, scale_ref, out_ref, acc_ref, *, m: int,
+            n_k_blocks: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)                    # (bm, bk)
+    mags = mags_ref[...].astype(jnp.float32)              # (bk, bn)
+    signs = signs_ref[...].astype(jnp.float32)            # (bk//m, bn)
+    bk, bn = mags.shape
+    # fold the fragment signs into the magnitudes (VPU broadcast-multiply)
+    sgrid = jnp.broadcast_to(signs[:, None, :], (bk // m, m, bn)).reshape(bk, bn)
+    w = mags * sgrid
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k_blocks - 1)
+    def _finish():
+        scale = scale_ref[...].astype(jnp.float32)        # (1, bn)
+        out_ref[...] = (acc_ref[...] * scale).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "bm", "bn", "bk", "interpret", "out_dtype"))
+def polarized_matmul(
+    x: jax.Array,            # (M, K)
+    mags: jax.Array,         # (K, N) unsigned magnitude codes
+    signs: jax.Array,        # (K/m, N) fragment signs in {+1, -1}
+    scale: jax.Array,        # (1, N) dequant scale
+    *,
+    m: int = 8,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    M, K = x.shape
+    K2, N = mags.shape
+    assert K == K2, (x.shape, mags.shape)
+    assert K % m == 0, f"K ({K}) must be a multiple of fragment size m ({m})"
+    assert signs.shape == (K // m, N), (signs.shape, (K // m, N))
+
+    bm = min(bm, M)
+    bn = min(bn, N)
+    bk = min(bk, K)
+    # bk must be a multiple of m so sign blocks tile cleanly
+    bk = max(m, (bk // m) * m)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        f"shapes (M={M}, N={N}, K={K}) must tile by (bm={bm}, bn={bn}, bk={bk}); "
+        "use ops.polarized_matmul for automatic padding")
+
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, m=m, n_k_blocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk // m, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, mags, signs, scale)

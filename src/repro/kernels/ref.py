@@ -1,0 +1,143 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each ``ref_*`` function is the mathematically transparent implementation the
+kernels are allclose-tested against (tests/test_kernels_*.py sweep shapes and
+dtypes).  They are also the CPU fast path used by ``ops.py`` when Pallas
+interpret mode would be too slow for a workload.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# 1. Polarized magnitude matmul
+# ---------------------------------------------------------------------------
+
+def ref_polarized_matmul(
+    x: jax.Array,            # (M, K) activations (float)
+    mags: jax.Array,         # (K, N) magnitude codes, >= 0 (uint8/int32/float)
+    signs: jax.Array,        # (F, N) fragment signs in {+1, -1}, F = K/m
+    scale: jax.Array,        # (1, N) or scalar dequant scale
+    m: int,
+) -> jax.Array:
+    """y = x @ (sign_expanded * mags) * scale.
+
+    Mirrors the accelerator semantics: per-fragment unsigned partial sums,
+    signed digital accumulation (sign indicator), dequantization.  Because the
+    sign is constant within a fragment the two orders are identical; the
+    oracle computes the *fragment-wise* order to pin the semantics.
+    """
+    mk, n = mags.shape
+    f = signs.shape[0]
+    assert f * m == mk, (f, m, mk)
+    xf = x.reshape(x.shape[0], f, m)
+    wf = mags.astype(jnp.float32).reshape(f, m, n)
+    # per-fragment partial sums (what the ADC digitizes), then signed combine
+    partial = jnp.einsum("bfm,fmn->bfn", xf.astype(jnp.float32), wf)
+    y = jnp.einsum("bfn,fn->bn", partial, signs.astype(jnp.float32))
+    return y * scale
+
+
+def ref_polarized_matmul_fast(
+    x: jax.Array, mags: jax.Array, signs: jax.Array, scale: jax.Array, m: int,
+) -> jax.Array:
+    """Sign-folded form: one dense matmul (identical math, the CPU fast path;
+    the kernel's fold-in-VMEM strategy expressed in plain jnp)."""
+    k, n = mags.shape
+    sign_grid = jnp.repeat(signs.astype(jnp.float32), m, axis=0)[:k]
+    w = mags.astype(jnp.float32) * sign_grid
+    return (x.astype(jnp.float32) @ w) * scale
+
+
+# ---------------------------------------------------------------------------
+# 2. Bit-serial crossbar simulation
+# ---------------------------------------------------------------------------
+
+def ref_bitserial_crossbar(
+    x_codes: jax.Array,       # (M, K) unsigned activation codes < 2**input_bits
+    cell_planes: jax.Array,   # (C, K, N) 2-bit cell planes of magnitude codes
+    signs: jax.Array,         # (F, N) fragment signs
+    m: int,
+    input_bits: int,
+    cell_bits: int,
+    adc_bits: Optional[int] = None,
+    zero_skip: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Faithful FORMS crossbar arithmetic; returns (acc, cycles).
+
+    acc: (M, N) int32 — exact signed integer dot products *if* the ADC has
+    enough bits; otherwise partial sums clip at the ADC ceiling (the fidelity
+    experiment).  cycles: scalar int32 — total conversion events consumed,
+    honoring zero-skipping (fragments stop at their EIC).
+    """
+    mm, k = x_codes.shape
+    c, k2, n = cell_planes.shape
+    assert k == k2
+    f = signs.shape[0]
+    assert f * m == k
+    x = x_codes.astype(jnp.int32)
+    acc = jnp.zeros((mm, n), jnp.int32)
+    adc_max = None if adc_bits is None else (1 << adc_bits) - 1
+
+    cycles = jnp.zeros((), jnp.int32)
+    for b in range(input_bits):          # bit-serial input planes, LSB first
+        xb = (x >> b) & 1                # (M, K) in {0,1}
+        xbf = xb.reshape(mm, f, m)
+        # zero-skip bookkeeping: a fragment consumes a cycle for plane b iff
+        # any of its inputs has an effective bit at >= b (max effective bits)
+        live = jnp.any((x.reshape(mm, f, m) >> b) != 0, axis=2)  # (M, F)
+        if zero_skip:
+            cycles = cycles + jnp.sum(live.astype(jnp.int32))
+        else:
+            cycles = cycles + mm * f
+            live = jnp.ones_like(live)
+        plane_acc = jnp.zeros((mm, n), jnp.int32)
+        for ci in range(c):              # 2-bit weight cell planes
+            wci = cell_planes[ci].astype(jnp.int32).reshape(f, m, n)
+            part = jnp.einsum("bfm,fmn->bfn", xbf, wci)  # analog column sum
+            if adc_max is not None:
+                part = jnp.minimum(part, adc_max)        # ADC saturation
+            # digital shift-add over cell significance + fragment sign
+            signed = part * signs.astype(jnp.int32)[None, :, :]
+            # skipped fragments contribute nothing (their planes are all zero
+            # anyway when live is computed exactly; mask for adc-clip parity)
+            signed = signed * live[:, :, None].astype(jnp.int32)
+            plane_acc = plane_acc + (signed.sum(axis=1) << (ci * cell_bits))
+        acc = acc + (plane_acc << b)     # input-bit significance shift-add
+    return acc, cycles
+
+
+def ref_exact_int_matmul(x_codes: jax.Array, mag_codes: jax.Array,
+                         signs: jax.Array, m: int) -> jax.Array:
+    """Ground truth the bit-serial sim must match at sufficient ADC bits."""
+    k, n = mag_codes.shape
+    f = signs.shape[0]
+    w = mag_codes.astype(jnp.int32) * jnp.repeat(signs.astype(jnp.int32), m, axis=0)[:k]
+    return x_codes.astype(jnp.int32) @ w
+
+
+# ---------------------------------------------------------------------------
+# 3. Fused polarization projection
+# ---------------------------------------------------------------------------
+
+def ref_admm_polarize(v: jax.Array, m: int, rule: str = "sum"
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Projection onto P: returns (projected (K,N), signs (F,N))."""
+    k, n = v.shape
+    assert k % m == 0, "oracle expects pre-padded K"
+    vf = v.reshape(k // m, m, n)
+    if rule == "sum":
+        s = jnp.where(vf.sum(axis=1) >= 0, 1.0, -1.0)
+    elif rule == "energy":
+        pos_e = jnp.sum(jnp.square(jnp.maximum(vf, 0.0)), axis=1)
+        neg_e = jnp.sum(jnp.square(jnp.minimum(vf, 0.0)), axis=1)
+        s = jnp.where(pos_e >= neg_e, 1.0, -1.0)
+    else:
+        raise ValueError(rule)
+    s = s.astype(v.dtype)
+    keep = vf * s[:, None, :] >= 0
+    return jnp.where(keep, vf, 0).reshape(k, n), s

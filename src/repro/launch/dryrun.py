@@ -1,0 +1,433 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST run before any jax import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds ShapeDtypeStruct stand-ins for params / optimizer / caches / batch
+     (jax.eval_shape — zero allocation at any model size);
+  2. derives NamedShardings from the logical rules (distributed/sharding.py);
+  3. ``jax.jit(step, in_shardings, out_shardings).lower(...).compile()``
+     against the production mesh — 16x16 single-pod and 2x16x16 multi-pod;
+  4. records memory_analysis / cost_analysis / per-kind collective bytes and
+     the three roofline terms into a JSON artifact under artifacts/dryrun/.
+
+Any sharding mismatch, compile-time OOM, or unsupported collective is a bug
+in the framework and fails the cell.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import hlo as hlo_mod
+from repro.analysis import roofline as roof
+from repro.configs import ARCH_NAMES, SHAPES, get_config, shapes_for
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import Model, build
+from repro.training import train_loop
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "whisper":
+        specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    elif cfg.num_image_tokens:
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+        specs["tokens"] = jax.ShapeDtypeStruct(
+            (b, s - cfg.num_image_tokens), jnp.int32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return specs
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Public helper: the model-input stand-ins for one cell."""
+    return batch_specs(get_config(arch), SHAPES[shape_name])
+
+
+def _spec_tree(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _cast_tree(tree: PyTree, dtype) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+# ---------------------------------------------------------------------------
+# sharding assignment
+# ---------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def cache_shardings(cache: PyTree, cfg: ModelConfig,
+                    ctx: shd.ParallelContext) -> PyTree:
+    """Decode-cache shardings: batch dim over ('pod','data'), heads over model."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in flat:
+        p = _path_str(path)
+        shape = leaf.shape
+        logical: Tuple[Optional[str], ...]
+        if "enc_out" in p:
+            logical = ("batch", None, "model")
+        elif p.split("/")[-1].startswith("layer") or ("layer" in p and len(shape) <= 4):
+            # xlstm recurrent states: leading dim is batch
+            logical = ("batch",) + (None,) * (len(shape) - 1)
+        elif len(shape) == 5:       # (L, B, S, KV, hd) or (L, B, H, state, hd)
+            logical = (None, "batch", None, "model", None)
+            if "ssm" in p:
+                logical = (None, "batch", "model", None, None)
+            elif shape[3] * ctx.mesh.shape.get("model", 1) > 0 and \
+                    shape[3] % max(ctx.axis_size("model"), 1) != 0:
+                # KV heads don't divide the model axis (GQA with few heads):
+                # shard the SEQUENCE dim instead — context-parallel decode.
+                # Without this a 48Lx128Bx32k GQA cache is 26 GB/device.
+                logical = (None, "batch", "model", None, None)
+        elif len(shape) == 4:       # (L,B,S,r) MLA latents / (L,B,K-1,d_in) conv
+            last = "model" if ("conv" in p or "c_kv" in p) else None
+            logical = (None, "batch", None, last)
+        elif len(shape) == 3:
+            logical = (None, "batch", None)
+        elif len(shape) == 2:
+            logical = ("batch", None)
+        else:
+            logical = tuple(None for _ in shape)
+        out.append(NamedSharding(ctx.mesh, shd._checked_spec(logical, shape, ctx)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(specs: Dict[str, jax.ShapeDtypeStruct],
+                    ctx: shd.ParallelContext) -> Dict[str, NamedSharding]:
+    out = {}
+    for k, v in specs.items():
+        logical = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(ctx.mesh, shd._checked_spec(logical, v.shape, ctx))
+    return out
+
+
+def _replicated_like(tree: PyTree, ctx: shd.ParallelContext) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(ctx.mesh, P()), tree)
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+def build_train_cell(model: Model, shape: ShapeConfig, ctx: shd.ParallelContext,
+                     tcfg: TrainConfig):
+    """Returns (fn, arg_specs, in_shardings, out_shardings, donate)."""
+    step = train_loop.make_train_step(model, tcfg)
+    key = jax.random.PRNGKey(0)
+    state_specs = jax.eval_shape(
+        lambda k: train_loop.init_train_state(model, tcfg, k)[0], key)
+    b_specs = batch_specs(model.config, shape)
+
+    psh = lambda tree: (None if tree is None
+                        else shd.params_shardings(tree, ctx))
+    params_sh = psh(state_specs.params)
+    from repro.training import optimizer as opt_mod
+    opt_sh = opt_mod.AdamWState(
+        step=NamedSharding(ctx.mesh, P()),
+        mu=psh(state_specs.opt.mu), nu=psh(state_specs.opt.nu),
+        mu_scale=psh(state_specs.opt.mu_scale),
+        nu_scale=psh(state_specs.opt.nu_scale))
+    admm_sh = None
+    if state_specs.admm is not None:
+        # Z/U mirror the params; per-layer masks/signs replicate
+        admm_sh = {
+            path: dataclasses.replace(
+                jax.tree_util.tree_map(
+                    lambda _: NamedSharding(ctx.mesh, P()), st),
+            ) for path, st in state_specs.admm.items()}
+    state_sh = train_loop.TrainState(
+        params=params_sh, opt=opt_sh, step=NamedSharding(ctx.mesh, P()),
+        admm=admm_sh,
+        grad_err=psh(state_specs.grad_err),
+        rng=NamedSharding(ctx.mesh, P()))
+    b_sh = batch_shardings(b_specs, ctx)
+    metrics_sh = {"loss": NamedSharding(ctx.mesh, P()),
+                  "grad_norm": NamedSharding(ctx.mesh, P()),
+                  "lr": NamedSharding(ctx.mesh, P())}
+    return (step, (state_specs, b_specs), (state_sh, b_sh),
+            (state_sh, metrics_sh), (0,))
+
+
+def _serving_fsdp(cfg: ModelConfig, ctx: shd.ParallelContext) -> bool:
+    """Serving param-sharding policy: replicate over data when weights fit.
+
+    FSDP'd weights cost an all-gather per layer per token at decode; when the
+    bf16 weights fit HBM under model-axis sharding alone (< ~12 GB/chip),
+    serving replicates them across the data axes (standard inference TP).
+    """
+    tp = max(ctx.axis_size("model"), 1)
+    return (cfg.param_count() * 2 / tp) > 12e9
+
+
+def build_prefill_cell(model: Model, shape: ShapeConfig,
+                       ctx: shd.ParallelContext):
+    cfg = model.config
+
+    def prefill(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits
+
+    key = jax.random.PRNGKey(0)
+    params_specs = jax.eval_shape(
+        lambda k: _cast_tree(model.init(k), jnp.bfloat16), key)
+    b_specs = batch_specs(cfg, shape)
+    params_sh = shd.params_shardings(params_specs, ctx,
+                                     fsdp=_serving_fsdp(cfg, ctx))
+    b_sh = batch_shardings(b_specs, ctx)
+    s_out = shape.seq_len if not cfg.num_image_tokens else shape.seq_len
+    logits_spec = jax.ShapeDtypeStruct(
+        (shape.global_batch, s_out, cfg.vocab_size), jnp.dtype(cfg.dtype))
+    out_sh = NamedSharding(ctx.mesh, shd._checked_spec(
+        ("batch", None, "model"), logits_spec.shape, ctx))
+    return (prefill, (params_specs, b_specs), (params_sh, b_sh), out_sh, ())
+
+
+def build_decode_cell(model: Model, shape: ShapeConfig,
+                      ctx: shd.ParallelContext, int8_weights: bool = False):
+    cfg = model.config
+
+    def serve_step(params, tokens, cache, pos):
+        return model.decode_step(params, tokens, cache, pos)
+
+    key = jax.random.PRNGKey(0)
+    if int8_weights:
+        from repro.serving.quant_weights import quantize_tree
+        params_specs = jax.eval_shape(
+            lambda k: quantize_tree(_cast_tree(model.init(k),
+                                               jnp.bfloat16))[0], key)
+    else:
+        params_specs = jax.eval_shape(
+            lambda k: _cast_tree(model.init(k), jnp.bfloat16), key)
+    cache_specs = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    tok_spec = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    params_sh = shd.params_shardings(params_specs, ctx,
+                                     fsdp=_serving_fsdp(cfg, ctx))
+    cache_sh = cache_shardings(cache_specs, cfg, ctx)
+    tok_sh = NamedSharding(ctx.mesh, shd._checked_spec(
+        ("batch", None), tok_spec.shape, ctx))
+    pos_sh = NamedSharding(ctx.mesh, P())
+    logits_spec = jax.ShapeDtypeStruct(
+        (shape.global_batch, 1, cfg.vocab_size), jnp.dtype(cfg.dtype))
+    logits_sh = NamedSharding(ctx.mesh, shd._checked_spec(
+        ("batch", None, "model"), logits_spec.shape, ctx))
+    return (serve_step,
+            (params_specs, tok_spec, cache_specs, pos_spec),
+            (params_sh, tok_sh, cache_sh, pos_sh),
+            (logits_sh, cache_sh), (2,))
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             admm: bool = False, microbatches: int = 1,
+             save_hlo: bool = False, moment_dtype: Optional[str] = None,
+             grad_compression: str = "none", tag_suffix: str = "",
+             moe_int8: bool = False, capacity_factor: Optional[float] = None,
+             int8_weights: bool = False) -> Dict:
+    cfg = get_config(arch)
+    if moe_int8:
+        cfg = dataclasses.replace(cfg, moe_dispatch_int8=True)
+    if capacity_factor is not None:
+        cfg = dataclasses.replace(cfg, capacity_factor=capacity_factor)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    ctx = shd.ParallelContext.for_mesh(mesh)
+    model = build(cfg)
+    chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    if moment_dtype is None:
+        # int8 (quantized-Adam) moments for the 671B-class state; f32 else
+        moment_dtype = "int8" if cfg.param_count() > 5e10 else "float32"
+
+    t0 = time.time()
+    with shd.parallel_context(ctx), mesh:
+        if shape.kind == "train":
+            tcfg = TrainConfig(admm_enabled=admm, microbatches=microbatches,
+                               remat=True, moment_dtype=moment_dtype,
+                               grad_compression=grad_compression)
+            fn, arg_specs, in_sh, out_sh, donate = build_train_cell(
+                model, shape, ctx, tcfg)
+        elif shape.kind == "prefill":
+            fn, arg_specs, in_sh, out_sh, donate = build_prefill_cell(
+                model, shape, ctx)
+        else:
+            fn, arg_specs, in_sh, out_sh, donate = build_decode_cell(
+                model, shape, ctx, int8_weights=int8_weights)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*arg_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    # raw cost_analysis counts while bodies once (verified); keep it for
+    # reference but use the loop-aware HLO analyzer for the roofline terms.
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_size": getattr(mem, "argument_size_in_bytes", None),
+            "output_size": getattr(mem, "output_size_in_bytes", None),
+            "temp_size": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size": getattr(mem, "generated_code_size_in_bytes", None),
+            "alias_size": getattr(mem, "alias_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_info = {"error": str(e)}
+
+    hlo_text = compiled.as_text()
+    module_cost = hlo_mod.analyze_module(hlo_text)
+    coll = module_cost.collectives
+    # memory-traffic estimate: two upper-bound estimators with opposite bias —
+    # (a) cost_analysis bytes x the loop-trip flops correction (overcounts
+    #     outside-loop tensors by the scale factor),
+    # (b) the analyzer's op-level operand+result bytes (loop-exact, but
+    #     overcounts elementwise chains the TPU backend would fuse).
+    # Take the min: both bound true HBM traffic from above.
+    loop_scale = (module_cost.flops / raw_flops) if raw_flops > 0 else 1.0
+    scaled_raw = raw_bytes * max(loop_scale, 1.0)
+    mem_bytes = min(scaled_raw, module_cost.bytes) if module_cost.bytes > 0 \
+        else scaled_raw
+
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf = roof.model_flops(shape.kind, cfg.active_param_count(), tokens)
+    report = roof.RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_kind, chips=chips,
+        kind=shape.kind, hlo_flops_per_device=module_cost.flops,
+        hlo_bytes_per_device=mem_bytes,
+        collective_bytes_per_device=float(coll.total_bytes),
+        model_flops_global=mf, tokens_per_step=tokens,
+        peak_memory_bytes=(None if mem_info.get("temp_size") is None else
+                           float(mem_info["temp_size"] or 0)
+                           + float(mem_info.get("argument_size") or 0)))
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "chips": chips,
+        "kind": shape.kind, "status": "ok",
+        "lower_s": t_lower, "compile_s": t_compile,
+        "cost_analysis": {"flops": module_cost.flops,
+                          "bytes_accessed": mem_bytes,
+                          "oplevel_bytes": module_cost.bytes,
+                          "raw_flops_unscaled": raw_flops,
+                          "raw_bytes_unscaled": raw_bytes},
+        "memory_analysis": mem_info,
+        "collectives": {"bytes_by_kind": coll.bytes_by_kind,
+                        "count_by_kind": coll.count_by_kind,
+                        "total_bytes": coll.total_bytes},
+        "roofline": report.to_dict(),
+        "admm": admm, "microbatches": microbatches,
+        "moment_dtype": moment_dtype, "grad_compression": grad_compression,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    tag = (f"{arch}__{shape_name}__{mesh_kind}" + ("__admm" if admm else "")
+           + tag_suffix)
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(result, f, indent=2)
+    if save_hlo:
+        with open(os.path.join(out_dir, tag + ".hlo.txt"), "w") as f:
+            f.write(hlo_text)
+    print(roof.summarize(report))
+    print(f"  memory_analysis: {mem_info}")
+    print(f"  collectives: {coll.bytes_by_kind}")
+    print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+    return result
+
+
+def cells_for(arch: str):
+    return [s.name for s in shapes_for(get_config(arch))]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=ARCH_NAMES + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="run every applicable cell")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--admm", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--moe-int8", action="store_true")
+    ap.add_argument("--int8-weights", action="store_true",
+                    help="serve with int8 block weights (FORMS quantization)")
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if (args.all or args.arch is None) else [args.arch]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.list:
+        for a in archs:
+            print(a, cells_for(a))
+        return
+
+    failures = []
+    for arch in archs:
+        shapes = cells_for(arch) if args.shape is None else [args.shape]
+        for shape in shapes:
+            if shape not in cells_for(arch):
+                print(f"SKIP {arch} x {shape} (inapplicable; see DESIGN.md §4)")
+                continue
+            for mesh_kind in meshes:
+                tag = f"{arch} x {shape} x {mesh_kind}"
+                print(f"=== {tag} ===", flush=True)
+                try:
+                    run_cell(arch, shape, mesh_kind, args.out, admm=args.admm,
+                             microbatches=args.microbatches,
+                             save_hlo=args.save_hlo, moe_int8=args.moe_int8,
+                             capacity_factor=args.capacity_factor,
+                             int8_weights=args.int8_weights)
+                except Exception:
+                    failures.append(tag)
+                    traceback.print_exc()
+    if failures:
+        print("FAILED CELLS:", failures)
+        raise SystemExit(1)
+    print("ALL CELLS OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required because only launch/dryrun.py runs with
+the 512-device host-platform flag.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.configs.base import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assigned production meshes: 16x16 single-pod, 2x16x16 multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(cfg: MeshConfig):
+    """Arbitrary (pods, data, model) mesh — the elastic-scaling entry point."""
+    if cfg.pods > 1:
+        return jax.make_mesh((cfg.pods, cfg.data, cfg.model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((cfg.data, cfg.model), ("data", "model"))
+
+
+def single_device_mesh():
+    """Trivial mesh for tests/examples on one device."""
+    return jax.make_mesh((1, 1), ("data", "model"))

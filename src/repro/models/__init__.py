@@ -1,0 +1,1 @@
+"""Model zoo: dense/MoE transformers, whisper, xLSTM, Zamba2, paper CNNs."""

@@ -1,0 +1,118 @@
+"""CNNs for the paper's own benchmarks (LeNet-5 / VGG-16 / ResNet-18 class).
+
+These are the models the FORMS pipeline compresses (Tables I/II): conv weights
+are (kh, kw, cin, cout) — exactly the crossbar 2-D view after the polarization
+policy reshape (core/fragments.conv_to_matrix).  Kept deliberately simple
+(NHWC, jax.lax.conv), trained on synthetic data in the benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_cnns import CNNConfig
+
+Params = Dict[str, Any]
+
+
+def _conv(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def init(cfg: CNNConfig, key) -> Params:
+    params: Params = {}
+    keys = jax.random.split(key, len(cfg.arch) + 1)
+    c = cfg.in_channels
+    size = cfg.image_size
+    flat = None
+    for i, spec in enumerate(cfg.arch):
+        kind = spec[0]
+        if kind == "conv":
+            _, cout, ksz, stride = spec
+            fan_in = ksz * ksz * c
+            params[f"conv{i}"] = jax.random.normal(
+                keys[i], (ksz, ksz, c, cout)) * jnp.sqrt(2.0 / fan_in)
+            c = cout
+            size = size // stride
+        elif kind == "res":
+            _, cout, stride = spec
+            k1, k2, k3 = jax.random.split(keys[i], 3)
+            params[f"res{i}_conv1"] = jax.random.normal(
+                k1, (3, 3, c, cout)) * jnp.sqrt(2.0 / (9 * c))
+            params[f"res{i}_conv2"] = jax.random.normal(
+                k2, (3, 3, cout, cout)) * jnp.sqrt(2.0 / (9 * cout))
+            if stride != 1 or c != cout:
+                params[f"res{i}_proj"] = jax.random.normal(
+                    k3, (1, 1, c, cout)) * jnp.sqrt(2.0 / c)
+            c = cout
+            size = size // stride
+        elif kind == "pool":
+            size = size // 2
+        elif kind == "fc":
+            _, out = spec
+            fan_in = c if flat is not None else size * size * c
+            params[f"fc{i}"] = jax.random.normal(
+                keys[i], (fan_in, out)) * jnp.sqrt(2.0 / fan_in)
+            params[f"fc{i}_b"] = jnp.zeros((out,))
+            c, flat = out, True
+        else:
+            raise ValueError(spec)
+    return params
+
+
+def forward(cfg: CNNConfig, params: Params, x: jax.Array,
+            collect_activations: bool = False
+            ) -> Tuple[jax.Array, List[Tuple[str, jax.Array]]]:
+    """x: (B, H, W, C) -> logits (B, classes).
+
+    ``collect_activations`` returns the post-ReLU inputs of every crossbar-
+    mapped layer — the activation population the EIC/zero-skip analysis needs.
+    """
+    acts: List[Tuple[str, jax.Array]] = []
+    flat = False
+    for i, spec in enumerate(cfg.arch):
+        kind = spec[0]
+        if kind == "conv":
+            if collect_activations:
+                acts.append((f"conv{i}", x))
+            x = jax.nn.relu(_conv(x, params[f"conv{i}"], spec[3]))
+        elif kind == "res":
+            _, cout, stride = spec
+            if collect_activations:
+                acts.append((f"res{i}", x))
+            h = jax.nn.relu(_conv(x, params[f"res{i}_conv1"], stride))
+            h = _conv(h, params[f"res{i}_conv2"], 1)
+            sc = x if f"res{i}_proj" not in params else _conv(
+                x, params[f"res{i}_proj"], stride)
+            x = jax.nn.relu(h + sc)
+        elif kind == "pool":
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        elif kind == "fc":
+            if not flat:
+                x = x.reshape(x.shape[0], -1)
+                flat = True
+            if collect_activations:
+                acts.append((f"fc{i}", x))
+            x = x @ params[f"fc{i}"] + params[f"fc{i}_b"]
+            if i != len(cfg.arch) - 1:
+                x = jax.nn.relu(x)
+    return x, acts
+
+
+def crossbar_weight_shapes(cfg: CNNConfig, params: Params) -> List[Tuple[int, int]]:
+    """2-D (K, N) crossbar-view shapes of every weight (for crossbar counting)."""
+    shapes = []
+    for name, w in params.items():
+        if name.endswith("_b"):
+            continue
+        if w.ndim == 4:
+            kh, kw, cin, cout = w.shape
+            shapes.append((kh * kw * cin, cout))
+        elif w.ndim == 2:
+            shapes.append(tuple(w.shape))
+    return shapes

@@ -1,0 +1,350 @@
+"""Shared model building blocks (pure-pytree, no framework dependency).
+
+Conventions
+-----------
+* Params are nested dicts of float32 arrays; compute casts to the config
+  dtype (bf16 by default) — mixed precision in the MaxText style.
+* Parameter names follow the sharding rules in distributed/sharding.py
+  (``attn/wq``, ``mlp/gate``, ...).
+* Activation sharding is annotated via :func:`sharding.constrain` with
+  logical axes; a no-op in single-device tests.
+* Attention is chunked over query blocks (lax.scan) so the score tensor peak
+  is ``B*H*q_chunk*S`` — required for the 32k-prefill cells to fit HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain, grad_boundary
+
+Params = Dict[str, jax.Array]
+
+DEFAULT_Q_CHUNK = 1024
+
+
+def wload(p: Params, name: str, dtype) -> jax.Array:
+    """Weight read with transparent int8 dequantization.
+
+    Serving-quantized trees store {"q": int8, "s": f32} per weight
+    (serving/quant_weights.py); the dequant multiply fuses into the consuming
+    matmul on TPU, so HBM reads stay int8.
+    """
+    v = p[name]
+    if isinstance(v, dict) and "q" in v:
+        return v["q"].astype(dtype) * v["s"].astype(dtype)
+    return v.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None) -> jax.Array:
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale)
+
+
+def embed_init(key, vocab: int, d: int) -> jax.Array:
+    return jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> jax.Array:
+    return jnp.ones((d,), jnp.float32)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * w).astype(x.dtype)
+
+
+def layernorm_init(d: int) -> Dict[str, jax.Array]:
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(x: jax.Array, p: Dict[str, jax.Array], eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd) or (..., S, hd); positions: (S,) int."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (S, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    if x.ndim == 4:   # (B, S, H, hd)
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:             # (B, S, hd)
+        cos, sin = cos[None, :, :], sin[None, :, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    out = jnp.stack([xr1, xr2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attn_init(key, d: int, n_heads: int, n_kv: int, hd: int,
+              bias: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, n_heads * hd),
+        "wk": dense_init(ks[1], d, n_kv * hd),
+        "wv": dense_init(ks[2], d, n_kv * hd),
+        "wo": dense_init(ks[3], n_heads * hd, d),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((n_kv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((n_kv * hd,), jnp.float32)
+    return p
+
+
+def gqa_scores_softmax_out(qr, k, v, qpos, kpos, window, scale, causal=True):
+    """One chunk of grouped-query attention.
+
+    qr: (B, qc, KV, G, hd); k/v: (B, S, KV, hd); positions int32 (qc,), (S,).
+    Returns (B, qc, KV, G, hd).
+
+    K/V are expanded to full query heads before the einsums so the score
+    tensor shards cleanly on the (divisible) head dim — the grouped (KV, G)
+    form breaks GSPMD head sharding whenever KV doesn't divide the model axis
+    and forces full f32 score all-gathers (measured: 8 GiB x 96 per step on
+    danube).  Operands stay bf16 with f32 accumulation.
+    """
+    b, qc, kv, g, hd = qr.shape
+    s = k.shape[1]
+    hdv = v.shape[-1]
+    q_full = constrain(qr.reshape(b, qc, kv * g, hd), "batch", None, "model",
+                       None)
+    k_full = constrain(jnp.repeat(k, g, axis=2), "batch", None, "model", None)
+    v_full = constrain(jnp.repeat(v, g, axis=2), "batch", None, "model", None)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q_full, k_full,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask = jnp.logical_and(mask, qpos[:, None] - kpos[None, :] < window)
+        scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs.astype(v.dtype), v_full,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype).reshape(b, qc, kv, g, hdv)
+
+
+def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     window: Optional[int] = None,
+                     q_chunk: int = DEFAULT_Q_CHUNK,
+                     positions: Optional[jax.Array] = None,
+                     causal: bool = True) -> jax.Array:
+    """Chunked (optionally causal) GQA for train/prefill.
+
+    q: (B, S, H, hd); k/v: (B, S, KV, hd).  Scans over ceil(S/q_chunk) query
+    chunks with full keys resident — peak scores are (B, H, q_chunk, S).
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    hdv = v.shape[-1]   # may differ from hd (MLA: qk dims != v dims)
+    g = h // kv
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    qr = q.reshape(b, s, kv, g, hd)
+    qc = min(q_chunk, s)
+    if s % qc != 0:
+        qc = s  # fall back to single chunk for odd smoke-test lengths
+    nc = s // qc
+    if nc == 1:
+        out = gqa_scores_softmax_out(qr, k, v, positions, positions, window,
+                                     scale, causal)
+        return out.reshape(b, s, h, hdv)
+
+    qs = qr.reshape(b, nc, qc, kv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    ps = positions.reshape(nc, qc)
+
+    def chunk_fn(_, inp):
+        qc_blk, qpos = inp
+        out = gqa_scores_softmax_out(qc_blk, k, v, qpos, positions, window,
+                                     scale, causal)
+        return None, out
+
+    _, outs = jax.lax.scan(chunk_fn, None, (qs, ps))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, kv, g, hdv)
+    return out.reshape(b, s, h, hdv)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, window: Optional[int] = None) -> jax.Array:
+    """Single-token GQA against a cache.
+
+    q: (B, 1, H, hd); caches: (B, Smax, KV, hd); pos: scalar int32 (the index
+    of the current token).  Attends to cache positions <= pos.
+    """
+    b, _, h, hd = q.shape
+    smax, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qr = q.reshape(b, kv, g, hd)
+    # keep the cache operands in their storage dtype and accumulate in f32:
+    # .astype(f32) on the cache materializes a full-cache f32 copy inside the
+    # decode loop (2x HBM traffic + 2x transient memory)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qr.astype(k_cache.dtype), k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(smax, dtype=jnp.int32)
+    mask = kpos <= pos
+    if window is not None:
+        mask = jnp.logical_and(mask, kpos > pos - window)
+    scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(v_cache.dtype)
+
+
+def attention_block(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
+                    hd: int, rope_theta: float,
+                    positions: jax.Array,
+                    window: Optional[int] = None,
+                    q_chunk: int = DEFAULT_Q_CHUNK,
+                    cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    cache_pos: Optional[jax.Array] = None,
+                    use_rope: bool = True, causal: bool = True,
+                    dtype=jnp.bfloat16):
+    """Full attention sub-layer.  Returns (out, new_cache_kv_or_None).
+
+    Train/prefill: ``cache=None`` -> causal self-attention over x.
+    Decode: ``cache=(k, v)`` of shape (B, Smax, KV, hd), x is (B, 1, d),
+    ``cache_pos`` scalar — writes the new K/V at cache_pos and attends.
+    """
+    b, s, d = x.shape
+    # Megatron-SP: gather the seq-sharded residual before the projections;
+    # grad_boundary keeps the backward cotangent bf16 + seq-sharded
+    x = grad_boundary(x, ("batch", "model", None))
+    x = constrain(x, "batch", None, None)
+    w = lambda n: wload(p, n, dtype)
+    q = x @ w("wq")
+    k = x @ w("wk")
+    v = x @ w("wv")
+    if "bq" in p:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    q = q.reshape(b, s, n_heads, hd)
+    k = k.reshape(b, s, n_kv, hd)
+    v = v.reshape(b, s, n_kv, hd)
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, "model", None)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+
+    if cache is None:
+        out = causal_attention(q, k, v, window=window, q_chunk=q_chunk,
+                               positions=positions, causal=causal)
+        new_cache = None
+    else:
+        # write the token into a local (transient) view for attention, but
+        # return only the new-token K/V — the caller commits them with ONE
+        # token-column DUS after the layer scan, keeping the persistent cache
+        # update in-place instead of restacking full caches (scan ys).
+        k_cache, v_cache = cache
+        k_t, v_t = k.astype(k_cache.dtype), v.astype(v_cache.dtype)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k_t, cache_pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v_t, cache_pos, axis=1)
+        out = decode_attention(q, k_cache, v_cache, cache_pos, window=window)
+        new_cache = (k_t, v_t)
+    out = out.reshape(b, s, n_heads * hd)
+    out = out @ w("wo")
+    return constrain(out, "batch", "model", None), new_cache
+
+
+def cross_attention_block(p: Params, x: jax.Array, enc: jax.Array, *,
+                          n_heads: int, hd: int, dtype=jnp.bfloat16):
+    """Encoder-decoder cross attention (whisper decoder). MHA, no mask."""
+    b, s, d = x.shape
+    se = enc.shape[1]
+    w = lambda n: p[n].astype(dtype)
+    q = (x @ w("wq")).reshape(b, s, n_heads, hd)
+    k = (enc @ w("wk")).reshape(b, se, n_heads, hd)
+    v = (enc @ w("wv")).reshape(b, se, n_heads, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v.astype(jnp.float32)).astype(dtype)
+    return (out.reshape(b, s, n_heads * hd) @ w("wo"))
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d: int, f: int) -> Params:
+    ks = jax.random.split(key, 3)
+    return {"gate": dense_init(ks[0], d, f), "up": dense_init(ks[1], d, f),
+            "down": dense_init(ks[2], f, d)}
+
+
+def swiglu(p: Params, x: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    x = grad_boundary(x, ("batch", "model", None))
+    x = constrain(x, "batch", None, None)   # Megatron-SP gather
+    w = lambda n: wload(p, n, dtype)
+    h = jax.nn.silu(x @ w("gate")) * (x @ w("up"))
+    h = constrain(h, "batch", None, "model")
+    return constrain(h @ w("down"), "batch", "model", None)
+
+
+def gelu_mlp_init(key, d: int, f: int) -> Params:
+    ks = jax.random.split(key, 2)
+    return {"up": dense_init(ks[0], d, f), "down": dense_init(ks[1], f, d),
+            "b_up": jnp.zeros((f,), jnp.float32), "b_down": jnp.zeros((d,), jnp.float32)}
+
+
+def gelu_mlp(p: Params, x: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    x = grad_boundary(x, ("batch", "model", None))
+    x = constrain(x, "batch", None, None)   # Megatron-SP gather
+    w = lambda n: wload(p, n, dtype)
+    h = jax.nn.gelu(x @ w("up") + w("b_up"))
+    h = constrain(h, "batch", None, "model")
+    return constrain(h @ w("down") + w("b_down"), "batch", "model", None)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_lookup(embed: jax.Array, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    out = jnp.take(embed.astype(dtype), tokens, axis=0)
+    # sequence-parallel residual stream (Megatron-SP): the seq dim shards over
+    # the model axis between blocks; GSPMD inserts AG/RS at attention/MLP edges
+    return constrain(out, "batch", "model", None)
+
+
+def lm_logits(x: jax.Array, head: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    logits = x @ head.astype(dtype)
+    return constrain(logits, "batch", None, "model")

@@ -1,0 +1,367 @@
+"""MoE transformer family: olmoe (64e top-8) and deepseek-v3 (MLA + 1 shared +
+256 routed top-8 + MTP).
+
+Expert parallelism: experts are sharded over the ``model`` mesh axis; tokens
+are resharded over *every* mesh axis ("tokens" logical axis) for dispatch.
+Dispatch is capacity-based (position-in-expert via a one-hot cumsum, scatter
+into an ``(E*C, d)`` buffer, batched expert matmuls, gather-combine) — the
+standard dropping MoE of TPU stacks; overflow tokens are dropped at
+``capacity_factor`` (aux loss keeps the router balanced).
+
+MLA (deepseek): train/prefill use the expanded form; decode uses the
+*absorbed* form (q absorbed through kv_up so attention runs in the latent
+space) with a cache of compressed latents ``c_kv`` + shared rope key — the
+memory-efficient decode that makes 128-batch 32k-decode fit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# capacity-based MoE FFN
+# ---------------------------------------------------------------------------
+
+def moe_ffn_init(key, cfg: ModelConfig) -> Params:
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 7)
+    scale = 1.0 / jnp.sqrt(d)
+    p = {
+        "router": L.dense_init(ks[0], d, e, scale=0.02),
+        "w_gate": jax.random.normal(ks[1], (e, d, f)) * scale,
+        "w_up": jax.random.normal(ks[2], (e, d, f)) * scale,
+        "w_down": jax.random.normal(ks[3], (e, f, d)) * (1.0 / jnp.sqrt(f)),
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.moe_d_ff * cfg.num_shared_experts
+        p["shared_gate"] = L.dense_init(ks[4], d, fs)
+        p["shared_up"] = L.dense_init(ks[5], d, fs)
+        p["shared_down"] = L.dense_init(ks[6], fs, d)
+    return p
+
+
+def _expert_ffn(p: Params, bufe: jax.Array, dtype) -> jax.Array:
+    """Batched per-expert SwiGLU on the dispatched buffer (E, C, d)."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", bufe, p["w_gate"].astype(dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", bufe, p["w_up"].astype(dtype))
+    h = constrain(h, "model", "batch", None)
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dtype))
+    return constrain(out, "model", "batch", None)
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig, dtype
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    Two dispatch paths: the shard_map all_to_all expert-parallel path (large
+    token counts on a mesh — production) and a small pjit scatter path
+    (single-device tests, decode-sized token counts).
+    """
+    from repro.distributed import moe_dispatch
+    from repro.distributed.sharding import current_context
+
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+
+    xt = x.reshape(t, d)
+    xt = constrain(xt, "tokens", None)
+    logits = (xt @ p["router"].astype(dtype)).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                            # (T, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (switch-style)
+    density = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    prob_mean = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(density * prob_mean)
+
+    ctx = current_context()
+    if moe_dispatch.can_use(ctx, t, e):
+        n_dev = ctx.axis_size("tokens")
+        c2 = max(1, int(cfg.capacity_factor * (t // n_dev) * k / e))
+        bufe, slots = moe_dispatch.dispatch(xt.astype(dtype), idx, e, c2, ctx,
+                                            quantized=cfg.moe_dispatch_int8)
+        out_buf = _expert_ffn(p, bufe, dtype)
+        y = moe_dispatch.combine(out_buf, idx, slots, gates, e, c2, ctx,
+                                 quantized=cfg.moe_dispatch_int8)
+    else:
+        cap = max(4, int(cfg.capacity_factor * t * k / e))
+        # sort-based positions: O(T*K) memory
+        e_flat = idx.reshape(t * k)
+        order = jnp.argsort(e_flat)
+        sorted_e = e_flat[order]
+        seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))
+        pos_sorted = jnp.arange(t * k) - seg_start[sorted_e]
+        pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+        valid = pos < cap
+        dest = jnp.where(valid, e_flat * cap + pos, 0)
+        x_rep = jnp.repeat(xt, k, axis=0).astype(dtype)
+        upd = jnp.where(valid[:, None], x_rep, jnp.zeros_like(x_rep))
+        bufe = jnp.zeros((e * cap, d), dtype).at[dest].add(upd).reshape(e, cap, d)
+        out_buf = _expert_ffn(p, bufe, dtype).reshape(e * cap, d)
+        y_tk = jnp.take(out_buf, dest, axis=0)
+        y_tk = jnp.where(valid[:, None], y_tk, jnp.zeros_like(y_tk))
+        y_tk = y_tk * gates.reshape(t * k, 1).astype(dtype)
+        y = y_tk.reshape(t, k, d).sum(axis=1)
+
+    if cfg.num_shared_experts:
+        hs = jax.nn.silu(xt.astype(dtype) @ p["shared_gate"].astype(dtype))
+        hs = hs * (xt.astype(dtype) @ p["shared_up"].astype(dtype))
+        y = y + hs @ p["shared_down"].astype(dtype)
+
+    y = constrain(y, "tokens", None)
+    return constrain(y.reshape(b, s, d), "batch", "model", None), aux
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (deepseek-v3)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig) -> Params:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "q_down": L.dense_init(ks[0], d, m.q_lora_rank),
+        "q_up": L.dense_init(ks[1], m.q_lora_rank, h * qk),
+        "kv_down": L.dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim),
+        "kv_up": L.dense_init(ks[3], m.kv_lora_rank,
+                              h * (m.qk_nope_head_dim + m.v_head_dim)),
+        "wo": L.dense_init(ks[4], h * m.v_head_dim, d),
+        "q_norm": L.rmsnorm_init(m.q_lora_rank),
+        "kv_norm": L.rmsnorm_init(m.kv_lora_rank),
+    }
+
+
+def _mla_qkv_full(p: Params, x, cfg: ModelConfig, positions, dtype):
+    """Expanded-form q, k, v for full-sequence attention."""
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qk_rope, qk_nope, dv = m.qk_rope_head_dim, m.qk_nope_head_dim, m.v_head_dim
+
+    x = constrain(x, "batch", None, None)   # Megatron-SP gather
+    cq = L.rmsnorm(x @ p["q_down"].astype(dtype), p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["q_up"].astype(dtype)).reshape(b, s, h, qk_nope + qk_rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ p["kv_down"].astype(dtype)
+    c_kv = L.rmsnorm(kv[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = L.apply_rope(kv[..., m.kv_lora_rank:], positions, cfg.rope_theta)
+
+    kvu = (c_kv @ p["kv_up"].astype(dtype)).reshape(b, s, h, qk_nope + dv)
+    k_nope, v = kvu[..., :qk_nope], kvu[..., qk_nope:]
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, qk_rope))],
+        axis=-1)
+    return q_full, k_full, v, c_kv, k_rope
+
+
+def mla_full(p: Params, x, cfg: ModelConfig, positions, dtype,
+             q_chunk: int) -> jax.Array:
+    q, k, v, _, _ = _mla_qkv_full(p, x, cfg, positions, dtype)
+    out = L.causal_attention(q, k, v, q_chunk=q_chunk, positions=positions)
+    b, s = x.shape[:2]
+    return constrain(out.reshape(b, s, -1) @ p["wo"].astype(dtype),
+                     "batch", "model", None)
+
+
+def mla_decode(p: Params, x, cfg: ModelConfig, cache: Dict[str, jax.Array],
+               pos, dtype) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Absorbed-form decode: attention in the compressed latent space.
+
+    cache: {"c_kv": (B, Smax, r), "k_rope": (B, Smax, qk_rope)}.
+    """
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape  # s == 1
+    h = cfg.num_heads
+    qk_rope, qk_nope, dv, r = (m.qk_rope_head_dim, m.qk_nope_head_dim,
+                               m.v_head_dim, m.kv_lora_rank)
+    positions = pos[None].astype(jnp.int32)
+
+    cq = L.rmsnorm(x @ p["q_down"].astype(dtype), p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["q_up"].astype(dtype)).reshape(b, h, qk_nope + qk_rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    # apply_rope wants (B, S, H, hd): lift the single decode position to S=1
+    q_rope = L.apply_rope(q_rope[:, None], positions, cfg.rope_theta)[:, 0]
+    kv = x @ p["kv_down"].astype(dtype)
+    c_new = L.rmsnorm(kv[..., :r], p["kv_norm"], cfg.norm_eps)
+    k_rope_new = L.apply_rope(kv[..., r:], positions, cfg.rope_theta)
+
+    # transient updated views for attention; only the new-token latents are
+    # returned (the caller commits one token column after the layer scan)
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    r_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), pos, axis=1)
+
+    # absorb: q_lat[b,h,r] = q_nope @ W_uk(h)^T
+    w_uk = p["kv_up"].astype(dtype).reshape(r, h, qk_nope + dv)[..., :qk_nope]
+    w_uv = p["kv_up"].astype(dtype).reshape(r, h, qk_nope + dv)[..., qk_nope:]
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)
+    scale = 1.0 / jnp.sqrt(qk_nope + qk_rope).astype(jnp.float32)
+    scores = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(c_cache.dtype), c_cache,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhp,bsp->bhs", q_rope.astype(r_cache.dtype),
+                           r_cache, preferred_element_type=jnp.float32)) * scale
+    kpos = jnp.arange(c_cache.shape[1], dtype=jnp.int32)
+    scores = jnp.where(kpos[None, None, :] <= pos, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", probs.astype(c_cache.dtype), c_cache,
+                       preferred_element_type=jnp.float32).astype(dtype)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv)
+    out = o.reshape(b, 1, h * dv) @ p["wo"].astype(dtype)
+    return out, {"c_kv": c_new.astype(cache["c_kv"].dtype),
+                 "k_rope": k_rope_new.astype(cache["k_rope"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# blocks / model
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {
+        "norm1": L.rmsnorm_init(cfg.d_model),
+        "norm2": L.rmsnorm_init(cfg.d_model),
+        "moe": moe_ffn_init(k2, cfg),
+    }
+    if cfg.mla is not None:
+        p["mla"] = mla_init(k1, cfg)
+    else:
+        p["attn"] = L.attn_init(k1, cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, cfg.hd())
+    return p
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    ke, kb, kh, km = jax.random.split(key, 4)
+    block_keys = jax.random.split(kb, cfg.num_layers)
+    blocks = jax.vmap(lambda k: _block_init(k, cfg))(block_keys)
+    params: Params = {
+        "embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model),
+        "blocks": blocks,
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+        "head": L.dense_init(kh, cfg.d_model, cfg.vocab_size, scale=0.02),
+    }
+    if cfg.mtp:
+        params["mtp"] = {"proj": L.dense_init(km, 2 * cfg.d_model, cfg.d_model),
+                         "block": _block_init(km, cfg),
+                         "norm": L.rmsnorm_init(cfg.d_model)}
+    return params
+
+
+def _block_apply(cfg: ModelConfig, bp: Params, x, positions, cache, pos,
+                 dtype, q_chunk: int):
+    xa = L.rmsnorm(x, bp["norm1"], cfg.norm_eps)
+    new_cache = None
+    if cfg.mla is not None:
+        if cache is None:
+            h = mla_full(bp["mla"], xa, cfg, positions, dtype, q_chunk)
+        else:
+            h, new_cache = mla_decode(bp["mla"], xa, cfg, cache, pos, dtype)
+    else:
+        kv_cache = (cache["k"], cache["v"]) if cache is not None else None
+        h, new_cache = L.attention_block(
+            bp["attn"], xa, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            hd=cfg.hd(), rope_theta=cfg.rope_theta, positions=positions,
+            q_chunk=q_chunk, cache=kv_cache, cache_pos=pos, dtype=dtype)
+        if new_cache is not None:
+            new_cache = {"k": new_cache[0], "v": new_cache[1]}
+    x = x + h
+    y, aux = moe_ffn(bp["moe"], L.rmsnorm(x, bp["norm2"], cfg.norm_eps), cfg, dtype)
+    return x + y, aux, new_cache
+
+
+def head_matrix(cfg: ModelConfig, params: Params) -> jax.Array:
+    return params["head"]
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array], *,
+            remat: bool = False, q_chunk: int = L.DEFAULT_Q_CHUNK,
+            return_hidden: bool = False
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_lookup(params["embed"], batch["tokens"], dtype)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(x, bp):
+        out, aux, _ = _block_apply(cfg, bp, x, positions, None, None, dtype, q_chunk)
+        return out, aux
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, auxs = jax.lax.scan(body, x, params["blocks"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    aux: Dict[str, jax.Array] = {"moe_aux_loss": jnp.mean(auxs)}
+
+    if cfg.mtp and "mtp" in params:
+        # multi-token prediction: combine h_t with emb(token_{t+1}) -> predict t+2
+        emb_next = jnp.roll(L.embed_lookup(params["embed"], batch["tokens"], dtype),
+                            -1, axis=1)
+        hm = jnp.concatenate([x, emb_next], axis=-1) @ params["mtp"]["proj"].astype(dtype)
+        hm, mtp_aux, _ = _block_apply(cfg, params["mtp"]["block"], hm, positions,
+                                      None, None, dtype, q_chunk)
+        hm = L.rmsnorm(hm, params["mtp"]["norm"], cfg.norm_eps)
+        aux["moe_aux_loss"] = aux["moe_aux_loss"] + mtp_aux / max(cfg.num_layers, 1)
+        if return_hidden:
+            aux["mtp_hidden"] = hm
+        else:
+            aux["mtp_logits"] = L.lm_logits(hm, params["head"], dtype)
+    if return_hidden:
+        return x, aux
+    logits = L.lm_logits(x, params["head"], dtype)
+    return logits, aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "c_kv": jnp.zeros((cfg.num_layers, batch, max_len, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((cfg.num_layers, batch, max_len, m.qk_rope_head_dim), dtype),
+        }
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.hd())
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: Dict[str, jax.Array], pos: jax.Array
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_lookup(params["embed"], tokens, dtype)
+    positions = pos[None].astype(jnp.int32)
+
+    def body(x, xs):
+        bp, layer_cache = xs
+        out, _aux, new_cache = _block_apply(cfg, bp, x, positions, layer_cache,
+                                            pos, dtype, L.DEFAULT_Q_CHUNK)
+        return out, new_cache
+
+    x, tok_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(x, params["head"], dtype)
+    # commit the new-token column into every cache leaf with one DUS each
+    zero = jnp.zeros((), jnp.int32)
+    new_cache = {}
+    for name, full in cache.items():
+        tok = tok_cache[name]
+        starts = (zero, zero, pos) + (zero,) * (full.ndim - 3)
+        new_cache[name] = jax.lax.dynamic_update_slice(full, tok, starts)
+    return logits, new_cache

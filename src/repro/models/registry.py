@@ -1,0 +1,77 @@
+"""Arch registry: config -> a uniform Model interface for every family.
+
+The Model bundle is what the training loop, serving engine and dry-run all
+consume; it hides family differences (enc-dec inputs, recurrent caches, MoE
+aux losses) behind five functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import moe, transformer, whisper, xlstm, zamba
+
+Params = Any
+Batch = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    config: ModelConfig
+    init: Callable[[jax.Array], Params]
+    forward: Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]
+    init_cache: Callable[..., Any]
+    decode_step: Callable[..., Tuple[jax.Array, Any]]
+    head_matrix: Callable[[Params], jax.Array]
+    input_fields: Tuple[str, ...]   # batch keys consumed by forward
+
+    def make_inputs(self, rng, batch: int, seq: int) -> Batch:
+        """Concrete (random) inputs for smoke tests."""
+        cfg = self.config
+        out: Batch = {}
+        n_img = cfg.num_image_tokens
+        for f in self.input_fields:
+            if f == "tokens":
+                s = seq - n_img if (n_img and "patch_embeds" in self.input_fields) else seq
+                out["tokens"] = jax.random.randint(rng, (batch, s), 0,
+                                                   cfg.vocab_size, jnp.int32)
+            elif f == "patch_embeds":
+                out["patch_embeds"] = jax.random.normal(
+                    rng, (batch, n_img, cfg.d_model), jnp.float32)
+            elif f == "frames":
+                out["frames"] = jax.random.normal(
+                    rng, (batch, seq, cfg.d_model), jnp.float32)
+        return out
+
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": moe,
+    "whisper": whisper,
+    "xlstm": xlstm,
+    "zamba": zamba,
+}
+
+
+def build(cfg: ModelConfig) -> Model:
+    mod = _FAMILIES[cfg.family]
+    fields: Tuple[str, ...] = ("tokens",)
+    if cfg.family == "whisper":
+        fields = ("frames", "tokens")
+    elif cfg.num_image_tokens:
+        fields = ("tokens", "patch_embeds")
+    return Model(
+        config=cfg,
+        init=lambda key: mod.init(cfg, key),
+        forward=lambda params, batch, **kw: mod.forward(cfg, params, batch, **kw),
+        init_cache=lambda batch, max_len, dtype=jnp.bfloat16: mod.init_cache(
+            cfg, batch, max_len, dtype),
+        decode_step=lambda params, tokens, cache, pos: mod.decode_step(
+            cfg, params, tokens, cache, pos),
+        head_matrix=lambda params: mod.head_matrix(cfg, params),
+        input_fields=fields,
+    )

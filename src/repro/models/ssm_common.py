@@ -1,0 +1,119 @@
+"""Chunked linear recurrence: the shared engine of mLSTM (xLSTM) and Mamba2.
+
+Both are instances of the gated outer-product recurrence
+
+    S_t = a_t * S_{t-1} + g_t * k_t v_t^T          S: (dk, dv) per head
+    y_t = q_t^T S_t
+
+with 0 < a_t <= 1 (log_a <= 0).  The chunkwise-parallel algorithm (the SSD /
+GLA trick) processes W timesteps per scan step:
+
+  within-chunk:  y[t] += sum_{s<=t} exp(cum[t]-cum[s]) g[s] (q_t.k_s) v_s
+  cross-chunk:   y[t] += exp(cum[t]) q_t^T S_prev
+  state update:  S' = exp(cum[W-1]) S_prev
+                   + sum_s exp(cum[W-1]-cum[s]) g[s] k_s v_s^T
+
+All decay ratios are products of a in (0,1], so everything is numerically
+safe without max-stabilizers.  Wall-clock is O(S/W) sequential steps with
+MXU-dense intra-chunk matmuls — the TPU-native formulation of both papers'
+recurrences (sequential per-step scans would idle the MXU).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_CHUNK = 128
+
+
+def chunked_linear_recurrence(
+    q: jax.Array,        # (B, S, H, dk)
+    k: jax.Array,        # (B, S, H, dk)
+    v: jax.Array,        # (B, S, H, dv)
+    log_a: jax.Array,    # (B, S, H) decay logs, <= 0
+    gate: jax.Array,     # (B, S, H) input gates, >= 0
+    init_state: Optional[jax.Array] = None,   # (B, H, dk, dv)
+    chunk: int = DEFAULT_CHUNK,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B, S, H, dv), final_state (B, H, dk, dv))."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    w = min(chunk, s)
+    if s % w != 0:
+        w = s
+    nc = s // w
+    if init_state is None:
+        init_state = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def split(x):  # (B, S, ...) -> (nc, B, W, ...)
+        return x.reshape(b, nc, w, *x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs = split(q), split(k), split(v)
+    las, gs = split(log_a), split(gate)
+
+    def chunk_fn(state, inp):
+        qc, kc, vc, lac, gc = inp            # (B, W, H, *)
+        qc32 = qc.astype(jnp.float32)
+        kc32 = kc.astype(jnp.float32)
+        vc32 = vc.astype(jnp.float32)
+        cum = jnp.cumsum(lac.astype(jnp.float32), axis=1)      # (B, W, H)
+        total = cum[:, -1]                                      # (B, H)
+        # cross-chunk contribution
+        y_inter = jnp.einsum("bwhk,bhkv->bwhv", qc32 * jnp.exp(cum)[..., None],
+                             state)
+        # within-chunk: decay-weighted causal attention.  Mask BEFORE exp:
+        # for s > t the ratio is positive and exp overflows, and the gradient
+        # of where(mask, inf, 0) is NaN (fast-decay SSMs hit this).
+        ratio = cum[:, :, None, :] - cum[:, None, :, :]         # (B, Wq, Ws, H)
+        tri = jnp.tril(jnp.ones((w, w), bool))
+        decay = jnp.exp(jnp.where(tri[None, :, :, None], ratio, -1e30))
+        scores = jnp.einsum("bthk,bshk->btsh", qc32, kc32)
+        weighted = scores * decay * gc.astype(jnp.float32)[:, None, :, :]
+        y_intra = jnp.einsum("btsh,bshv->bthv", weighted, vc32)
+        # state update
+        carry_decay = jnp.exp(total[:, None, :] - cum) * gc.astype(jnp.float32)
+        kv = jnp.einsum("bshk,bshv->bhkv", kc32 * carry_decay[..., None], vc32)
+        new_state = state * jnp.exp(total)[..., None, None] + kv
+        return new_state, (y_inter + y_intra).astype(v.dtype)
+
+    final_state, ys = jax.lax.scan(chunk_fn, init_state, (qs, ks, vs, las, gs))
+    y = ys.swapaxes(0, 1).reshape(b, s, h, dv)
+    return y, final_state
+
+
+def recurrence_decode_step(
+    q: jax.Array,        # (B, H, dk)
+    k: jax.Array,        # (B, H, dk)
+    v: jax.Array,        # (B, H, dv)
+    log_a: jax.Array,    # (B, H)
+    gate: jax.Array,     # (B, H)
+    state: jax.Array,    # (B, H, dk, dv) float32
+) -> Tuple[jax.Array, jax.Array]:
+    """One recurrent decode step: O(1) in sequence length."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    kv = jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32)
+                    * gate.astype(jnp.float32)[..., None], v.astype(jnp.float32))
+    new_state = state * a + kv
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), new_state)
+    return y.astype(v.dtype), new_state
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+                  state: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv (mamba frontend).
+
+    x: (B, S, D); w: (K, D); state: (B, K-1, D) carried for decode.
+    Returns (y (B, S, D), new_state (B, K-1, D)).
+    """
+    kk, d = w.shape
+    if state is None:
+        state = jnp.zeros((x.shape[0], kk - 1, d), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B, S+K-1, D)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(kk))
+    if b is not None:
+        y = y + b
+    new_state = xp[:, -(kk - 1):, :] if kk > 1 else state
+    return y, new_state

@@ -1,0 +1,136 @@
+"""Dense decoder-only transformer family (yi, h2o-danube, qwen2, qwen1.5,
+phi-3-vision backbone).
+
+Covers: GQA with arbitrary kv heads, optional QKV bias (qwen), sliding-window
+attention (danube), tied embeddings, and the VLM variant whose image positions
+take precomputed patch embeddings (phi-3-vision; frontend stubbed per the
+assignment).
+
+Layer stacking uses ``lax.scan`` over a leading L axis on block params — this
+bounds HLO size/compile time at 61-layer scale and is what makes the 80-cell
+dry-run tractable (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def _block_init(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attn_init(k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                            cfg.hd(), bias=cfg.qkv_bias),
+        "norm2": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.swiglu_init(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    ke, kb, kh = jax.random.split(key, 3)
+    block_keys = jax.random.split(kb, cfg.num_layers)
+    blocks = jax.vmap(lambda k: _block_init(k, cfg))(block_keys)
+    params: Params = {
+        "embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model),
+        "blocks": blocks,
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(kh, cfg.d_model, cfg.vocab_size, scale=0.02)
+    return params
+
+
+def _block_apply(cfg: ModelConfig, bp: Params, x: jax.Array,
+                 positions: jax.Array, cache, cache_pos, dtype, q_chunk: int):
+    h, new_cache = L.attention_block(
+        bp["attn"], L.rmsnorm(x, bp["norm1"], cfg.norm_eps),
+        n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, hd=cfg.hd(),
+        rope_theta=cfg.rope_theta, positions=positions,
+        window=cfg.sliding_window, q_chunk=q_chunk,
+        cache=cache, cache_pos=cache_pos, dtype=dtype)
+    x = x + h
+    x = x + L.swiglu(bp["mlp"], L.rmsnorm(x, bp["norm2"], cfg.norm_eps), dtype)
+    return x, new_cache
+
+
+def _embed_inputs(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+                  dtype) -> jax.Array:
+    x = L.embed_lookup(params["embed"], batch["tokens"], dtype)
+    if cfg.num_image_tokens and "patch_embeds" in batch:
+        # VLM: precomputed patch embeddings prefix the text tokens (stub frontend)
+        x = jnp.concatenate([batch["patch_embeds"].astype(dtype), x], axis=1)
+    return x
+
+
+def head_matrix(cfg: ModelConfig, params: Params) -> jax.Array:
+    head = params.get("head", None)
+    return head if head is not None else params["embed"].T
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array], *,
+            remat: bool = False, q_chunk: int = L.DEFAULT_Q_CHUNK,
+            return_hidden: bool = False
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence forward (train / prefill).  Returns (logits, aux);
+    ``return_hidden=True`` returns the final hidden states instead of logits
+    (the chunked-CE training path never materializes full logits)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = _embed_inputs(cfg, params, batch, dtype)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(x, bp):
+        out, _ = _block_apply(cfg, bp, x, positions, None, None, dtype, q_chunk)
+        return out, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, {}
+    logits = L.lm_logits(x, head_matrix(cfg, params), dtype)
+    return logits, {}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    kv, hd = cfg.num_kv_heads, cfg.hd()
+    shape = (cfg.num_layers, batch, max_len, kv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: Dict[str, jax.Array], pos: jax.Array,
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_lookup(params["embed"], tokens, dtype)
+    positions = pos[None].astype(jnp.int32) if pos.ndim == 0 else pos
+
+    def body(x, xs):
+        bp, kc, vc = xs
+        out, new_cache = _block_apply(cfg, bp, x, positions, (kc, vc), pos,
+                                      dtype, L.DEFAULT_Q_CHUNK)
+        return out, new_cache
+
+    x, (k_tok, v_tok) = jax.lax.scan(body, x, (params["blocks"], cache["k"],
+                                               cache["v"]))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(x, head_matrix(cfg, params), dtype)
+    # single token-column write into the persistent caches (in-place on TPU)
+    zero = jnp.zeros((), jnp.int32)
+    k_new = jax.lax.dynamic_update_slice(cache["k"], k_tok,
+                                         (zero, zero, pos, zero, zero))
+    v_new = jax.lax.dynamic_update_slice(cache["v"], v_tok,
+                                         (zero, zero, pos, zero, zero))
+    return logits, {"k": k_new, "v": v_new}

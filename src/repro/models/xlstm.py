@@ -1,0 +1,238 @@
+"""xLSTM LM (sLSTM + mLSTM blocks, arXiv:2405.04517).
+
+Blocks: every ``slstm_every``-th block is an sLSTM (scalar memory with
+recurrent weights -> inherently sequential, computed by a per-step scan);
+all others are mLSTM (matrix memory), computed with the chunkwise-parallel
+recurrence from ``ssm_common`` so the MXU stays dense.
+
+Deviations from the paper (documented per DESIGN.md): the exponential input
+gate is replaced by a sigmoid (we use ratio-of-cumprod chunking, which is
+numerically exact for gates in (0,1] without max-stabilizer bookkeeping);
+the mLSTM normalizer n_t is carried exactly via an augmented value channel
+(v' = [v, 1]).  Blocks are residual pre-norm without FFNs (d_ff = 0 in the
+assigned config).
+
+Decode is O(1)-state — this family runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.ssm_common import (chunked_linear_recurrence,
+                                     recurrence_decode_step)
+
+Params = Dict[str, Any]
+
+
+def _is_slstm(cfg: ModelConfig, i: int) -> bool:
+    return cfg.slstm_every > 0 and i % cfg.slstm_every == 0
+
+
+def _mlstm_init(key, cfg: ModelConfig) -> Params:
+    d, h, dk = cfg.d_model, cfg.num_heads, cfg.hd()
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": L.rmsnorm_init(d),
+        "wq": L.dense_init(ks[0], d, h * dk),
+        "wk": L.dense_init(ks[1], d, h * dk),
+        "wv": L.dense_init(ks[2], d, h * dk),
+        "wi": L.dense_init(ks[3], d, h, scale=0.02),
+        "wf": L.dense_init(ks[4], d, h, scale=0.02),
+        "wo": L.dense_init(ks[5], d, h * dk),
+        "wout": L.dense_init(ks[6], h * dk, d),
+        "bf": jnp.full((h,), 2.0, jnp.float32),  # forget-gate bias: remember
+    }
+
+
+def _mlstm_qkv(p: Params, x, cfg: ModelConfig, dtype):
+    b, s, d = x.shape
+    h, dk = cfg.num_heads, cfg.hd()
+    x = constrain(x, "batch", None, None)   # Megatron-SP gather
+    w = lambda n: p[n].astype(dtype)
+    q = (x @ w("wq")).reshape(b, s, h, dk)
+    k = (x @ w("wk")).reshape(b, s, h, dk) / jnp.sqrt(dk).astype(dtype)
+    v = (x @ w("wv")).reshape(b, s, h, dk)
+    v_aug = jnp.concatenate([v, jnp.ones((b, s, h, 1), dtype)], axis=-1)
+    log_a = jax.nn.log_sigmoid((x @ w("wf")).astype(jnp.float32)
+                               + p["bf"][None, None, :])
+    gate = jax.nn.sigmoid((x @ w("wi")).astype(jnp.float32))
+    o = jax.nn.sigmoid(x @ w("wo"))
+    return q, k, v_aug, log_a, gate, o
+
+
+def _mlstm_finish(p: Params, y_aug, o, b, s, dtype):
+    num, den = y_aug[..., :-1], y_aug[..., -1:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = (y.reshape(b, s, -1).astype(dtype) * o)
+    return y @ p["wout"].astype(dtype)
+
+
+def mlstm_block(p: Params, x, cfg: ModelConfig, dtype,
+                state: Optional[jax.Array] = None, chunk: int = 128):
+    """Full-sequence mLSTM.  Returns (out, final_state)."""
+    b, s, _ = x.shape
+    xa = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v_aug, log_a, gate, o = _mlstm_qkv(p, xa, cfg, dtype)
+    y_aug, fstate = chunked_linear_recurrence(q, k, v_aug, log_a, gate,
+                                              init_state=state, chunk=chunk)
+    return x + _mlstm_finish(p, y_aug, o, b, s, dtype), fstate
+
+
+def mlstm_decode(p: Params, x, cfg: ModelConfig, dtype, state: jax.Array):
+    b = x.shape[0]
+    xa = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v_aug, log_a, gate, o = _mlstm_qkv(p, xa, cfg, dtype)
+    y_aug, new_state = recurrence_decode_step(
+        q[:, 0], k[:, 0], v_aug[:, 0], log_a[:, 0], gate[:, 0], state)
+    return x + _mlstm_finish(p, y_aug[:, None], o, b, 1, dtype), new_state
+
+
+def _slstm_init(key, cfg: ModelConfig) -> Params:
+    d, h = cfg.d_model, cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(key, 9)
+    r = lambda kk: jax.random.normal(kk, (h, dh, dh), jnp.float32) / jnp.sqrt(dh)
+    return {
+        "norm": L.rmsnorm_init(d),
+        "wz": L.dense_init(ks[0], d, d), "rz": r(ks[1]),
+        "wi": L.dense_init(ks[2], d, d), "ri": r(ks[3]),
+        "wf": L.dense_init(ks[4], d, d), "rf": r(ks[5]),
+        "wo_g": L.dense_init(ks[6], d, d), "ro": r(ks[7]),
+        "wout": L.dense_init(ks[8], d, d),
+        "bf": jnp.full((d,), 2.0, jnp.float32),
+    }
+
+
+def _slstm_cell(p: Params, zx, ix, fx, ox, state, h_heads):
+    """One sLSTM step.  state: (c, n, hprev) each (B, d) f32."""
+    c, n, hp = state
+    hh = hp.reshape(*h_heads)
+    rec = lambda r: jnp.einsum("bhd,hde->bhe", hh, r).reshape(c.shape)
+    z = jnp.tanh(zx + rec(p["rz"]))
+    i = jax.nn.sigmoid(ix + rec(p["ri"]))
+    f = jax.nn.sigmoid(fx + rec(p["rf"]) + p["bf"])
+    o = jax.nn.sigmoid(ox + rec(p["ro"]))
+    c = f * c + i * z
+    n = f * n + i
+    hcur = o * c / jnp.maximum(n, 1.0)
+    return (c, n, hcur), hcur
+
+
+def slstm_block(p: Params, x, cfg: ModelConfig, dtype,
+                state: Optional[Tuple[jax.Array, ...]] = None):
+    """Full-sequence sLSTM via per-step scan.  Returns (out, final_state)."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    xa = L.rmsnorm(x, p["norm"], cfg.norm_eps).astype(jnp.float32)
+    zx = xa @ p["wz"]
+    ix = xa @ p["wi"]
+    fx = xa @ p["wf"]
+    ox = xa @ p["wo_g"]
+    if state is None:
+        zero = jnp.zeros((b, d), jnp.float32)
+        state = (zero, zero, zero)
+
+    def step(st, inp):
+        return _slstm_cell(p, *inp, st, (b, h, d // h))
+
+    xs = tuple(a.swapaxes(0, 1) for a in (zx, ix, fx, ox))
+    fstate, hs = jax.lax.scan(step, state, xs)
+    y = hs.swapaxes(0, 1).astype(dtype) @ p["wout"].astype(dtype)
+    return x + y, fstate
+
+
+def slstm_decode(p: Params, x, cfg: ModelConfig, dtype, state):
+    b, _, d = x.shape
+    h = cfg.num_heads
+    xa = L.rmsnorm(x, p["norm"], cfg.norm_eps).astype(jnp.float32)[:, 0]
+    new_state, hcur = _slstm_cell(p, xa @ p["wz"], xa @ p["wi"], xa @ p["wf"],
+                                  xa @ p["wo_g"], state, (b, h, d // h))
+    y = hcur[:, None].astype(dtype) @ p["wout"].astype(dtype)
+    return x + y, new_state
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key) -> Params:
+    ke, kh, *bkeys = jax.random.split(key, cfg.num_layers + 2)
+    blocks = []
+    for i in range(cfg.num_layers):
+        if _is_slstm(cfg, i):
+            blocks.append({"slstm": _slstm_init(bkeys[i], cfg)})
+        else:
+            blocks.append({"mlstm": _mlstm_init(bkeys[i], cfg)})
+    return {
+        "embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model),
+        "blocks": blocks,
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+        "head": L.dense_init(kh, cfg.d_model, cfg.vocab_size, scale=0.02),
+    }
+
+
+def head_matrix(cfg: ModelConfig, params: Params) -> jax.Array:
+    return params["head"]
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array], *,
+            remat: bool = False, q_chunk: int = 0,
+            return_hidden: bool = False
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    del q_chunk
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_lookup(params["embed"], batch["tokens"], dtype)
+    for i, bp in enumerate(params["blocks"]):
+        if "slstm" in bp:
+            fn = lambda xx, p=bp["slstm"]: slstm_block(p, xx, cfg, dtype)[0]
+        else:
+            fn = lambda xx, p=bp["mlstm"]: mlstm_block(p, xx, cfg, dtype)[0]
+        if remat:
+            fn = jax.checkpoint(fn, prevent_cse=False)
+        x = fn(x)
+        x = constrain(x, "batch", "model", None)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, {}
+    logits = L.lm_logits(x, params["head"], dtype)
+    return logits, {}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """O(1) recurrent state; max_len is irrelevant (kept for API parity)."""
+    del max_len, dtype
+    h, dk, d = cfg.num_heads, cfg.hd(), cfg.d_model
+    cache: Dict[str, Any] = {}
+    for i in range(cfg.num_layers):
+        if _is_slstm(cfg, i):
+            zero = jnp.zeros((batch, d), jnp.float32)
+            cache[f"layer{i}"] = (zero, zero, zero)
+        else:
+            cache[f"layer{i}"] = jnp.zeros((batch, h, dk, dk + 1), jnp.float32)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: Dict[str, Any], pos: jax.Array
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    del pos  # recurrent state carries position implicitly
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_lookup(params["embed"], tokens, dtype)
+    new_cache: Dict[str, Any] = {}
+    for i, bp in enumerate(params["blocks"]):
+        if "slstm" in bp:
+            x, new_cache[f"layer{i}"] = slstm_decode(
+                bp["slstm"], x, cfg, dtype, cache[f"layer{i}"])
+        else:
+            x, new_cache[f"layer{i}"] = mlstm_decode(
+                bp["mlstm"], x, cfg, dtype, cache[f"layer{i}"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(x, params["head"], dtype)
+    return logits, new_cache

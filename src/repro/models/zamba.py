@@ -1,0 +1,235 @@
+"""Zamba2 hybrid: Mamba2 (SSD) backbone + a weight-shared attention block
+applied after every ``shared_attn_every`` Mamba blocks (arXiv:2411.15242).
+
+Mamba2 blocks use the chunkwise-parallel SSD recurrence from ``ssm_common``
+(q=C, k=B, v=x, decay=exp(dt*A)); the shared attention block is a standard
+GQA transformer block whose weights are applied at L/k points with per-
+application KV caches (the weights are shared, the activations are not).
+
+Simplifications vs the released model (DESIGN.md §8): the causal conv is
+applied to the x stream only (not B/C), and the per-application LoRA deltas
+on the shared block are omitted.
+
+Decode is O(1)-state for the Mamba blocks; the shared-attention caches decode
+with a KV cache — together this family runs ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.ssm_common import (causal_conv1d, chunked_linear_recurrence,
+                                     recurrence_decode_step)
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_head_dim
+    return d_in, heads
+
+
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_in, heads = _dims(cfg)
+    st = cfg.ssm_state
+    ks = jax.random.split(key, 3)
+    proj_out = 2 * d_in + 2 * st + heads
+    return {
+        "norm": L.rmsnorm_init(d),
+        "in_proj": L.dense_init(ks[0], d, proj_out),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, d_in)) * 0.1,
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, heads)),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "out_proj": L.dense_init(ks[2], d_in, d),
+        "gate_norm": L.rmsnorm_init(d_in),
+    }
+
+
+def _mamba_streams(p: Params, x, cfg: ModelConfig, dtype, conv_state):
+    b, s, _ = x.shape
+    d_in, heads = _dims(cfg)
+    st = cfg.ssm_state
+    x = constrain(x, "batch", None, None)   # Megatron-SP gather
+    proj = x @ p["in_proj"].astype(dtype)
+    z, xs, bmat, cmat, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + st, 2 * d_in + 2 * st], axis=-1)
+    xs, new_conv = causal_conv1d(xs, p["conv_w"].astype(dtype),
+                                 p["conv_b"].astype(dtype), conv_state)
+    xs = jax.nn.silu(xs)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                          # (H,)
+    log_a = dt * a[None, None, :]                                     # <= 0
+    v = xs.reshape(b, s, heads, cfg.ssm_head_dim)
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b, s, heads, st))
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, s, heads, st))
+    return z, v, k, q, log_a, dt, new_conv
+
+
+def _mamba_finish(p: Params, y, v, z, cfg: ModelConfig, dtype, b, s):
+    d_in, heads = _dims(cfg)
+    y = y + v * p["d_skip"][None, None, :, None].astype(dtype)
+    y = y.reshape(b, s, d_in)
+    y = L.rmsnorm(y, p["gate_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return constrain(y @ p["out_proj"].astype(dtype), "batch", "model", None)
+
+
+def mamba_block(p: Params, x, cfg: ModelConfig, dtype, chunk: int = 128):
+    b, s, _ = x.shape
+    xa = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    z, v, k, q, log_a, dt, _ = _mamba_streams(p, xa, cfg, dtype, None)
+    y, _ = chunked_linear_recurrence(q, k, v, log_a, dt, chunk=chunk)
+    return x + _mamba_finish(p, y.astype(dtype), v, z, cfg, dtype, b, s)
+
+
+def mamba_decode(p: Params, x, cfg: ModelConfig, dtype, ssm_state, conv_state):
+    b = x.shape[0]
+    xa = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    z, v, k, q, log_a, dt, new_conv = _mamba_streams(p, xa, cfg, dtype, conv_state)
+    y, new_ssm = recurrence_decode_step(
+        q[:, 0], k[:, 0], v[:, 0], log_a[:, 0], dt[:, 0], ssm_state)
+    out = x + _mamba_finish(p, y[:, None].astype(dtype), v, z, cfg, dtype, b, 1)
+    return out, new_ssm, new_conv
+
+
+def shared_attn_init(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attn_init(k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                            cfg.hd()),
+        "norm2": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.swiglu_init(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _shared_attn_apply(sp: Params, x, cfg: ModelConfig, positions, cache,
+                       pos, dtype, q_chunk):
+    h, new_cache = L.attention_block(
+        sp["attn"], L.rmsnorm(x, sp["norm1"], cfg.norm_eps),
+        n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, hd=cfg.hd(),
+        rope_theta=cfg.rope_theta, positions=positions, q_chunk=q_chunk,
+        cache=cache, cache_pos=pos, dtype=dtype)
+    x = x + h
+    x = x + L.swiglu(sp["mlp"], L.rmsnorm(x, sp["norm2"], cfg.norm_eps), dtype)
+    return x, new_cache
+
+
+def _groups(cfg: ModelConfig) -> Tuple[int, int]:
+    per = cfg.shared_attn_every if cfg.shared_attn_every > 0 else cfg.num_layers
+    assert cfg.num_layers % per == 0, (cfg.num_layers, per)
+    return cfg.num_layers // per, per
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    ke, kb, kh, ks = jax.random.split(key, 4)
+    block_keys = jax.random.split(kb, cfg.num_layers)
+    blocks = jax.vmap(lambda k: mamba_init(k, cfg))(block_keys)
+    return {
+        "embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model),
+        "blocks": blocks,
+        "shared_attn": shared_attn_init(ks, cfg),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+        "head": L.dense_init(kh, cfg.d_model, cfg.vocab_size, scale=0.02),
+    }
+
+
+def head_matrix(cfg: ModelConfig, params: Params) -> jax.Array:
+    return params["head"]
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array], *,
+            remat: bool = False, q_chunk: int = L.DEFAULT_Q_CHUNK,
+            return_hidden: bool = False
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_lookup(params["embed"], batch["tokens"], dtype)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    n_groups, per = _groups(cfg)
+    grouped = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_groups, per, *a.shape[1:]), params["blocks"])
+
+    def mamba_body(x, bp):
+        return mamba_block(bp, x, cfg, dtype), None
+
+    if remat:
+        mamba_body = jax.checkpoint(mamba_body, prevent_cse=False)
+    for g in range(n_groups):
+        gp = jax.tree_util.tree_map(lambda a: a[g], grouped)
+        x, _ = jax.lax.scan(mamba_body, x, gp)
+        x, _ = _shared_attn_apply(params["shared_attn"], x, cfg, positions,
+                                  None, None, dtype, q_chunk)
+        x = constrain(x, "batch", "model", None)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, {}
+    logits = L.lm_logits(x, params["head"], dtype)
+    return logits, {}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    d_in, heads = _dims(cfg)
+    n_groups, _ = _groups(cfg)
+    return {
+        "ssm": jnp.zeros((cfg.num_layers, batch, heads, cfg.ssm_state,
+                          cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv - 1, d_in), dtype),
+        "attn_k": jnp.zeros((n_groups, batch, max_len, cfg.num_kv_heads,
+                             cfg.hd()), dtype),
+        "attn_v": jnp.zeros((n_groups, batch, max_len, cfg.num_kv_heads,
+                             cfg.hd()), dtype),
+    }
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: Dict[str, jax.Array], pos: jax.Array
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_lookup(params["embed"], tokens, dtype)
+    positions = pos[None].astype(jnp.int32)
+    n_groups, per = _groups(cfg)
+    grouped = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_groups, per, *a.shape[1:]), params["blocks"])
+    ssm_g = cache["ssm"].reshape(n_groups, per, *cache["ssm"].shape[1:])
+    conv_g = cache["conv"].reshape(n_groups, per, *cache["conv"].shape[1:])
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+
+    def mamba_body(x, xs):
+        bp, sstate, cstate = xs
+        out, ns, nc = mamba_decode(bp, x, cfg, dtype, sstate, cstate)
+        return out, (ns, nc)
+
+    for g in range(n_groups):
+        gp = jax.tree_util.tree_map(lambda a: a[g], grouped)
+        x, (ns, nc) = jax.lax.scan(mamba_body, x, (gp, ssm_g[g], conv_g[g]))
+        new_ssm.append(ns)
+        new_conv.append(nc)
+        x, kv = _shared_attn_apply(params["shared_attn"], x, cfg, positions,
+                                   (cache["attn_k"][g], cache["attn_v"][g]),
+                                   pos, dtype, L.DEFAULT_Q_CHUNK)
+        new_k.append(kv[0])   # new-token K/V only
+        new_v.append(kv[1])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(x, params["head"], dtype)
+    zero = jnp.zeros((), jnp.int32)
+    new_cache = {
+        "ssm": jnp.concatenate(new_ssm, axis=0),
+        "conv": jnp.concatenate(new_conv, axis=0),
+        "attn_k": jax.lax.dynamic_update_slice(
+            cache["attn_k"], jnp.stack(new_k, axis=0),
+            (zero, zero, pos, zero, zero)),
+        "attn_v": jax.lax.dynamic_update_slice(
+            cache["attn_v"], jnp.stack(new_v, axis=0),
+            (zero, zero, pos, zero, zero)),
+    }
+    return logits, new_cache

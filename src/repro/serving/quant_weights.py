@@ -1,0 +1,53 @@
+"""int8 weight storage for serving — FORMS quantization on the LM hot path.
+
+An ADMM-polarized, 8-bit-quantized FORMS weight is exactly representable as
+signed int8 x per-column scale (the per-fragment sign is constant, so folding
+it into the magnitudes stays within int8; the "extra magnitude bit" benefit
+belongs to the uint8+sign-plane layout the Pallas kernel consumes).  Storing
+block weights as {"q": int8, "s": f32} halves serving HBM weight traffic vs
+bf16; the dequant multiply fuses into the consuming matmul's operand load on
+TPU.
+
+``quantize_tree`` converts the scan-stacked attention/MLP weights of the
+dense family; ``layers.wload`` transparently dequantizes on read.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+QUANT_SUFFIXES = ("attn/wq", "attn/wk", "attn/wv", "attn/wo",
+                  "mlp/gate", "mlp/up", "mlp/down")
+
+
+def quantize_leaf(w: jax.Array) -> dict:
+    """Per-output-column symmetric int8 (last dim = out features)."""
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=-2, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale.astype(jnp.float32)}
+
+
+def dequantize_leaf(v: dict, dtype) -> jax.Array:
+    return (v["q"].astype(dtype) * v["s"].astype(dtype))
+
+
+def quantize_tree(params: Any) -> Tuple[Any, int, int]:
+    """Quantize matching weights; returns (tree, bytes_before, bytes_after)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out, before, after = [], 0, 0
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        if (hasattr(leaf, "ndim") and leaf.ndim >= 2
+                and any(pstr.endswith(sfx) for sfx in QUANT_SUFFIXES)):
+            v = quantize_leaf(leaf)
+            before += leaf.size * leaf.dtype.itemsize
+            after += v["q"].size + v["s"].size * 4
+            out.append(v)
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out), before, after

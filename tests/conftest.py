@@ -1,0 +1,6 @@
+"""Test config: src on path; NO XLA device-count flags here (smoke tests and
+benches must see 1 device — only launch/dryrun.py runs with 512)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

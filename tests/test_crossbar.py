@@ -1,0 +1,35 @@
+"""Crossbar mapping and reduction accounting (Tables I/II structure)."""
+from repro.core import crossbar as X
+from repro.core.fragments import FragmentSpec
+from repro.core.quantization import QuantSpec
+
+
+def test_crossbars_for_matrix_basic():
+    xbar = X.CrossbarSpec(rows=128, cols=128)
+    quant = QuantSpec(bits=8, cell_bits=2)  # 4 cells/weight -> 32 wcols/xbar
+    assert X.crossbars_for_matrix((128, 32), xbar, quant) == 1
+    assert X.crossbars_for_matrix((128, 33), xbar, quant) == 2
+    assert X.crossbars_for_matrix((129, 32), xbar, quant) == 2
+    assert X.crossbars_for_matrix((128, 32), xbar, quant, signed_split=True) == 2
+
+
+def test_reduction_composes_prune_quant_polarization():
+    xbar = X.CrossbarSpec()
+    quant = QuantSpec(bits=8, cell_bits=2)
+    dense = [(1024, 1024)] * 4
+    pruned = [(256, 256)] * 4      # 16x fewer weights
+    rep = X.reduction_report(dense, pruned, xbar, quant, baseline_bits=16)
+    assert rep.prune_factor > 8           # structural, near 16x
+    assert rep.quant_factor == 2.0        # 16 -> 8 bits
+    assert rep.polarization_factor == 2.0
+    # total reduction reflects all three (prune x quant x split-elimination)
+    assert rep.total > rep.prune_factor
+
+
+def test_sign_indicator_storage_is_small():
+    frag = FragmentSpec(m=8)
+    bits = X.sign_indicator_bits((1024, 1024), frag)
+    assert bits == (1024 // 8) * 1024
+    # 1 bit per fragment ~= weight storage / (8 bits * m)
+    weight_bits = 1024 * 1024 * 8
+    assert bits / weight_bits == 1 / 64

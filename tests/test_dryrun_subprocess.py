@@ -1,0 +1,39 @@
+"""Dry-run smoke: lower+compile one production cell in a subprocess.
+
+Runs launch/dryrun.py exactly as deployed (512 host devices via XLA_FLAGS in
+the script's first lines) — in a subprocess so this test session's device
+count stays 1.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.mark.parametrize("arch,shape", [("qwen2-1.5b", "decode_32k")])
+def test_dryrun_cell_compiles(tmp_path, arch, shape):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "single", "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=560, env=env, cwd=ROOT)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    artifact = tmp_path / f"{arch}__{shape}__single.json"
+    assert artifact.exists()
+    data = json.loads(artifact.read_text())
+    assert data["status"] == "ok"
+    assert data["chips"] == 256
+    assert data["cost_analysis"]["flops"] > 0
+    assert data["roofline"]["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_mesh_constructors():
+    """Mesh helpers never touch devices at import; single-device mesh works."""
+    from repro.launch import mesh as mesh_mod
+    m = mesh_mod.single_device_mesh()
+    assert m.axis_names == ("data", "model")

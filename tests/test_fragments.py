@@ -1,0 +1,67 @@
+"""Fragment geometry: reshapes, policies, padding, counting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fragments as F
+
+
+def test_conv_matrix_roundtrip_all_policies():
+    w = jax.random.normal(jax.random.PRNGKey(0), (3, 5, 7, 11))
+    for policy in F.VALID_POLICIES:
+        mat = F.conv_to_matrix(w, policy)
+        assert mat.shape == (3 * 5 * 7, 11)
+        back = F.matrix_to_conv(mat, (3, 5, 7, 11), policy)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+
+def test_policies_differ():
+    w = jnp.arange(3 * 5 * 7 * 2, dtype=jnp.float32).reshape(3, 5, 7, 2)
+    mats = {p: np.asarray(F.conv_to_matrix(w, p)) for p in F.VALID_POLICIES}
+    assert not np.array_equal(mats["W"], mats["H"])
+    assert not np.array_equal(mats["W"], mats["C"])
+
+
+def test_fragment_roundtrip_with_padding():
+    mat = jax.random.normal(jax.random.PRNGKey(1), (13, 4))
+    frs = F.to_fragments(mat, 8)
+    assert frs.shape == (2, 8, 4)
+    back = F.from_fragments(frs, 13)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(mat))
+
+
+def test_fragment_sums_match_manual():
+    mat = jnp.ones((16, 3))
+    sums = F.fragment_sums(mat, 8)
+    np.testing.assert_allclose(np.asarray(sums), 8.0)
+
+
+def test_expand_fragment_values():
+    vals = jnp.array([[1.0, -1.0], [2.0, 3.0]])
+    out = F.expand_fragment_values(vals, 3, 5)
+    assert out.shape == (5, 2)
+    np.testing.assert_array_equal(np.asarray(out[:3, 0]), 1.0)
+    np.testing.assert_array_equal(np.asarray(out[3:, 1]), 3.0)
+
+
+def test_fragment_count_conv_and_dense():
+    spec = F.FragmentSpec(m=8)
+    assert F.fragment_count((16, 4), spec) == 2 * 4
+    assert F.fragment_count((3, 3, 8, 4), spec) == 9 * 4  # 72 rows -> 9 frags
+
+
+def test_is_crossbar_weight():
+    assert F.is_crossbar_weight("blocks/attn/wq", (64, 64))
+    assert F.is_crossbar_weight("conv1", (3, 3, 8, 16))
+    assert not F.is_crossbar_weight("embed", (1000, 64))
+    assert not F.is_crossbar_weight("blocks/attn/bq", (64,))
+    assert not F.is_crossbar_weight("final_norm", (64,))
+    assert not F.is_crossbar_weight("blocks/ssm/conv_w", (4, 128))
+
+
+def test_invalid_spec_raises():
+    with pytest.raises(ValueError):
+        F.FragmentSpec(m=0)
+    with pytest.raises(ValueError):
+        F.FragmentSpec(policy="X")

@@ -1,0 +1,77 @@
+"""Loop-aware HLO cost analyzer: scans, nesting, collectives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import analyze_module, collective_stats
+from repro.analysis.roofline import RooflineReport, model_flops
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_flops_scaled_by_trip_count():
+    x = jnp.zeros((64, 128))
+    w = jnp.zeros((128, 128))
+
+    def scanned(x, w):
+        return jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=12)[0]
+
+    mc = analyze_module(_compile_text(scanned, x, w))
+    assert mc.flops == 2 * 64 * 128 * 128 * 12
+
+
+def test_nested_scans_multiply():
+    x = jnp.zeros((32, 64))
+    w = jnp.zeros((64, 64))
+
+    def nested(x, w):
+        def outer(c, _):
+            c2 = jax.lax.scan(lambda cc, __: (cc @ w, None), c, None, length=3)[0]
+            return c2, None
+        return jax.lax.scan(outer, x, None, length=5)[0]
+
+    mc = analyze_module(_compile_text(nested, x, w))
+    assert mc.flops == 2 * 32 * 64 * 64 * 15
+
+
+def test_unrolled_matches_direct():
+    x = jnp.zeros((16, 32))
+    w = jnp.zeros((32, 32))
+
+    def unrolled(x, w):
+        for _ in range(4):
+            x = jnp.tanh(x @ w)
+        return x
+
+    mc = analyze_module(_compile_text(unrolled, x, w))
+    assert mc.flops == 2 * 16 * 32 * 32 * 4
+
+
+def test_bytes_positive_and_bounded():
+    x = jnp.zeros((64, 64))
+    mc = analyze_module(_compile_text(lambda a: a @ a, x))
+    assert mc.bytes >= 3 * 64 * 64 * 4  # two reads + one write minimum
+
+
+def test_collectives_empty_on_single_device():
+    x = jnp.zeros((8, 8))
+    st = collective_stats(_compile_text(lambda a: a * 2, x))
+    assert st.total_bytes == 0 and st.total_count == 0
+
+
+def test_roofline_report_terms():
+    r = RooflineReport(arch="x", shape="train_4k", mesh="single", chips=256,
+                       kind="train", hlo_flops_per_device=197e12,
+                       hlo_bytes_per_device=819e9,
+                       collective_bytes_per_device=50e9,
+                       model_flops_global=197e12 * 256,
+                       tokens_per_step=1)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 1.0) < 1e-9
+    assert abs(r.collective_s - 1.0) < 1e-9
+    assert r.bottleneck in ("compute", "memory", "collective")
+    assert abs(r.mfu - 1.0) < 1e-6
+    assert model_flops("train", 10, 5) == 300.0
+    assert model_flops("decode", 10, 5) == 100.0

@@ -1,0 +1,147 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.admm_polarize import admm_polarize as k_polarize
+from repro.kernels.bitserial_crossbar import bitserial_crossbar as k_bitserial
+from repro.kernels.polarized_matmul import polarized_matmul as k_matmul
+from repro.core.zeroskip import fragment_eic
+
+
+def _mk(seed, M, K, N, m, x_dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (M, K), x_dtype)
+    mags = jax.random.randint(ks[1], (K, N), 0, 256).astype(jnp.uint8)
+    signs = jnp.where(jax.random.bernoulli(ks[2], 0.5, (K // m, N)),
+                      1.0, -1.0).astype(jnp.float32)
+    scale = jnp.full((1, N), 0.0123, jnp.float32)
+    return x, mags, signs, scale
+
+
+@pytest.mark.parametrize("M,K,N,m,bm,bn,bk", [
+    (16, 64, 32, 8, 16, 32, 32),
+    (8, 32, 16, 4, 8, 16, 16),
+    (32, 128, 64, 16, 16, 32, 64),
+    (4, 16, 8, 8, 4, 8, 16),
+])
+def test_polarized_matmul_matches_oracle(M, K, N, m, bm, bn, bk):
+    x, mags, signs, scale = _mk(0, M, K, N, m)
+    y_k = k_matmul(x, mags, signs, scale, m=m, bm=bm, bn=bn, bk=bk,
+                   interpret=True)
+    y_r = ref.ref_polarized_matmul(x, mags, signs, scale, m)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("x_dtype", [jnp.float32, jnp.bfloat16])
+def test_polarized_matmul_dtypes(x_dtype):
+    x, mags, signs, scale = _mk(1, 16, 64, 32, 8, x_dtype)
+    y_k = k_matmul(x, mags, signs, scale, m=8, bm=16, bn=32, bk=32,
+                   interpret=True)
+    y_r = ref.ref_polarized_matmul(x, mags, signs, scale, 8)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=2e-2, atol=2e-1)
+
+
+def test_fast_oracle_equals_fragment_order_oracle():
+    """The sign-fold-then-matmul form == per-fragment partial-sum form (the
+    equivalence the TPU kernel relies on; DESIGN.md §2)."""
+    x, mags, signs, scale = _mk(9, 24, 96, 40, 8)
+    y_frag = ref.ref_polarized_matmul(x, mags, signs, scale, 8)
+    y_fast = ref.ref_polarized_matmul_fast(x, mags, signs, scale, 8)
+    np.testing.assert_allclose(np.asarray(y_frag), np.asarray(y_fast),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_ops_wrapper_pads_odd_shapes():
+    x, mags, signs, scale = _mk(2, 7, 24, 9, 8)
+    y = ops.polarized_matmul(x, mags, signs, scale, m=8, prefer_ref=False)
+    y_r = ref.ref_polarized_matmul(x, mags, signs, scale, 8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,input_bits,adc_bits", [
+    (8, 8, None), (4, 8, None), (8, 16, None), (8, 8, 4),
+])
+def test_bitserial_kernel_vs_oracle(m, input_bits, adc_bits):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    M, K, N = 8, 32, 16
+    xc = jax.random.randint(ks[0], (M, K), 0, 2 ** input_bits)
+    mcodes = jax.random.randint(ks[1], (K, N), 0, 256)
+    signs = jnp.where(jax.random.bernoulli(ks[2], 0.5, (K // m, N)),
+                      1, -1).astype(jnp.int32)
+    cells = jnp.stack([(mcodes >> (2 * c)) & 3 for c in range(4)], 0)
+    acc_k, eic_k = k_bitserial(xc, cells, signs, m=m, input_bits=input_bits,
+                               cell_bits=2, adc_bits=adc_bits,
+                               bm=8, bn=16, interpret=True)
+    acc_r, _ = ref.ref_bitserial_crossbar(xc, cells, signs, m, input_bits, 2,
+                                          adc_bits=adc_bits)
+    np.testing.assert_array_equal(np.asarray(acc_k), np.asarray(acc_r))
+    np.testing.assert_array_equal(np.asarray(eic_k),
+                                  np.asarray(fragment_eic(xc, m, input_bits)))
+
+
+def test_bitserial_exact_when_adc_sufficient():
+    """Sufficient ADC bits -> bit-serial sim == exact integer matmul."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    xc = jax.random.randint(ks[0], (4, 16), 0, 256)
+    mcodes = jax.random.randint(ks[1], (16, 8), 0, 256)
+    signs = jnp.where(jax.random.bernoulli(ks[2], 0.5, (2, 8)), 1, -1)
+    cells = jnp.stack([(mcodes >> (2 * c)) & 3 for c in range(4)], 0)
+    acc, _ = ops.bitserial_crossbar(xc, cells, signs.astype(jnp.int32), m=8,
+                                    input_bits=8, prefer_ref=False, bm=4, bn=8)
+    exact = ref.ref_exact_int_matmul(xc, mcodes, signs, 8)
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(exact))
+
+
+def test_bitserial_adc_clipping_introduces_error():
+    """Insufficient ADC bits saturate partial sums (the fidelity experiment)."""
+    xc = jnp.full((2, 8), 255, jnp.int32)
+    mcodes = jnp.full((8, 4), 255, jnp.int32)
+    signs = jnp.ones((1, 4), jnp.int32)
+    cells = jnp.stack([(mcodes >> (2 * c)) & 3 for c in range(4)], 0)
+    acc_lo, _ = ref.ref_bitserial_crossbar(xc, cells, signs, 8, 8, 2, adc_bits=2)
+    exact = ref.ref_exact_int_matmul(xc, mcodes, signs, 8)
+    assert int(jnp.abs(acc_lo - exact).max()) > 0
+
+
+@pytest.mark.parametrize("rule", ["sum", "energy"])
+@pytest.mark.parametrize("K,N,m,bk,bn", [(64, 32, 8, 32, 16), (32, 8, 4, 16, 8),
+                                         (128, 64, 16, 64, 64)])
+def test_admm_polarize_kernel_vs_oracle(rule, K, N, m, bk, bn):
+    v = jax.random.normal(jax.random.PRNGKey(5), (K, N))
+    pk, sk = k_polarize(v, m=m, rule=rule, bk=bk, bn=bn, interpret=True)
+    pr, sr = ref.ref_admm_polarize(v, m, rule)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+
+
+def test_admm_polarize_ops_pads():
+    v = jax.random.normal(jax.random.PRNGKey(6), (13, 5))
+    p, s = ops.admm_polarize(v, m=8, prefer_ref=False)
+    assert p.shape == (13, 5) and s.shape == (2, 5)
+    from repro.core import polarization as P
+    assert bool(P.is_polarized(p, 8))
+
+
+def test_zero_skip_equivalence_property():
+    """Dropping all-zero leading bit-planes never changes the dot product."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    # inputs with only 4 effective bits inside 8-bit codes
+    xc = jax.random.randint(ks[0], (4, 16), 0, 16)
+    mcodes = jax.random.randint(ks[1], (16, 8), 0, 256)
+    signs = jnp.where(jax.random.bernoulli(ks[2], 0.5, (2, 8)), 1, -1)
+    cells = jnp.stack([(mcodes >> (2 * c)) & 3 for c in range(4)], 0)
+    acc8, cyc8 = ref.ref_bitserial_crossbar(xc, cells, signs, 8, 8, 2,
+                                            zero_skip=True)
+    acc4, _ = ref.ref_bitserial_crossbar(xc, cells, signs, 8, 4, 2,
+                                         zero_skip=False)
+    np.testing.assert_array_equal(np.asarray(acc8), np.asarray(acc4))
+    # and skipping saved cycles vs the no-skip 8-bit stream
+    _, cyc_noskip = ref.ref_bitserial_crossbar(xc, cells, signs, 8, 8, 2,
+                                               zero_skip=False)
+    assert int(cyc8) < int(cyc_noskip)

@@ -1,0 +1,65 @@
+"""Hardware model calibration against the paper's published numbers."""
+import pytest
+
+from repro.core import perfmodel as PM
+
+
+def test_mcu_rollups_close_to_table_iii():
+    p, a = PM.mcu_rollup(PM.forms_mcu_components(8))
+    # Table IV: 12 MCUs/tile = 280.05 mW -> 23.3 mW per MCU
+    assert abs(p - 23.3) / 23.3 < 0.15
+    pi, ai = PM.mcu_rollup(PM.isaac_mcu_components())
+    assert abs(pi - 24.08) / 24.08 < 0.15
+
+
+def test_chip_rollup_close_to_table_iv():
+    forms = PM.forms_chip(8)
+    isaac = PM.isaac_chip()
+    # paper: FORMS 66.36 W / 89.15 mm2, ISAAC 65.81 W / 85.09 mm2
+    assert abs(forms.chip_power_mw - 66360.8) / 66360.8 < 0.10
+    assert abs(forms.chip_area_mm2 - 89.15) / 89.15 < 0.10
+    assert abs(isaac.chip_power_mw - 65808.08) / 65808.08 < 0.10
+    assert abs(isaac.chip_area_mm2 - 85.09) / 85.09 < 0.10
+    # iso-cost claim: within a few percent of each other
+    assert abs(forms.chip_power_mw / isaac.chip_power_mw - 1.0) < 0.05
+    assert abs(forms.chip_area_mm2 / isaac.chip_area_mm2 - 1.0) < 0.10
+
+
+def test_table_v_polarization_only_band():
+    rows = {r.name: r for r in PM.table_v(8, mean_eic=12.0)}
+    r = rows["FORMS (polarization only, 8)"]
+    # published 0.54 / 0.61; model tolerance band
+    assert 0.40 <= r.gops_per_mm2_rel <= 0.68
+    assert 0.40 <= r.gops_per_w_rel <= 0.80
+
+
+def test_table_v_full_optimization_band():
+    rows = {r.name: r for r in PM.table_v(8, mean_eic=12.0)}
+    r = rows["FORMS (full optimization, 8)"]
+    # published 36.02 / 27.73
+    assert 27.0 <= r.gops_per_mm2_rel <= 45.0
+
+
+def test_fps_speedup_reproduces_paper_ranges():
+    """Fig 13/14: pruned-ISAAC 7.5x-200.8x; FORMS model-opt 4x-109.6x."""
+    low = PM.fps_speedup(7.5 / 2, 2.0, fragment=8, mean_eic=11.0)
+    high = PM.fps_speedup(200.8 / 4, 4.0, fragment=8, mean_eic=11.0)
+    assert abs(low["pruned_quantized_isaac"] - 7.5) < 1e-6
+    assert abs(high["pruned_quantized_isaac"] - 200.8) < 1e-6
+    assert 3.2 <= low["forms_model_opt"] <= 5.0        # paper: 4x
+    assert 95.0 <= high["forms_model_opt"] <= 125.0    # paper: 109.6x
+    # zero skipping strictly helps, bounded by 16/EIC
+    assert low["forms_full_zero_skip"] > low["forms_model_opt"]
+    assert high["forms_full_zero_skip"] / high["forms_model_opt"] <= 16 / 11.0 + 1e-6
+
+
+def test_fine_grained_events_arithmetic():
+    isaac = PM.isaac_throughput()
+    # ISAAC: one event per input bit (16) x offset overhead
+    assert isaac.events_per_column_per_input == 16 * PM.ISAAC_OFFSET_OVERHEAD
+    forms = PM.forms_throughput(8)
+    # FORMS: 16 fragment waves x 16 bits
+    assert forms.events_per_column_per_input == (128 / 8) * 16
+    # zero skipping reduces events proportionally
+    forms_zs = PM.forms_throughput(8, mean_eic=8.0)
+    assert forms_zs.events_per_column_per_input == (128 / 8) * 8

@@ -1,0 +1,62 @@
+"""Polarization: sign rules, projection feasibility/optimality, decomposition."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import polarization as P
+
+
+@pytest.mark.parametrize("rule", ["sum", "energy"])
+@pytest.mark.parametrize("m", [4, 8, 16])
+def test_projection_is_feasible(rule, m):
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 12))
+    proj, signs = P.project_polarize(w, m, rule=rule)
+    assert bool(P.is_polarized(proj, m))
+    assert float(P.polarization_violation(proj, m, signs)) == 0.0
+
+
+@pytest.mark.parametrize("rule", ["sum", "energy"])
+def test_projection_idempotent(rule):
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 8))
+    p1, s1 = P.project_polarize(w, 8, rule=rule)
+    p2, s2 = P.project_polarize(p1, 8, rule=rule)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2))
+
+
+def test_energy_rule_is_closer_or_equal():
+    """The energy rule is the exact Euclidean projection: never farther."""
+    for seed in range(10):
+        w = jax.random.normal(jax.random.PRNGKey(seed), (40, 6))
+        p_sum, _ = P.project_polarize(w, 8, rule="sum")
+        p_energy, _ = P.project_polarize(w, 8, rule="energy")
+        d_sum = float(jnp.linalg.norm(w - p_sum))
+        d_energy = float(jnp.linalg.norm(w - p_energy))
+        assert d_energy <= d_sum + 1e-6
+
+
+def test_paper_sign_rule_eq2():
+    """Sign = + iff fragment sum >= 0 (paper Eq. 2)."""
+    w = jnp.array([[1.0], [2.0], [-0.5], [-0.1],
+                   [-5.0], [1.0], [1.0], [1.0]])  # frag sums: 2.4, -2.0
+    signs = P.fragment_signs(w, 4, rule="sum")
+    np.testing.assert_array_equal(np.asarray(signs), [[1.0], [-1.0]])
+
+
+def test_decompose_recompose():
+    w = jax.random.normal(jax.random.PRNGKey(2), (24, 5))
+    proj, _ = P.project_polarize(w, 8)
+    mags, signs = P.decompose_polarized(proj, 8)
+    assert float(mags.min()) >= 0.0
+    back = P.recompose_polarized(mags, signs, 8)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(proj))
+
+
+def test_frozen_signs():
+    w = jax.random.normal(jax.random.PRNGKey(3), (16, 4))
+    signs = jnp.ones((2, 4))
+    proj, _ = P.project_polarize(w, 8, rule="frozen", signs=signs)
+    assert float(proj.min()) >= 0.0  # all-positive signs -> no negatives
+
+    with pytest.raises(ValueError):
+        P.project_polarize(w, 8, rule="frozen")

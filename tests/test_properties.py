@@ -1,0 +1,137 @@
+"""Hypothesis property tests for the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import polarization as P
+from repro.core import pruning as PR
+from repro.core import quantization as Q
+from repro.core import zeroskip as Z
+from repro.core import fragments as F
+from repro.kernels import ref
+
+SET = dict(max_examples=25, deadline=None)
+
+
+def _mat(seed, k, n):
+    return jax.random.normal(jax.random.PRNGKey(seed), (k, n))
+
+
+@given(seed=st.integers(0, 2**16), m=st.sampled_from([2, 4, 8, 16]),
+       k_mult=st.integers(1, 6), n=st.integers(1, 12),
+       rule=st.sampled_from(["sum", "energy"]))
+@settings(**SET)
+def test_polarization_projection_properties(seed, m, k_mult, n, rule):
+    w = _mat(seed, m * k_mult, n)
+    proj, signs = P.project_polarize(w, m, rule=rule)
+    # feasibility
+    assert bool(P.is_polarized(proj, m))
+    # non-expansiveness: kept entries unchanged, removed entries were opposed
+    kept = np.asarray(proj) != 0
+    np.testing.assert_allclose(np.asarray(proj)[kept], np.asarray(w)[kept])
+    # projection never increases the norm
+    assert float(jnp.linalg.norm(proj)) <= float(jnp.linalg.norm(w)) + 1e-6
+    # idempotency
+    proj2, _ = P.project_polarize(proj, m, rule=rule)
+    np.testing.assert_allclose(np.asarray(proj2), np.asarray(proj))
+
+
+@given(seed=st.integers(0, 2**16), m=st.sampled_from([2, 4, 8]),
+       k_mult=st.integers(1, 4), n=st.integers(1, 8))
+@settings(**SET)
+def test_energy_rule_dominates_sum_rule(seed, m, k_mult, n):
+    """The energy rule is the exact Euclidean projection onto P."""
+    w = _mat(seed, m * k_mult, n)
+    d_sum = float(jnp.linalg.norm(w - P.project_polarize(w, m, "sum")[0]))
+    d_eng = float(jnp.linalg.norm(w - P.project_polarize(w, m, "energy")[0]))
+    assert d_eng <= d_sum + 1e-6
+
+
+@given(seed=st.integers(0, 2**16), bits=st.sampled_from([2, 4, 8]),
+       k=st.integers(2, 24), n=st.integers(1, 8))
+@settings(**SET)
+def test_quantization_projection_properties(seed, bits, k, n):
+    w = _mat(seed, k, n)
+    spec = Q.QuantSpec(bits=bits)
+    scale = Q.scale_for(w, spec)
+    proj = Q.project_quantize(w, spec, scale)
+    assert bool(Q.is_on_grid(proj, spec, scale))
+    # round-to-nearest: error bounded by half a step everywhere
+    assert float(jnp.max(jnp.abs(proj - w) / scale)) <= 0.5 + 1e-5
+    # idempotent at fixed scale
+    np.testing.assert_allclose(np.asarray(Q.project_quantize(proj, spec, scale)),
+                               np.asarray(proj), rtol=1e-6, atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**16), bits=st.sampled_from([4, 8, 16]),
+       cell_bits=st.sampled_from([1, 2, 4]), k=st.integers(1, 16),
+       n=st.integers(1, 8))
+@settings(**SET)
+def test_cell_slicing_always_reconstructs(seed, bits, cell_bits, k, n):
+    if bits % cell_bits != 0:
+        return
+    spec = Q.QuantSpec(bits=bits, cell_bits=cell_bits)
+    codes = jax.random.randint(jax.random.PRNGKey(seed), (k, n), 0, 2 ** bits)
+    back = Q.cells_to_codes(Q.slice_to_cells(codes, spec), spec)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+@given(seed=st.integers(0, 2**16), alpha=st.floats(0.1, 1.0),
+       beta=st.floats(0.1, 1.0))
+@settings(**SET)
+def test_pruning_projection_properties(seed, alpha, beta):
+    w = _mat(seed, 16, 12)
+    spec = PR.PruneSpec(alpha=alpha, beta=beta)
+    proj, rmask, cmask = PR.project_prune(w, spec)
+    # group counts respected
+    assert int(cmask.sum()) == max(1, round(alpha * 12))
+    assert int(rmask.sum()) == max(1, round(beta * 16))
+    # surviving entries unchanged
+    kept = np.asarray(proj) != 0
+    np.testing.assert_allclose(np.asarray(proj)[kept], np.asarray(w)[kept])
+
+
+@given(seed=st.integers(0, 2**16), m=st.sampled_from([2, 4, 8]),
+       input_bits=st.sampled_from([4, 8]))
+@settings(max_examples=10, deadline=None)
+def test_bitserial_always_exact_without_adc_clip(seed, m, input_bits):
+    """The crossbar arithmetic pipeline is exact integer matmul."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    K, N, M = m * 3, 6, 4
+    xc = jax.random.randint(ks[0], (M, K), 0, 2 ** input_bits)
+    mcodes = jax.random.randint(ks[1], (K, N), 0, 256)
+    signs = jnp.where(jax.random.bernoulli(ks[2], 0.5, (K // m, N)), 1, -1)
+    cells = jnp.stack([(mcodes >> (2 * c)) & 3 for c in range(4)], 0)
+    acc, _ = ref.ref_bitserial_crossbar(xc, cells, signs, m, input_bits, 2)
+    exact = ref.ref_exact_int_matmul(xc, mcodes, signs, m)
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(exact))
+
+
+@given(seed=st.integers(0, 2**16), m=st.sampled_from([2, 4, 8, 16]))
+@settings(**SET)
+def test_eic_bounds_and_monotonicity(seed, m):
+    codes = jax.random.randint(jax.random.PRNGKey(seed), (4, 32), 0, 2 ** 8)
+    eic = np.asarray(Z.fragment_eic(codes, m, 8))
+    eb = np.asarray(Z.effective_bits(codes, 8))
+    assert (eic >= 0).all() and (eic <= 8).all()
+    # fragment EIC >= every member's effective bits
+    k = codes.shape[-1]
+    pad = (-k) % m
+    ebp = np.pad(eb, [(0, 0), (0, pad)])
+    grouped = ebp.reshape(4, -1, m)
+    np.testing.assert_array_equal(eic, grouped.max(-1))
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**SET)
+def test_forms_linear_roundtrip_error_bounded(seed):
+    """FormsLinear conversion error is bounded by quantization resolution."""
+    from repro.core import forms_layer as FL
+    w = jax.random.normal(jax.random.PRNGKey(seed), (32, 8))
+    params, err = FL.from_dense(w)
+    # untrained gaussian weights: polarization removes the minority-sign mass
+    # (~55% rel-L2 worst case); ADMM-trained weights land near 0 (test_system)
+    assert float(err) < 0.75
+    dense = FL.to_dense(params)
+    assert dense.shape == w.shape

@@ -1,0 +1,63 @@
+"""Structured pruning: projection, crossbar-aware snapping, masks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pruning as PR
+
+
+def test_projection_keeps_top_norm_groups():
+    w = jnp.diag(jnp.array([5.0, 4.0, 3.0, 2.0, 1.0, 0.5, 0.1, 0.01]))
+    proj, rmask, cmask = PR.project_prune(w, PR.PruneSpec(alpha=0.5, beta=0.5))
+    assert int(cmask.sum()) == 4
+    assert int(rmask.sum()) == 4
+    # top-4 diagonal entries survive
+    np.testing.assert_allclose(np.asarray(jnp.diag(proj)[:4]),
+                               [5.0, 4.0, 3.0, 2.0])
+    assert float(jnp.abs(proj[4:, :]).sum()) == 0.0
+
+
+def test_sparsity_fraction():
+    w = jnp.ones((10, 10))
+    proj, _, _ = PR.project_prune(w, PR.PruneSpec(alpha=0.5, beta=1.0))
+    assert abs(float(PR.sparsity(proj)) - 0.5) < 1e-6
+
+
+def test_crossbar_aware_snapping():
+    spec = PR.PruneSpec(alpha=0.4, beta=0.4)
+    snapped = PR.crossbar_aware_spec((256, 256), spec, row_multiple=128,
+                                     col_multiple=128)
+    # kept counts snap UP to multiples of 128
+    assert snapped.beta * 256 == 128
+    assert snapped.alpha * 256 == 128
+
+    snapped2 = PR.crossbar_aware_spec((100, 100), PR.PruneSpec(0.5, 0.5),
+                                      128, 128)
+    # multiple larger than dim: clamp to dim, keep everything >= raw
+    assert 0 < snapped2.alpha <= 1.0
+
+
+def test_masks_frozen_reapply():
+    w = jax.random.normal(jax.random.PRNGKey(0), (12, 12))
+    proj, rmask, cmask = PR.project_prune(w, PR.PruneSpec(alpha=0.5, beta=0.75))
+    w2 = w + 1.0
+    reproj = PR.apply_masks(w2, rmask, cmask)
+    # masked positions stay zero
+    assert float(jnp.abs(reproj[~rmask, :]).sum()) == 0.0
+    assert float(jnp.abs(reproj[:, ~cmask]).sum()) == 0.0
+
+
+def test_projection_idempotent():
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 16))
+    spec = PR.PruneSpec(alpha=0.5, beta=0.5)
+    p1, _, _ = PR.project_prune(w, spec)
+    p2, _, _ = PR.project_prune(p1, spec)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2))
+
+
+def test_invalid_spec():
+    with pytest.raises(ValueError):
+        PR.PruneSpec(alpha=0.0)
+    with pytest.raises(ValueError):
+        PR.PruneSpec(beta=1.5)

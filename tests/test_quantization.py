@@ -1,0 +1,63 @@
+"""ReRAM quantization: grids, projection, cell slicing, activation codes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantization as Q
+
+
+def test_projection_on_grid():
+    spec = Q.QuantSpec(bits=8)
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 8))
+    proj = Q.project_quantize(w, spec)
+    scale = Q.scale_for(proj, spec)
+    assert bool(Q.is_on_grid(proj, spec, scale))
+
+
+def test_projection_idempotent_at_fixed_scale():
+    spec = Q.QuantSpec(bits=8)
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 4))
+    scale = Q.scale_for(w, spec)
+    p1 = Q.project_quantize(w, spec, scale)
+    p2 = Q.project_quantize(p1, spec, scale)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2))
+
+
+def test_error_decreases_with_bits():
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, 16))
+    errs = [float(Q.quantization_error(w, Q.QuantSpec(bits=b)))
+            for b in (2, 4, 8)]
+    assert errs[0] > errs[1] > errs[2]
+
+
+@pytest.mark.parametrize("bits,cell_bits", [(8, 2), (16, 2), (8, 4), (4, 2)])
+def test_cell_slicing_roundtrip(bits, cell_bits):
+    spec = Q.QuantSpec(bits=bits, cell_bits=cell_bits)
+    codes = jax.random.randint(jax.random.PRNGKey(3), (16, 8), 0, 2 ** bits)
+    planes = Q.slice_to_cells(codes, spec)
+    assert planes.shape[0] == spec.cells_per_weight
+    assert int(planes.max()) < (1 << cell_bits)
+    back = Q.cells_to_codes(planes, spec)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+def test_bits_cell_mismatch_raises():
+    with pytest.raises(ValueError):
+        Q.QuantSpec(bits=7, cell_bits=2)
+
+
+def test_input_bit_planes_reconstruct():
+    codes = jax.random.randint(jax.random.PRNGKey(4), (5, 7), 0, 2 ** 8)
+    planes = Q.input_bit_planes(codes, 8)
+    recon = sum(np.asarray(planes[b]) * (1 << b) for b in range(8))
+    np.testing.assert_array_equal(recon, np.asarray(codes))
+
+
+def test_activation_quantization_unsigned():
+    x = jax.random.normal(jax.random.PRNGKey(5), (10, 10)) * 3
+    codes, scale = Q.quantize_activations(x, input_bits=8)
+    assert int(codes.min()) >= 0 and int(codes.max()) <= 255
+    relu = np.maximum(np.asarray(x), 0)
+    np.testing.assert_allclose(np.asarray(codes) * float(scale), relu,
+                               atol=float(scale) * 0.51)

@@ -1,0 +1,169 @@
+"""End-to-end system test: the full FORMS pipeline on a CNN (paper Fig 1).
+
+pretrain -> ADMM (crossbar-aware prune + polarize + quantize) -> hard project
+-> map onto simulated crossbars -> in-situ (bit-serial) inference -> verify:
+accuracy preserved, constraints exactly satisfied, crossbar reduction counted,
+zero-skipping cycles saved.  This is the paper's whole contribution exercised
+through the public API.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnns import tiny_cnn
+from repro.core import admm as admm_mod
+from repro.core import crossbar as xbar_mod
+from repro.core import forms_layer as FL
+from repro.core import polarization as pol_mod
+from repro.core import zeroskip as zs_mod
+from repro.core.fragments import FragmentSpec, conv_to_matrix, pad_rows
+from repro.core.pruning import PruneSpec
+from repro.core.quantization import QuantSpec
+from repro.data.synthetic import ImageStreamConfig, image_batch
+from repro.models import cnn as cnn_mod
+from repro.training.optimizer import sgd_init, sgd_update
+
+
+def _sgd(loss_fn, p, a, table, o, img, lab):
+    g = jax.grad(lambda pp: loss_fn(pp, a, table, img, lab))(p)
+    return sgd_update(p, g, o, lr=0.05)
+
+
+@pytest.fixture(scope="module")
+def forms_pipeline():
+    """Train a tiny CNN with ADMM-FORMS constraints on synthetic images."""
+    cfg = tiny_cnn()
+    ds = ImageStreamConfig(image_size=cfg.image_size, channels=cfg.in_channels,
+                           num_classes=cfg.num_classes, batch=64)
+    params = cnn_mod.init(cfg, jax.random.PRNGKey(0))
+
+    def loss_fn(p, admm_state, table, img, lab):
+        logits, _ = cnn_mod.forward(cfg, p, img)
+        ll = jax.nn.log_softmax(logits)
+        task = -jnp.mean(jnp.take_along_axis(ll, lab[:, None], 1))
+        if admm_state is not None:
+            task = task + admm_mod.admm_penalty(p, admm_state, table)
+        return task
+
+    def accuracy(p, steps=4):
+        hits, n = 0, 0
+        for i in range(steps):
+            img, lab = image_batch(ds, 1000 + i)
+            logits, _ = cnn_mod.forward(cfg, p, img)
+            hits += int((jnp.argmax(logits, -1) == lab).sum())
+            n += lab.shape[0]
+        return hits / n
+
+    # phase 1: pretrain
+    opt = sgd_init(params)
+    step = jax.jit(lambda p, o, img, lab: _sgd(loss_fn, p, None, None, o, img, lab))
+    for i in range(120):
+        img, lab = image_batch(ds, i)
+        params, opt = step(params, opt, img, lab)
+    acc_pre = accuracy(params)
+
+    # phase 2: ADMM with the three FORMS constraints
+    frag = FragmentSpec(m=4)
+    cfn = admm_mod.default_constraints(
+        prune=PruneSpec(alpha=0.75, beta=0.75), polarize=frag,
+        quantize=QuantSpec(bits=8), rho=5e-3)
+    admm_state, table = admm_mod.init_admm(params, cfn)
+    astep = jax.jit(lambda p, a, o, img, lab: _sgd(loss_fn, p, a, table, o, img, lab))
+    for i in range(240):
+        img, lab = image_batch(ds, 200 + i)
+        params, opt = astep(params, admm_state, opt, img, lab)
+        if (i + 1) % 30 == 0:
+            admm_state = admm_mod.admm_update(params, admm_state, table,
+                                              refresh_signs=(i < 150))
+    projected = admm_mod.project_hard(params, admm_state, table)
+    # paper's retrain step: projected fine-tuning with frozen structure
+    reproject = jax.jit(lambda p: admm_mod.project_hard(p, admm_state, table))
+    fopt = sgd_init(projected)
+    fstep = jax.jit(lambda p, o, img, lab: _sgd(loss_fn, p, None, None, o, img, lab))
+    for i in range(100):
+        img, lab = image_batch(ds, 600 + i)
+        projected, fopt = fstep(projected, fopt, img, lab)
+        projected = reproject(projected)
+    acc_forms = accuracy(projected)
+    return dict(cfg=cfg, ds=ds, params=params, projected=projected,
+                admm_state=admm_state, table=table,
+                acc_pre=acc_pre, acc_forms=acc_forms, frag=frag)
+
+
+def test_accuracy_preserved(forms_pipeline):
+    f = forms_pipeline
+    assert f["acc_pre"] > 0.6, "pretraining failed to learn the task"
+    # paper Tables I/II: polarization+quant costs ~0 accuracy
+    assert f["acc_forms"] > f["acc_pre"] - 0.15, (f["acc_pre"], f["acc_forms"])
+
+
+def test_constraints_exactly_satisfied(forms_pipeline):
+    f = forms_pipeline
+    for path, st in f["admm_state"].items():
+        c = f["table"][path]
+        w = _leaf(f["projected"], path)
+        mat = admm_mod._as_matrix(w, c)
+        assert bool(pol_mod.is_polarized(mat, c.polarize.m)), path
+
+
+def test_crossbar_reduction_counted(forms_pipeline):
+    f = forms_pipeline
+    shapes = cnn_mod.crossbar_weight_shapes(f["cfg"], f["projected"])
+    xb = xbar_mod.CrossbarSpec(rows=128, cols=128)
+    rep = xbar_mod.reduction_report(shapes, shapes, xb, QuantSpec(bits=8),
+                                    baseline_bits=16)
+    assert rep.quant_factor == 2.0
+    assert rep.polarization_factor == 2.0
+    # the tiny CNN's layers are below one crossbar, so count granularity eats
+    # part of the factor; at paper-scale (VGG-16) the full 4x materializes:
+    vgg_shapes = [(3 * 3 * 512, 512)] * 8 + [(3 * 3 * 256, 256)] * 4
+    rep_vgg = xbar_mod.reduction_report(vgg_shapes, vgg_shapes, xb,
+                                        QuantSpec(bits=8), baseline_bits=16)
+    assert rep_vgg.total >= 4.0  # quant x polarization at minimum
+    assert rep.total >= 2.0
+
+
+def test_insitu_inference_matches_dense(forms_pipeline):
+    """Simulated crossbar (bit-serial) FC layer == float layer within quant."""
+    f = forms_pipeline
+    w = None
+    for name, leaf in admm_mod.iter_weights(f["projected"]):
+        if (name.startswith("fc") and not name.endswith("_b")
+                and hasattr(leaf, "ndim") and leaf.ndim == 2):
+            w = leaf
+            break
+    assert w is not None
+    fparams, err = FL.from_dense(w, FragmentSpec(m=4), QuantSpec(bits=8))
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (8, w.shape[0])))
+    y_dense = x @ w
+    y_sim, eic, _ = FL.apply_simulated(fparams, x, input_bits=16)
+    rel = float(jnp.linalg.norm(y_sim - y_dense) /
+                jnp.maximum(jnp.linalg.norm(y_dense), 1e-9))
+    assert rel < 0.05, rel
+    # zero-skipping observable: EIC below the worst case
+    assert float(eic.mean()) < 16.0
+
+
+def test_zero_skip_saves_cycles_on_real_activations(forms_pipeline):
+    f = forms_pipeline
+    img, _ = image_batch(f["ds"], 2000)
+    _, acts = cnn_mod.forward(f["cfg"], f["projected"], img,
+                              collect_activations=True)
+    from repro.core.quantization import quantize_activations
+    saved = []
+    for name, a in acts:
+        codes, _ = quantize_activations(a.reshape(a.shape[0], -1), 16)
+        st = zs_mod.eic_stats(codes, 4, 16)
+        saved.append(st.savings)
+    # paper Fig 8: at m=4 roughly a third of the cycles are skippable
+    assert max(saved) > 0.15, saved
+
+
+def _leaf(tree, path):
+    for name, leaf in admm_mod.iter_weights(tree):
+        if name == path:
+            return leaf
+    raise KeyError(path)

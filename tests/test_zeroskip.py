@@ -1,0 +1,50 @@
+"""Zero-skipping / EIC: effective bits, fragment EIC, cycle accounting."""
+import jax.numpy as jnp
+import numpy as np
+import jax
+
+from repro.core import zeroskip as Z
+
+
+def test_effective_bits_examples():
+    codes = jnp.array([0, 1, 2, 3, 0b1011, 0b00001011, 255])
+    eb = np.asarray(Z.effective_bits(codes, 8))
+    np.testing.assert_array_equal(eb, [0, 1, 2, 2, 4, 4, 8])
+
+
+def test_fragment_eic_is_max_over_inputs():
+    # paper Fig 7: fragment EIC = max effective bits among its inputs
+    codes = jnp.array([[0b000001, 0b0000011, 0b1000000, 0b10]])  # eb: 1,2,7,2
+    eic = np.asarray(Z.fragment_eic(codes, 4, 8))
+    np.testing.assert_array_equal(eic, [[7]])
+
+
+def test_eic_monotone_in_fragment_size():
+    """Paper Fig 8b: larger fragments need more cycles on average."""
+    key = jax.random.PRNGKey(0)
+    # activation-like distribution: mostly small values
+    vals = jnp.abs(jax.random.normal(key, (64, 256))) * 20
+    codes = jnp.clip(vals.astype(jnp.int32), 0, 2 ** 16 - 1)
+    means = [Z.eic_stats(codes, m, 16).mean_eic for m in (4, 8, 16, 32, 128)]
+    assert all(means[i] <= means[i + 1] + 1e-9 for i in range(len(means) - 1))
+
+
+def test_cycles_with_and_without_skipping():
+    codes = jnp.array([[1, 1, 1, 1, 3, 3, 3, 3]])
+    with_skip = int(Z.layer_cycles(codes, 4, 8, zero_skip=True))
+    without = int(Z.layer_cycles(codes, 4, 8, zero_skip=False))
+    assert with_skip == 1 + 2
+    assert without == 16
+
+
+def test_stats_histogram_sums_to_one():
+    codes = jnp.arange(64).reshape(4, 16) % 256
+    st = Z.eic_stats(codes, 8, 8)
+    assert abs(st.histogram.sum() - 1.0) < 1e-9
+    assert 0.0 <= st.savings <= 1.0
+    assert Z.speedup_from_skipping(st) >= 1.0
+
+
+def test_zero_inputs_cost_zero_cycles():
+    codes = jnp.zeros((3, 16), jnp.int32)
+    assert int(Z.layer_cycles(codes, 8, 16)) == 0
