@@ -1,6 +1,11 @@
 """Paper Fig 8: effective-input-cycle statistics vs fragment size, on real
-post-ReLU activations of the trained CNN (16-bit input streaming)."""
+post-ReLU activations of the trained CNN (16-bit input streaming).
+
+Fragment sizes are swept as ``dataclasses.replace(spec, m=...)`` — the
+per-block-knob pattern the unified ``FormsSpec`` exists for."""
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
@@ -13,20 +18,24 @@ from repro.models import cnn as cnn_mod
 
 def run() -> None:
     t = trained_forms_cnn(fragment=4)
+    base = t["spec"]
     img, _ = image_batch(t["ds"], 9000)
     _, acts = cnn_mod.forward(t["cfg"], t["projected"], img,
                               collect_activations=True)
     per_m = {}
     for m in (4, 8, 16, 32, 64, 128):
+        spec = dataclasses.replace(base, m=m)
         means, savings = [], []
         for name, a in acts:
-            codes, _ = quantize_activations(a.reshape(a.shape[0], -1), 16)
-            st = eic_stats(codes, m, 16)
+            codes, _ = quantize_activations(a.reshape(a.shape[0], -1),
+                                            spec.input_bits)
+            st = eic_stats(codes, spec.m, spec.input_bits)
             means.append(st.mean_eic)
             savings.append(st.savings)
         per_m[m] = (float(np.mean(means)), float(np.mean(savings)))
         emit(f"fig8.mean_eic.m{m}", 0.0,
-             f"eic={per_m[m][0]:.2f}/16;savings={per_m[m][1]*100:.1f}%")
+             f"eic={per_m[m][0]:.2f}/{spec.input_bits};"
+             f"savings={per_m[m][1]*100:.1f}%")
     # paper claims: EIC monotone in m; m=4 saves ~33%, m=128 ~6%
     mono = all(per_m[a][0] <= per_m[b][0] + 1e-9
                for a, b in zip((4, 8, 16, 32, 64), (8, 16, 32, 64, 128)))

@@ -7,7 +7,7 @@ import numpy as np
 from benchmarks.common import emit, trained_forms_cnn
 from repro.core import crossbar as xbar
 from repro.core import perfmodel as pm
-from repro.core.quantization import QuantSpec, quantize_activations
+from repro.core.quantization import quantize_activations
 from repro.core.zeroskip import eic_stats
 from repro.data.synthetic import image_batch
 from repro.models import cnn as cnn_mod
@@ -18,14 +18,16 @@ def run() -> None:
         t = trained_forms_cnn(fragment=min(fragment, 8))
         shapes = cnn_mod.crossbar_weight_shapes(t["cfg"], t["projected"])
         rep = xbar.reduction_report(shapes, shapes, xbar.CrossbarSpec(),
-                                    QuantSpec(bits=8), baseline_bits=32)
+                                    t["spec"].quant, baseline_bits=32)
         img, _ = image_batch(t["ds"], 9100)
         _, acts = cnn_mod.forward(t["cfg"], t["projected"], img,
                                   collect_activations=True)
         eics = []
         for _, a in acts:
-            codes, _ = quantize_activations(a.reshape(a.shape[0], -1), 16)
-            eics.append(eic_stats(codes, fragment, 16).mean_eic)
+            codes, _ = quantize_activations(a.reshape(a.shape[0], -1),
+                                            t["spec"].input_bits)
+            eics.append(eic_stats(codes, fragment,
+                                  t["spec"].input_bits).mean_eic)
         mean_eic = float(np.mean(eics))
         sp = pm.fps_speedup(crossbar_reduction_prune=rep.prune_factor,
                             crossbar_reduction_quant=rep.quant_factor,

@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
+from repro.forms import FormsSpec
 from repro.kernels import ops, ref
 
 
@@ -23,13 +24,15 @@ def run() -> None:
     us_dense = time_fn(dense, x, w)
     emit("kernel.dense_matmul.cpu", us_dense, f"{M}x{K}x{N}")
 
-    pol = jax.jit(lambda a: ops.polarized_matmul(a, mags, signs, scale, m=m,
-                                                 prefer_ref=True))
+    spec = FormsSpec(m=m, prefer_ref=True)
+    pol = jax.jit(lambda a: ops.polarized_matmul(a, mags, signs, scale,
+                                                 spec=spec))
     us_pol = time_fn(pol, x)
     emit("kernel.polarized_matmul.oracle", us_pol,
          f"vs_dense={us_pol/us_dense:.2f}x")
 
-    proj = jax.jit(lambda a: ops.admm_polarize(a, m=m, prefer_ref=True))
+    proj = jax.jit(lambda a: ops.admm_polarize(
+        a, spec=FormsSpec(m=m, rule="sum", prefer_ref=True)))
     us_proj = time_fn(proj, w)
     emit("kernel.admm_polarize.oracle", us_proj, f"{K}x{N}")
 
@@ -39,9 +42,8 @@ def run() -> None:
     sg = jnp.where(jax.random.bernoulli(jax.random.PRNGKey(6), 0.5, (16, 64)),
                    1, -1).astype(jnp.int32)
     cells = jnp.stack([(mc >> (2 * c)) & 3 for c in range(4)], 0)
-    sim = jax.jit(lambda a: ops.bitserial_crossbar(a, cells, sg, m=8,
-                                                   input_bits=8,
-                                                   prefer_ref=True)[0])
+    sim = jax.jit(lambda a: ops.bitserial_crossbar(
+        a, cells, sg, spec=FormsSpec(m=8, input_bits=8, prefer_ref=True))[0])
     us_sim = time_fn(sim, xc)
     emit("kernel.bitserial_sim.oracle", us_sim, "16x128x64@8bit")
 

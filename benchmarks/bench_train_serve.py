@@ -36,6 +36,13 @@ def run() -> None:
     us = time_fn(lambda: dec(state.params, cache), iters=5)
     emit("system.decode_step.reduced", us, f"tok/s={8/(us/1e6):.0f}")
 
+    # decode directly on the FORMS-compressed pytree (the serving hot path)
+    from repro.forms import FormsSpec, compress_tree
+    compressed, crep = compress_tree(state.params, FormsSpec(m=8, bits=8))
+    us = time_fn(lambda: dec(compressed, cache), iters=5)
+    emit("system.decode_step.forms", us,
+         f"tok/s={8/(us/1e6):.0f};storage={crep.ratio:.2f}x")
+
     # ADMM Z-update cost on the same params
     from repro.core import admm as admm_mod
     st, table = admm_mod.init_admm(state.params,

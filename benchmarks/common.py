@@ -50,10 +50,9 @@ def trained_forms_cnn(fragment: int = 4, prune_keep: float = 0.75,
         return _CACHE[key]
     from repro.configs.paper_cnns import tiny_cnn
     from repro.core import admm as admm_mod
-    from repro.core.fragments import FragmentSpec
     from repro.core.pruning import PruneSpec
-    from repro.core.quantization import QuantSpec
     from repro.data.synthetic import ImageStreamConfig, image_batch
+    from repro.forms import FormsSpec
     from repro.models import cnn as cnn_mod
     from repro.training.optimizer import sgd_init, sgd_update
 
@@ -90,10 +89,10 @@ def trained_forms_cnn(fragment: int = 4, prune_keep: float = 0.75,
         params, opt = step(params, opt, img, lab)
     acc_pre = accuracy(params)
 
+    spec = FormsSpec(m=fragment, bits=8, rule="sum")  # paper's sign rule
     cfn = admm_mod.default_constraints(
         prune=PruneSpec(alpha=prune_keep, beta=prune_keep),
-        polarize=FragmentSpec(m=fragment), quantize=QuantSpec(bits=8),
-        rho=5e-3)
+        forms=spec, rho=5e-3)
     admm_state, table = admm_mod.init_admm(params, cfn)
     astep = jax.jit(lambda p, a, o, img, lab: sgd(p, a, table, o, img, lab))
     for i in range(admm_steps):
@@ -116,6 +115,6 @@ def trained_forms_cnn(fragment: int = 4, prune_keep: float = 0.75,
     acc_post = accuracy(projected)
     out = dict(cfg=cfg, ds=ds, params=params, projected=projected,
                admm_state=admm_state, table=table, acc_pre=acc_pre,
-               acc_post=acc_post, fragment=fragment)
+               acc_post=acc_post, fragment=fragment, spec=spec)
     _CACHE[key] = out
     return out

@@ -1,9 +1,12 @@
 """End-to-end driver: the paper's full pipeline (Fig 1) on a CNN.
 
 pretrain -> crossbar-aware structured pruning + fragment polarization +
-ReRAM quantization (all via ADMM) -> hard projection -> crossbar mapping ->
-bit-serial in-situ inference with zero-skipping -> report: accuracy,
-crossbar reduction, EIC savings and the modeled FPS speedup (Figs 13/14).
+ReRAM quantization (all via ADMM) -> hard projection -> ``compress_tree``
+(the real uint8+signs deployment artifact) -> bit-serial in-situ inference
+with zero-skipping -> report: accuracy, crossbar reduction, EIC savings and
+the modeled FPS speedup (Figs 13/14).
+
+The whole compression surface is one ``FormsSpec`` threaded end-to-end.
 
 Usage:  PYTHONPATH=src python examples/forms_pipeline_cnn.py [--fragment 8]
 """
@@ -21,13 +24,11 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))  # for repro.*
 
 from benchmarks.common import trained_forms_cnn  # noqa: E402
 from repro.core import crossbar as xbar  # noqa: E402
-from repro.core import forms_layer as FL  # noqa: E402
 from repro.core import perfmodel as pm  # noqa: E402
-from repro.core.admm import iter_weights  # noqa: E402
-from repro.core.fragments import FragmentSpec  # noqa: E402
-from repro.core.quantization import QuantSpec, quantize_activations  # noqa: E402
+from repro.core.quantization import quantize_activations  # noqa: E402
 from repro.core.zeroskip import eic_stats  # noqa: E402
 from repro.data.synthetic import image_batch  # noqa: E402
+from repro.forms import apply_simulated, compress_tree, decompress_tree  # noqa: E402
 from repro.models import cnn as cnn_mod  # noqa: E402
 
 
@@ -39,38 +40,56 @@ def main():
 
     print(f"=== FORMS pipeline, fragment size {m} ===")
     t = trained_forms_cnn(fragment=m)
+    spec = t["spec"]
     print(f"accuracy: pretrained {t['acc_pre']:.3f} -> FORMS {t['acc_post']:.3f}")
 
     shapes = cnn_mod.crossbar_weight_shapes(t["cfg"], t["projected"])
     rep = xbar.reduction_report(shapes, shapes, xbar.CrossbarSpec(),
-                                QuantSpec(bits=8), baseline_bits=16)
+                                spec.quant, baseline_bits=16)
     print(f"crossbar reduction: {rep.total:.1f}x "
           f"(quant {rep.quant_factor:.0f}x, polarization "
           f"{rep.polarization_factor:.0f}x vs split mapping)")
 
-    # in-situ (bit-serial) inference through one FC layer
-    w = next(leaf for name, leaf in iter_weights(t["projected"])
-             if name.startswith("fc") and hasattr(leaf, "ndim") and leaf.ndim == 2)
-    fp, err = FL.from_dense(w, FragmentSpec(m=m), QuantSpec(bits=8))
+    # the deployment artifact: every crossbar weight becomes FormsLinearParams
+    compressed, crep = compress_tree(t["projected"], spec)
+    print(f"compress_tree: {crep.summary()}")
+    restored = decompress_tree(compressed)
+    resid = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree_util.tree_leaves(t["projected"]),
+                                jax.tree_util.tree_leaves(restored)))
+    print(f"decompress_tree exact-inverse residual: {resid:.2e}")
+
+    # in-situ (bit-serial) inference through one FC layer of the compressed tree
+    name, fp = next((n, l) for n, l in sorted(compressed.items())
+                    if n.startswith("fc") and not n.endswith("_b"))
+    w = t["projected"][name]
     x = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (16, w.shape[0])))
-    y_sim, eic, _ = FL.apply_simulated(fp, x, input_bits=16)
+    y_sim, eic, _ = apply_simulated(fp, x, spec)
     rel = float(jnp.linalg.norm(y_sim - x @ w) / jnp.linalg.norm(x @ w))
     print(f"bit-serial crossbar sim vs float: rel-L2 {rel:.4f} "
-          f"(conversion err {float(err):.4f})")
+          f"(conversion err {crep.errors[name]:.4f})")
+
+    # full compressed-tree forward parity (fc through the polarized kernel)
+    img, _ = image_batch(t["ds"], 9000)
+    logits_dense, _ = cnn_mod.forward(t["cfg"], t["projected"], img)
+    logits_forms, _ = cnn_mod.forward(t["cfg"], compressed, img)
+    agree = float(jnp.mean(jnp.argmax(logits_dense, -1)
+                           == jnp.argmax(logits_forms, -1)))
+    print(f"compressed-tree forward: argmax agreement {agree*100:.1f}%")
 
     # zero-skipping on real activations
-    img, _ = image_batch(t["ds"], 9000)
     _, acts = cnn_mod.forward(t["cfg"], t["projected"], img,
                               collect_activations=True)
     eics = []
     for _, a in acts:
-        codes, _ = quantize_activations(a.reshape(a.shape[0], -1), 16)
-        eics.append(eic_stats(codes, m, 16).mean_eic)
+        codes, _ = quantize_activations(a.reshape(a.shape[0], -1),
+                                        spec.input_bits)
+        eics.append(eic_stats(codes, spec.m, spec.input_bits).mean_eic)
     mean_eic = float(np.mean(eics))
-    print(f"mean EIC {mean_eic:.1f}/16 -> zero-skip saves "
-          f"{(1 - mean_eic/16)*100:.0f}% of input cycles")
+    print(f"mean EIC {mean_eic:.1f}/{spec.input_bits} -> zero-skip saves "
+          f"{(1 - mean_eic/spec.input_bits)*100:.0f}% of input cycles")
 
-    sp = pm.fps_speedup(rep.prune_factor, rep.quant_factor, fragment=m,
+    sp = pm.fps_speedup(rep.prune_factor, rep.quant_factor, fragment=spec.m,
                         mean_eic=mean_eic)
     print(f"modeled FPS vs original ISAAC: pruned/quant-ISAAC "
           f"{sp['pruned_quantized_isaac']:.1f}x, FORMS "

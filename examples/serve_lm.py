@@ -35,13 +35,12 @@ def main():
         results = engine.run([dataclasses.replace(r) for r in requests])
         dt = time.perf_counter() - t0
         toks = sum(len(r.tokens) for r in results)
-        mode = "FORMS int8-polarized" if forms else "dense float"
+        mode = "FORMS compressed tree" if forms else "dense float"
         print(f"[{mode:22s}] {len(results)} requests, {toks} tokens "
               f"in {dt:.2f}s ({toks/dt:.1f} tok/s)")
-        if forms and engine.compression_errors:
-            worst = max(engine.compression_errors.values())
-            print(f"  weight-projection rel-L2: worst {worst:.3f} "
-                  f"(untrained weights; ADMM training drives this to ~0)")
+        if forms and engine.compression_report is not None:
+            print(f"  {engine.compression_report.summary()}")
+            print("  (untrained weights; ADMM training drives the error to ~0)")
     print("OK")
 
 

@@ -3,3 +3,16 @@
 from repro.core.fragments import FragmentSpec  # noqa: F401
 from repro.core.pruning import PruneSpec  # noqa: F401
 from repro.core.quantization import QuantSpec  # noqa: F401
+
+# The unified compression API lives in repro.forms; re-exported here lazily
+# (PEP 562) so `repro.core.FormsSpec` works without an import cycle —
+# repro.forms itself imports the core submodules above.
+_FORMS_EXPORTS = ("FormsSpec", "FormsLinearParams", "compress_tree",
+                  "decompress_tree")
+
+
+def __getattr__(name):
+    if name in _FORMS_EXPORTS:
+        import repro.forms as _forms
+        return getattr(_forms, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -37,6 +37,7 @@ from repro.core import polarization as polmod
 from repro.core import pruning as prunemod
 from repro.core import quantization as quantmod
 from repro.core.fragments import FragmentSpec
+from repro.core.paths import path_str as _path_str
 from repro.core.pruning import PruneSpec
 from repro.core.quantization import QuantSpec
 
@@ -63,8 +64,20 @@ def default_constraints(
     quantize: Optional[QuantSpec] = QuantSpec(bits=8),
     rho: float = 1e-3,
     sign_rule: str = "sum",
+    forms: Optional[Any] = None,   # a repro.forms.FormsSpec
 ) -> ConstraintFn:
-    """Constraint policy: apply to every crossbar-mappable weight."""
+    """Constraint policy: apply to every crossbar-mappable weight.
+
+    Prefer passing ``forms`` (a :class:`repro.forms.FormsSpec`): it supplies
+    the polarize/quantize constraint sets and the sign rule from the single
+    compression descriptor, so training constrains toward exactly the grid
+    the serving compression (``compress_tree``) will project onto.  The
+    ``polarize``/``quantize`` pair remains for legacy call sites.
+    """
+    if forms is not None:
+        polarize = forms.fragment
+        quantize = forms.quant
+        sign_rule = forms.rule
 
     def fn(path: str, shape: Tuple[int, ...]) -> Optional[LayerConstraint]:
         if not fragmod.is_crossbar_weight(path, shape):
@@ -76,19 +89,9 @@ def default_constraints(
 
 
 # ---------------------------------------------------------------------------
-# Path utilities — ADMM state is keyed by flattened parameter paths.
+# Path utilities — ADMM state is keyed by flattened parameter paths
+# (the canonical path_str lives in repro.core.paths).
 # ---------------------------------------------------------------------------
-
-def _path_str(path) -> str:
-    parts = []
-    for p in path:
-        if hasattr(p, "key"):
-            parts.append(str(p.key))
-        elif hasattr(p, "idx"):
-            parts.append(str(p.idx))
-        else:
-            parts.append(str(p))
-    return "/".join(parts)
 
 
 def iter_weights(params: PyTree):

@@ -1,54 +1,35 @@
-"""FormsLinear: the paper's technique as a first-class layer of the framework.
+"""DEPRECATED: ``repro.core.forms_layer`` moved to :mod:`repro.forms`.
 
-A FORMS-compressed linear layer stores, per weight matrix:
+This module is a thin compatibility shim.  The ``(FragmentSpec, QuantSpec)``
+pair signatures are deprecated in favour of the single :class:`FormsSpec`
+descriptor; every function below emits a ``DeprecationWarning`` and delegates
+to :mod:`repro.forms` (see DESIGN.md for migration notes).
 
-* ``mags``  (K, N) uint8   — magnitude codes (the crossbar cells);
-* ``signs`` (K/m, N) int8  — fragment signs (the 1R sign indicator);
-* ``scale`` (1, N) f32     — dequantization scale.
-
-``from_dense`` converts a trained (ideally ADMM-polarized) float matrix; if
-the matrix is not perfectly polarized the conversion projects it (reporting
-the projection error), so FormsLinear is total.  ``apply`` runs the MVM via
-the Pallas ``polarized_matmul`` kernel (or its oracle off-TPU), and
-``apply_simulated`` runs the bit-serial crossbar simulator for fidelity /
-EIC measurements.
-
-Storage: vs a dense bf16 matrix, FORMS storage is 8 bits + 1/m sign bits +
-per-column scale => ~2x smaller and sign-free in the hot layout (DESIGN.md §2).
+Old                                          New
+-------------------------------------------  --------------------------------
+``from_dense(w, FragmentSpec, QuantSpec)``   ``forms.from_dense(w, FormsSpec)``
+``apply(p, x, prefer_ref=...)``              ``forms.apply(p, x, FormsSpec)``
+``apply_simulated(p, x, input_bits=...)``    ``forms.apply_simulated(p, x, FormsSpec)``
+``to_dense(p)``                              ``forms.to_dense(p)``
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import polarization as polmod
-from repro.core import quantization as quantmod
-from repro.core.fragments import FragmentSpec, pad_rows
+from repro import forms as _forms
+from repro.core.fragments import FragmentSpec
 from repro.core.quantization import QuantSpec
-from repro.kernels import ops as kops
+from repro.forms import FormsLinearParams, FormsSpec  # noqa: F401 (re-export)
 
 
-@dataclasses.dataclass
-class FormsLinearParams:
-    """Pytree of FORMS-compressed weights for one linear layer."""
-
-    mags: jax.Array    # (Kp, N) uint8 magnitude codes (K padded to m)
-    signs: jax.Array   # (Kp/m, N) int8 in {+1, -1}
-    scale: jax.Array   # (1, N) float32
-    k: int             # unpadded input dim (static)
-    m: int             # fragment size (static)
-
-    @property
-    def n(self) -> int:
-        return self.mags.shape[1]
-
-
-jax.tree_util.register_dataclass(
-    FormsLinearParams, data_fields=["mags", "signs", "scale"],
-    meta_fields=["k", "m"])
+def _warn(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.forms_layer.{old} is deprecated; use {new} "
+        "(see DESIGN.md migration notes)",
+        DeprecationWarning, stacklevel=3)
 
 
 def from_dense(
@@ -56,60 +37,32 @@ def from_dense(
     frag: FragmentSpec = FragmentSpec(m=8),
     quant: QuantSpec = QuantSpec(bits=8),
 ) -> Tuple[FormsLinearParams, jax.Array]:
-    """Convert a dense (K, N) matrix; returns (params, relative L2 error)."""
-    w = w.astype(jnp.float32)
-    wp = pad_rows(w, frag.m)
-    polarized, signs = polmod.project_polarize(wp, frag.m, rule="energy")
-    scale = quantmod.scale_for(polarized, quant)
-    codes, _ = quantmod.quantize_codes(polarized, quant, scale)
-    mags = jnp.abs(codes).astype(jnp.uint8 if quant.bits <= 8 else jnp.int32)
-    recon = (mags.astype(jnp.float32)
-             * jnp.repeat(signs, frag.m, axis=0)[: wp.shape[0]] * scale)
-    err = jnp.linalg.norm(recon[: w.shape[0]] - w) / jnp.maximum(
-        jnp.linalg.norm(w), 1e-12)
-    params = FormsLinearParams(mags=mags, signs=signs.astype(jnp.int8),
-                               scale=scale.reshape(1, -1).astype(jnp.float32),
-                               k=int(w.shape[0]), m=frag.m)
-    return params, err
+    """Deprecated: use ``repro.forms.from_dense(w, FormsSpec(...))``."""
+    _warn("from_dense(w, FragmentSpec, QuantSpec)",
+          "repro.forms.from_dense(w, FormsSpec)")
+    return _forms.from_dense(w, FormsSpec.from_legacy(frag, quant))
 
 
 def to_dense(p: FormsLinearParams) -> jax.Array:
-    """Reconstruct the float weight matrix (K, N)."""
-    sign_grid = jnp.repeat(p.signs.astype(jnp.float32), p.m, axis=0)
-    return (p.mags.astype(jnp.float32) * sign_grid * p.scale)[: p.k]
+    """Deprecated: use ``repro.forms.to_dense``."""
+    _warn("to_dense", "repro.forms.to_dense")
+    return _forms.to_dense(p)
 
 
 def apply(p: FormsLinearParams, x: jax.Array,
           prefer_ref: Optional[bool] = None) -> jax.Array:
-    """y = x @ W_forms for x of shape (..., K)."""
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    pad = p.mags.shape[0] - p.k
-    if pad:
-        x2 = jnp.pad(x2, ((0, 0), (0, pad)))
-    y = kops.polarized_matmul(x2, p.mags, p.signs.astype(jnp.float32),
-                              p.scale, m=p.m, prefer_ref=prefer_ref)
-    return y.reshape(*lead, p.n)
+    """Deprecated: use ``repro.forms.apply(p, x, FormsSpec(...))``."""
+    _warn("apply", "repro.forms.apply")
+    return _forms.apply(p, x, FormsSpec(m=p.m, prefer_ref=prefer_ref))
 
 
 def apply_simulated(
     p: FormsLinearParams, x: jax.Array, *, input_bits: int = 16,
     adc_bits: Optional[int] = None, quant: QuantSpec = QuantSpec(bits=8),
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Bit-serial crossbar simulation; returns (y, eic, x_scale).
-
-    y is dequantized float output; eic (rows, fragments) are the effective
-    input cycles consumed (the zero-skipping observable).
-    """
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    pad = p.mags.shape[0] - p.k
-    if pad:
-        x2 = jnp.pad(x2, ((0, 0), (0, pad)))
-    x_codes, x_scale = quantmod.quantize_activations(x2, input_bits)
-    cells = quantmod.slice_to_cells(p.mags, quant)
-    acc, eic = kops.bitserial_crossbar(
-        x_codes, cells, p.signs.astype(jnp.int32), m=p.m,
-        input_bits=input_bits, cell_bits=quant.cell_bits, adc_bits=adc_bits)
-    y = acc.astype(jnp.float32) * x_scale * p.scale
-    return y.reshape(*lead, p.n), eic, x_scale
+    """Deprecated: use ``repro.forms.apply_simulated(p, x, FormsSpec(...))``."""
+    _warn("apply_simulated", "repro.forms.apply_simulated")
+    spec = FormsSpec(m=p.m, bits=quant.bits, cell_bits=quant.cell_bits,
+                     per_channel=quant.per_channel, input_bits=input_bits,
+                     adc_bits=adc_bits)
+    return _forms.apply_simulated(p, x, spec)

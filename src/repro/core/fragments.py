@@ -163,7 +163,10 @@ def is_crossbar_weight(path: str, shape: Tuple[int, ...]) -> bool:
     lname = path.lower()
     if any(t in lname for t in ("embed", "bias", "scale", "norm", "a_log",
                                 "dt_", "conv_w", "conv_b", "conv1d", "lambda",
-                                "d_skip", "/bf", "/ro", "/rz", "/ri", "/rf")):
+                                "d_skip", "/bf", "/ro", "/rz", "/ri", "/rf",
+                                # QKV / MLP bias vectors (scan-stacked they are
+                                # rank 2 but are digital-domain, not MVMs)
+                                "/bq", "/bk", "/bv", "b_up", "b_down")):
         return False
     if len(shape) in (3, 4):
         return True

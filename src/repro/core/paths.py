@@ -1,0 +1,22 @@
+"""Canonical pytree-path formatting.
+
+ADMM constraint tables, FORMS compression reports and serving quantization
+all key weights by the same ``"blocks/attn/wq"``-style flattened path — this
+is the one definition they share, so the key formats cannot drift.
+"""
+from __future__ import annotations
+
+
+def path_str(path) -> str:
+    """Render a jax tree_util key path as a ``/``-joined string."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)

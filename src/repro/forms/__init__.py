@@ -1,0 +1,29 @@
+"""repro.forms — the unified FORMS compression API.
+
+One spec, one compressed representation, one pipeline:
+
+* :class:`FormsSpec` — the single frozen descriptor (fragment geometry +
+  quantization grid + sign rule + bit-serial and backend/tiling hints).
+* :class:`FormsLinearParams` — the compressed weight pytree (uint8 magnitude
+  codes, int8 fragment signs, f32 scales) with :func:`from_dense` /
+  :func:`to_dense` / :func:`apply` / :func:`apply_simulated`.
+* :func:`compress_tree` / :func:`decompress_tree` — whole-model compression
+  producing pytrees whose crossbar leaves are real ``FormsLinearParams``,
+  consumed directly by ``models/layers.linear`` and the serving engine.
+
+The deprecated entry points (``repro.core.forms_layer``,
+``repro.serving.engine.forms_compress_params``) delegate here and emit
+``DeprecationWarning``; see DESIGN.md for migration notes.
+"""
+from repro.forms.linear import (FormsLinearParams, apply, apply_simulated,
+                                default_spec, from_dense, to_dense)
+from repro.forms.spec import FormsSpec
+from repro.forms.tree import (CompressedParams, CompressReport,
+                              compress_tree, compressed_paths,
+                              decompress_tree)
+
+__all__ = [
+    "FormsSpec", "FormsLinearParams", "from_dense", "to_dense", "apply",
+    "apply_simulated", "default_spec", "compress_tree", "decompress_tree",
+    "compressed_paths", "CompressReport", "CompressedParams",
+]

@@ -1,0 +1,197 @@
+"""FormsLinear: the paper's compressed weight representation as a pytree.
+
+A FORMS-compressed linear layer stores, per weight matrix:
+
+* ``mags``  (Kp, N) uint8  — magnitude codes (the crossbar cells);
+* ``signs`` (Kp/m, N) int8 — fragment signs (the 1R sign indicator);
+* ``scale`` (1, N) f32     — dequantization scale.
+
+``from_dense`` converts a trained (ideally ADMM-polarized) float matrix; if
+the matrix is not perfectly polarized the conversion projects it (reporting
+the projection error), so FormsLinear is total.  ``apply`` runs the MVM via
+the Pallas ``polarized_matmul`` kernel (or its oracle off-TPU), and
+``apply_simulated`` runs the bit-serial crossbar simulator for fidelity /
+EIC measurements.  All entry points take a single :class:`FormsSpec`.
+
+Scan-stacked weights (leading layer axis) and conv kernels survive as
+``FormsLinearParams`` too: :func:`repro.forms.tree.compress_tree` vmaps the
+conversion over the layer axis and records the conv view in ``orig_shape`` /
+``policy`` so :func:`to_dense` is an exact inverse.
+
+Storage: vs a dense bf16 matrix, FORMS storage is 8 bits + 1/m sign bits +
+per-column scale => ~2x smaller and sign-free in the hot layout (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import polarization as polmod
+from repro.core import quantization as quantmod
+from repro.core.fragments import matrix_to_conv, pad_rows
+from repro.forms.spec import FormsSpec
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class FormsLinearParams:
+    """Pytree of FORMS-compressed weights for one linear layer.
+
+    ``mags``/``signs``/``scale`` may carry extra leading batch axes (scan-
+    stacked layers); ``k``/``m`` always describe the trailing 2-D matrix.
+    ``orig_shape``/``policy`` record the pre-compression view of conv kernels
+    so :func:`to_dense` can invert the crossbar reshape exactly; ``out_dtype``
+    is the dtype of the dense tensor the compression consumed.
+    """
+
+    mags: jax.Array    # (..., Kp, N) uint8 magnitude codes (K padded to m)
+    signs: jax.Array   # (..., Kp/m, N) int8 in {+1, -1}
+    scale: jax.Array   # (..., 1, N) float32
+    k: int             # unpadded input dim (static)
+    m: int             # fragment size (static)
+    orig_shape: Optional[Tuple[int, ...]] = None  # conv (kh, kw, cin, cout)
+    policy: str = "W"                             # conv row-ordering policy
+    out_dtype: str = "float32"                    # dense dtype on decompress
+
+    @property
+    def n(self) -> int:
+        return self.mags.shape[-1]
+
+
+jax.tree_util.register_dataclass(
+    FormsLinearParams, data_fields=["mags", "signs", "scale"],
+    meta_fields=["k", "m", "orig_shape", "policy", "out_dtype"])
+
+
+# Ambient spec for call sites that cannot thread one explicitly (the model
+# layers consume compressed leaves from inside family-agnostic decode/forward
+# code).  Set by the serving engine around tracing; read at trace time, so
+# the backend/tiling hints bake into the jitted decode step.
+_DEFAULT_SPEC: Optional[FormsSpec] = None
+
+
+@contextlib.contextmanager
+def default_spec(spec: Optional[FormsSpec]) -> Iterator[None]:
+    """Make ``spec`` the ambient spec for :func:`apply` calls without one.
+
+    Only the backend/tiling hints are taken from the ambient spec — ``m`` is
+    always adapted to the params being applied (per-leaf fragment sizes stay
+    authoritative).
+    """
+    global _DEFAULT_SPEC
+    prev, _DEFAULT_SPEC = _DEFAULT_SPEC, spec
+    try:
+        yield
+    finally:
+        _DEFAULT_SPEC = prev
+
+
+def _resolve_spec(p: FormsLinearParams, spec: Optional[FormsSpec]) -> FormsSpec:
+    if spec is not None:
+        if spec.m != p.m:
+            raise ValueError(f"spec.m={spec.m} does not match params m={p.m}")
+        return spec
+    if _DEFAULT_SPEC is not None:
+        return dataclasses.replace(_DEFAULT_SPEC, m=p.m)
+    return FormsSpec(m=p.m)
+
+
+def _flatten_pad(x: jax.Array, kp: int) -> Tuple[jax.Array, Tuple[int, ...]]:
+    """Flatten leading dims of ``(..., K)`` to 2-D f32 and zero-pad K to Kp."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    pad = kp - x2.shape[-1]
+    if pad:
+        x2 = jnp.pad(x2, ((0, 0), (0, pad)))
+    return x2, lead
+
+
+def from_dense(w: jax.Array, spec: FormsSpec = FormsSpec()
+               ) -> Tuple[FormsLinearParams, jax.Array]:
+    """Convert a dense (K, N) matrix; returns (params, relative L2 error).
+
+    The conversion projects onto the polarized set P (``spec.rule``) and the
+    magnitude grid Q (``spec.bits``); for ADMM-trained weights both
+    projections are no-ops and the error is ~0.
+    """
+    w = w.astype(jnp.float32)
+    wp = pad_rows(w, spec.m)
+    polarized, signs = polmod.project_polarize(wp, spec.m, rule=spec.rule)
+    quant = spec.quant
+    scale = quantmod.scale_for(polarized, quant)
+    codes, _ = quantmod.quantize_codes(polarized, quant, scale)
+    mags = jnp.abs(codes).astype(jnp.uint8 if spec.bits <= 8 else jnp.int32)
+    recon = (mags.astype(jnp.float32)
+             * jnp.repeat(signs, spec.m, axis=0)[: wp.shape[0]] * scale)
+    err = jnp.linalg.norm(recon[: w.shape[0]] - w) / jnp.maximum(
+        jnp.linalg.norm(w), 1e-12)
+    params = FormsLinearParams(mags=mags, signs=signs.astype(jnp.int8),
+                               scale=scale.reshape(1, -1).astype(jnp.float32),
+                               k=int(w.shape[0]), m=spec.m, policy=spec.policy)
+    return params, err
+
+
+def _to_dense_2d(mags: jax.Array, signs: jax.Array, scale: jax.Array,
+                 k: int, m: int) -> jax.Array:
+    sign_grid = jnp.repeat(signs.astype(jnp.float32), m, axis=0)
+    return (mags.astype(jnp.float32) * sign_grid * scale)[:k]
+
+
+def to_dense(p: FormsLinearParams) -> jax.Array:
+    """Reconstruct the dense weight tensor — exact inverse of compression.
+
+    Returns the (K, N) matrix, the scan-stacked (..., K, N) tensor, or the
+    conv kernel ``orig_shape`` view, cast back to ``out_dtype``.
+    """
+    fn = lambda mg, sg, sc: _to_dense_2d(mg, sg, sc, p.k, p.m)
+    for _ in range(p.mags.ndim - 2):
+        fn = jax.vmap(fn)
+    dense = fn(p.mags, p.signs, p.scale)
+    if p.orig_shape is not None and len(p.orig_shape) == 4:
+        dense = matrix_to_conv(dense, p.orig_shape, p.policy)
+    return dense.astype(jnp.dtype(p.out_dtype))
+
+
+def apply(p: FormsLinearParams, x: jax.Array,
+          spec: Optional[FormsSpec] = None) -> jax.Array:
+    """y = x @ W_forms for x of shape (..., K) via the polarized-matmul kernel.
+
+    Requires an unstacked 2-D weight (inside a layer scan the stacked leaves
+    arrive pre-sliced).  ``spec`` supplies backend/tiling hints only; the
+    math is fully described by ``p``.
+    """
+    if p.mags.ndim != 2:
+        raise ValueError(
+            f"apply() needs a 2-D weight, got mags of rank {p.mags.ndim}; "
+            "stacked/conv leaves are consumed via to_dense()")
+    spec = _resolve_spec(p, spec)
+    x2, lead = _flatten_pad(x, p.mags.shape[0])
+    y = kops.polarized_matmul(x2, p.mags, p.signs.astype(jnp.float32),
+                              p.scale, spec=spec)
+    return y.reshape(*lead, p.n)
+
+
+def apply_simulated(
+    p: FormsLinearParams, x: jax.Array, spec: Optional[FormsSpec] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Bit-serial crossbar simulation; returns (y, eic, x_scale).
+
+    y is dequantized float output; eic (rows, fragments) are the effective
+    input cycles consumed (the zero-skipping observable).  ``spec`` provides
+    ``input_bits``/``adc_bits``/``cell_bits`` and tiling hints.
+    """
+    if p.mags.ndim != 2:
+        raise ValueError(
+            f"apply_simulated() needs a 2-D weight, got rank {p.mags.ndim}")
+    spec = _resolve_spec(p, spec)
+    x2, lead = _flatten_pad(x, p.mags.shape[0])
+    x_codes, x_scale = quantmod.quantize_activations(x2, spec.input_bits)
+    cells = quantmod.slice_to_cells(p.mags, spec.quant)
+    acc, eic = kops.bitserial_crossbar(
+        x_codes, cells, p.signs.astype(jnp.int32), spec=spec)
+    y = acc.astype(jnp.float32) * x_scale * p.scale
+    return y.reshape(*lead, p.n), eic, x_scale

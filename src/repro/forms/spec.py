@@ -1,0 +1,135 @@
+"""FormsSpec: the single compression descriptor of the FORMS pipeline.
+
+One frozen dataclass subsumes the fragment geometry (``FragmentSpec``), the
+ReRAM quantization grid (``QuantSpec``) and the backend/tiling hints that used
+to travel as loose per-call kwargs through ``kernels/ops.py``.  Every entry
+point of :mod:`repro.forms` — ``from_dense``, ``apply``, ``apply_simulated``,
+``compress_tree`` — takes exactly one ``FormsSpec``; nothing downstream passes
+``(FragmentSpec, QuantSpec)`` pairs or ``(mags, signs, scale, m)`` tuples.
+
+This is deliberately the place where future per-block knobs hang: block-wise
+mixed precision (arXiv:2310.12182) and variation-resilient encoding (VECOM,
+arXiv:2312.11042) both specialize a compression descriptor per weight block —
+``dataclasses.replace(spec, bits=...)`` is the extension point.
+
+See DESIGN.md for the full field reference and the migration notes for the
+deprecated ``FragmentSpec``/``QuantSpec`` entry points.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.fragments import FragmentSpec
+from repro.core.quantization import QuantSpec
+
+VALID_RULES = ("sum", "energy")
+
+
+@dataclasses.dataclass(frozen=True)
+class FormsSpec:
+    """Static description of one FORMS compression configuration.
+
+    Fragment geometry (paper §III-B):
+      m: fragment size — rows per logical sub-array column (paper: 4/8/16).
+      policy: conv row-ordering policy ("W", "H" or "C" major, paper Fig 3).
+      n_sub_cols: columns per logical sub-array (crossbar mapping only).
+
+    Quantization grid (paper §III-C):
+      bits: magnitude bits per weight (paper default 8).
+      cell_bits: bits per ReRAM cell (paper default 2).
+      per_channel: per-output-column scale (axis=1) vs per-tensor.
+
+    Polarization:
+      rule: sign-election rule — "sum" (paper Eq. 2) or "energy" (the exact
+        Euclidean projection; default, matches the serving path).
+
+    Bit-serial simulation (paper §IV-B):
+      input_bits: DAC input stream width (paper: 16).
+      adc_bits: ADC resolution; None = ideal (no clipping).
+
+    Backend / tiling hints (kernels/ops.py dispatch):
+      prefer_ref: route to the jnp oracle instead of the Pallas kernel;
+        None = automatic (oracle off-TPU).
+      bm, bn, bk: polarized-matmul kernel tile sizes.
+      sim_bm, sim_bn: bit-serial crossbar kernel tile sizes.
+    """
+
+    m: int = 8
+    policy: str = "W"
+    n_sub_cols: int = 128
+
+    bits: int = 8
+    cell_bits: int = 2
+    per_channel: bool = True
+
+    rule: str = "energy"
+
+    input_bits: int = 16
+    adc_bits: Optional[int] = None
+
+    prefer_ref: Optional[bool] = None
+    bm: int = 128
+    bn: int = 128
+    bk: int = 512
+    sim_bm: int = 32
+    sim_bn: int = 128
+
+    def __post_init__(self):
+        # fragment/quant validation is delegated to the view constructors so
+        # the rules live in exactly one place (fragments.py / quantization.py)
+        _ = self.fragment
+        _ = self.quant
+        if self.rule not in VALID_RULES:
+            raise ValueError(
+                f"sign rule must be one of {VALID_RULES}, got {self.rule!r}")
+        if self.bits < 1:
+            raise ValueError(f"bits must be >= 1, got {self.bits}")
+        if self.input_bits < 1:
+            raise ValueError(f"input_bits must be >= 1, got {self.input_bits}")
+        if self.adc_bits is not None and self.adc_bits < 1:
+            raise ValueError(f"adc_bits must be >= 1 or None, got {self.adc_bits}")
+        for name in ("bm", "bn", "bk", "sim_bm", "sim_bn"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"tile size {name} must be >= 1, "
+                                 f"got {getattr(self, name)}")
+
+    # -- views onto the legacy spec types (internal / crossbar-model use) ----
+
+    @property
+    def fragment(self) -> FragmentSpec:
+        """The fragment-geometry slice of this spec as a ``FragmentSpec``."""
+        return FragmentSpec(m=self.m, policy=self.policy,
+                            n_sub_cols=self.n_sub_cols)
+
+    @property
+    def quant(self) -> QuantSpec:
+        """The quantization-grid slice of this spec as a ``QuantSpec``."""
+        return QuantSpec(bits=self.bits, cell_bits=self.cell_bits,
+                         per_channel=self.per_channel)
+
+    @classmethod
+    def from_legacy(cls, frag: Optional[FragmentSpec] = None,
+                    quant: Optional[QuantSpec] = None, **kw) -> "FormsSpec":
+        """Build a ``FormsSpec`` from the deprecated spec pair."""
+        frag = frag if frag is not None else FragmentSpec()
+        quant = quant if quant is not None else QuantSpec()
+        return cls(m=frag.m, policy=frag.policy, n_sub_cols=frag.n_sub_cols,
+                   bits=quant.bits, cell_bits=quant.cell_bits,
+                   per_channel=quant.per_channel, **kw)
+
+    # -- derived quantities (delegated to the canonical spec types) ----------
+
+    @property
+    def levels(self) -> int:
+        return self.quant.levels
+
+    @property
+    def cells_per_weight(self) -> int:
+        return self.quant.cells_per_weight
+
+    def num_fragments(self, k: int) -> int:
+        return self.fragment.num_fragments(k)
+
+    def padded_k(self, k: int) -> int:
+        return self.fragment.padded_k(k)

@@ -1,0 +1,146 @@
+"""Whole-pytree FORMS compression: ``compress_tree`` / ``decompress_tree``.
+
+``compress_tree(params, spec)`` walks a model parameter pytree and replaces
+every crossbar-mappable weight leaf with an actual
+:class:`~repro.forms.linear.FormsLinearParams` (uint8 magnitudes + int8
+fragment signs + f32 scales) — the deployment artifact the paper describes,
+not a float fake-quant projection.  Scan-stacked (L, K, N) weights are
+converted with a vmapped ``from_dense`` (fragments never cross the layer
+axis); conv (kh, kw, cin, cout) kernels are viewed through the polarization
+policy reshape and remember their original shape, so
+``decompress_tree(compress_tree(p, spec))`` reproduces the projected weights
+*exactly* (same values as projecting onto P then Q at the recorded scales).
+
+The compressed tree is a first-class pytree: it jits, scans, shards and
+checkpoints like the dense tree it replaces (``checkpoint/manager`` stores
+the uint8 magnitudes verbatim), and ``models/layers.linear`` consumes its
+leaves through the polarized-matmul kernel on the serving hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fragments import conv_to_matrix, is_crossbar_weight
+from repro.core.paths import path_str as _path_str
+from repro.forms.linear import FormsLinearParams, from_dense, to_dense
+from repro.forms.spec import FormsSpec
+
+CompressedParams = Any  # a params pytree whose weight leaves are FormsLinearParams
+
+
+@dataclasses.dataclass
+class CompressReport:
+    """What ``compress_tree`` did: per-leaf errors and storage accounting."""
+
+    errors: Dict[str, float]          # path -> relative L2 projection error
+    num_compressed: int = 0
+    num_skipped: int = 0              # array leaves left dense (non-crossbar)
+    bytes_dense: int = 0              # bytes of the leaves that were compressed
+    bytes_compressed: int = 0         # bytes of their FORMS representation
+
+    @property
+    def ratio(self) -> float:
+        """Storage compression factor over the compressed leaves."""
+        return self.bytes_dense / max(self.bytes_compressed, 1)
+
+    @property
+    def max_error(self) -> float:
+        return max(self.errors.values()) if self.errors else 0.0
+
+    def summary(self) -> str:
+        return (f"{self.num_compressed} leaves compressed "
+                f"({self.num_skipped} left dense), "
+                f"{self.bytes_dense / 1e6:.2f} MB -> "
+                f"{self.bytes_compressed / 1e6:.2f} MB "
+                f"({self.ratio:.2f}x), max rel-L2 err {self.max_error:.4f}")
+
+
+def _is_forms_leaf(x) -> bool:
+    return isinstance(x, FormsLinearParams)
+
+
+# rank-4 leaves with these final path segments are scan-stacked expert
+# tensors (L, E, in, out) — one crossbar matrix per (layer, expert) — not
+# conv kernels (models/moe.py naming)
+EXPERT_WEIGHT_NAMES = ("w_gate", "w_up", "w_down")
+
+
+def _compress_leaf(pstr: str, leaf: jax.Array,
+                   spec: FormsSpec) -> FormsLinearParams:
+    """Convert one 2-D / scan-stacked 3-D / conv or expert 4-D weight leaf."""
+    name = pstr.rsplit("/", 1)[-1]
+    if leaf.ndim == 3:       # scan-stacked (L, in, out): convert per layer
+        fp, _ = jax.vmap(lambda w: from_dense(w, spec))(leaf)
+    elif leaf.ndim == 4 and name in EXPERT_WEIGHT_NAMES:
+        # stacked experts (L, E, in, out): per-(layer, expert) conversion
+        fp, _ = jax.vmap(jax.vmap(lambda w: from_dense(w, spec)))(leaf)
+    elif leaf.ndim == 4:     # conv (kh, kw, cin, cout): policy reshape
+        fp, _ = from_dense(conv_to_matrix(leaf, spec.policy), spec)
+        fp = dataclasses.replace(fp, orig_shape=tuple(leaf.shape))
+    else:
+        fp, _ = from_dense(leaf, spec)
+    return dataclasses.replace(fp, out_dtype=str(leaf.dtype))
+
+
+def compress_tree(
+    params: Any,
+    spec: FormsSpec = FormsSpec(),
+    predicate: Callable[[str, Tuple[int, ...]], bool] = is_crossbar_weight,
+) -> Tuple[CompressedParams, CompressReport]:
+    """Compress every crossbar-mappable weight of a params pytree.
+
+    Returns ``(compressed, report)``.  ``compressed`` has the same tree
+    structure with weight leaves replaced by ``FormsLinearParams``; all other
+    leaves pass through untouched.  Already-compressed leaves are left alone,
+    so the function is idempotent.  ``predicate(path, shape)`` selects the
+    leaves to compress (default: the shared crossbar-weight heuristic).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=_is_forms_leaf)
+    report = CompressReport(errors={})
+    new_leaves = []
+    for path, leaf in flat:
+        pstr = _path_str(path)
+        if (_is_forms_leaf(leaf) or not hasattr(leaf, "ndim")
+                or not predicate(pstr, tuple(leaf.shape))):
+            if hasattr(leaf, "ndim") and not _is_forms_leaf(leaf):
+                report.num_skipped += 1
+            new_leaves.append(leaf)
+            continue
+        fp = _compress_leaf(pstr, leaf, spec)
+        recon = to_dense(fp)
+        err = float(jnp.linalg.norm(recon - leaf) /
+                    jnp.maximum(jnp.linalg.norm(leaf), 1e-12))
+        report.errors[pstr] = err
+        report.num_compressed += 1
+        report.bytes_dense += leaf.size * leaf.dtype.itemsize
+        report.bytes_compressed += (fp.mags.size * fp.mags.dtype.itemsize
+                                    + fp.signs.size * fp.signs.dtype.itemsize
+                                    + fp.scale.size * fp.scale.dtype.itemsize)
+        new_leaves.append(fp)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), report
+
+
+def decompress_tree(params: CompressedParams) -> Any:
+    """Exact inverse of :func:`compress_tree`.
+
+    Replaces every ``FormsLinearParams`` leaf with its dense reconstruction
+    (original shape and dtype); all other leaves pass through untouched.  The
+    result equals the dense tree projected onto the polarized+quantized sets.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=_is_forms_leaf)
+    new_leaves = [to_dense(leaf) if _is_forms_leaf(leaf) else leaf
+                  for _, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def compressed_paths(params: CompressedParams) -> Dict[str, FormsLinearParams]:
+    """Map path -> FormsLinearParams for every compressed leaf (inspection)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=_is_forms_leaf)
+    return {_path_str(p): l for p, l in flat if _is_forms_leaf(l)}

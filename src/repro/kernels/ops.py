@@ -5,11 +5,17 @@ Each op pads inputs to kernel tile multiples, calls the Pallas kernel
 everywhere), and unpads.  ``prefer_ref=True`` (default on CPU for large
 shapes) routes to the jnp oracle, which XLA compiles to the same math — the
 kernels remain the TPU target, the oracle the portable fast path.
+
+Every op takes an optional ``spec`` (a :class:`repro.forms.FormsSpec`) that
+supplies fragment size, bit widths, backend preference and tile sizes in one
+place — the loose per-call kwargs remain for low-level and test use but new
+call sites should thread a spec.  (Duck-typed on purpose: kernels sit below
+``repro.forms`` in the import graph.)
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,8 +48,15 @@ def polarized_matmul(
     x: jax.Array, mags: jax.Array, signs: jax.Array, scale: jax.Array,
     *, m: int = 8, prefer_ref: Optional[bool] = None,
     bm: int = 128, bn: int = 128, bk: int = 512,
+    spec: Optional[Any] = None,
 ) -> jax.Array:
-    """y[M,N] = x[M,K] @ (signs*mags)[K,N] * scale[1,N]."""
+    """y[M,N] = x[M,K] @ (signs*mags)[K,N] * scale[1,N].
+
+    ``spec`` (a FormsSpec) overrides ``m``/``prefer_ref``/``bm``/``bn``/``bk``.
+    """
+    if spec is not None:
+        m, prefer_ref = spec.m, spec.prefer_ref
+        bm, bn, bk = spec.bm, spec.bn, spec.bk
     M, K = x.shape
     _, N = mags.shape
     if prefer_ref is None:
@@ -72,8 +85,17 @@ def bitserial_crossbar(
     *, m: int = 8, input_bits: int = 16, cell_bits: int = 2,
     adc_bits: Optional[int] = None, prefer_ref: Optional[bool] = None,
     bm: int = 32, bn: int = 128,
+    spec: Optional[Any] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Returns (acc[M,N] int32, eic[M,F] int32)."""
+    """Returns (acc[M,N] int32, eic[M,F] int32).
+
+    ``spec`` (a FormsSpec) overrides ``m``/``input_bits``/``cell_bits``/
+    ``adc_bits``/``prefer_ref`` and the sim tile sizes.
+    """
+    if spec is not None:
+        m, input_bits, cell_bits = spec.m, spec.input_bits, spec.cell_bits
+        adc_bits, prefer_ref = spec.adc_bits, spec.prefer_ref
+        bm, bn = spec.sim_bm, spec.sim_bn
     M, K = x_codes.shape
     C, _, N = cell_planes.shape
     F = K // m
@@ -104,8 +126,14 @@ def bitserial_crossbar(
 def admm_polarize(
     v: jax.Array, *, m: int = 8, rule: str = "sum",
     prefer_ref: Optional[bool] = None, bk: int = 512, bn: int = 256,
+    spec: Optional[Any] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Returns (projected[K,N], signs[F,N]); K is padded internally."""
+    """Returns (projected[K,N], signs[F,N]); K is padded internally.
+
+    ``spec`` (a FormsSpec) overrides ``m``/``rule``/``prefer_ref``.
+    """
+    if spec is not None:
+        m, rule, prefer_ref = spec.m, spec.rule, spec.prefer_ref
     K, N = v.shape
     F = -(-K // m)
     if prefer_ref is None:

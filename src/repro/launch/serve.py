@@ -2,6 +2,10 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --requests 8 --forms
+
+With ``--forms`` the weights are compressed via ``repro.forms.compress_tree``
+and the engine decodes directly on the compressed pytree (uint8 magnitudes +
+fragment signs through the polarized-matmul kernel).
 """
 from __future__ import annotations
 
@@ -13,6 +17,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config, get_reduced
+from repro.forms import FormsSpec
 from repro.models.registry import build
 from repro.serving.engine import Request, ServingEngine
 
@@ -26,18 +31,22 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--forms", action="store_true",
-                    help="project weights onto the FORMS (P, Q) sets first")
+                    help="serve on the FORMS-compressed pytree")
     ap.add_argument("--fragment", type=int, default=8)
     ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--sign-rule", default="energy", choices=("sum", "energy"))
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    spec = (FormsSpec(m=args.fragment, bits=args.bits, rule=args.sign_rule)
+            if args.forms else None)
     engine = ServingEngine(model, params, max_len=args.max_len,
-                           batch_slots=args.slots, forms=args.forms,
-                           fragment=args.fragment, bits=args.bits)
+                           batch_slots=args.slots, spec=spec)
+    if engine.compression_report is not None:
+        print(f"forms: {engine.compression_report.summary()}")
     rng = np.random.RandomState(0)
     reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab_size,
                                               size=rng.randint(2, 6)),

@@ -13,14 +13,29 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.paper_cnns import CNNConfig
+from repro.forms import FormsLinearParams
+from repro.forms import apply as forms_apply
+from repro.forms import to_dense as forms_to_dense
 
 Params = Dict[str, Any]
 
 
-def _conv(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+def _dense(w) -> jax.Array:
+    """Read a weight that may be FORMS-compressed (repro.forms pytrees)."""
+    return forms_to_dense(w) if isinstance(w, FormsLinearParams) else w
+
+
+def _conv(x: jax.Array, w, stride: int = 1) -> jax.Array:
     return jax.lax.conv_general_dilated(
-        x, w, window_strides=(stride, stride), padding="SAME",
+        x, _dense(w), window_strides=(stride, stride), padding="SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _matmul(x: jax.Array, w) -> jax.Array:
+    """FC matmul; compressed weights route through the polarized kernel."""
+    if isinstance(w, FormsLinearParams):
+        return forms_apply(w, x)
+    return x @ w
 
 
 def init(cfg: CNNConfig, key) -> Params:
@@ -98,7 +113,7 @@ def forward(cfg: CNNConfig, params: Params, x: jax.Array,
                 flat = True
             if collect_activations:
                 acts.append((f"fc{i}", x))
-            x = x @ params[f"fc{i}"] + params[f"fc{i}_b"]
+            x = _matmul(x, params[f"fc{i}"]) + params[f"fc{i}_b"]
             if i != len(cfg.arch) - 1:
                 x = jax.nn.relu(x)
     return x, acts
@@ -110,9 +125,13 @@ def crossbar_weight_shapes(cfg: CNNConfig, params: Params) -> List[Tuple[int, in
     for name, w in params.items():
         if name.endswith("_b"):
             continue
-        if w.ndim == 4:
-            kh, kw, cin, cout = w.shape
+        if isinstance(w, FormsLinearParams):
+            shape = w.orig_shape if w.orig_shape is not None else (w.k, w.n)
+        else:
+            shape = tuple(w.shape)
+        if len(shape) == 4:
+            kh, kw, cin, cout = shape
             shapes.append((kh * kw * cin, cout))
-        elif w.ndim == 2:
-            shapes.append(tuple(w.shape))
+        elif len(shape) == 2:
+            shapes.append(tuple(shape))
     return shapes

@@ -20,6 +20,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import constrain, grad_boundary
+from repro.forms import FormsLinearParams
+from repro.forms import apply as forms_apply
+from repro.forms import to_dense as forms_to_dense
 
 Params = Dict[str, jax.Array]
 
@@ -27,16 +30,36 @@ DEFAULT_Q_CHUNK = 1024
 
 
 def wload(p: Params, name: str, dtype) -> jax.Array:
-    """Weight read with transparent int8 dequantization.
+    """Weight read with transparent decompression.
 
     Serving-quantized trees store {"q": int8, "s": f32} per weight
     (serving/quant_weights.py); the dequant multiply fuses into the consuming
-    matmul on TPU, so HBM reads stay int8.
+    matmul on TPU, so HBM reads stay int8.  FORMS-compressed trees store
+    ``FormsLinearParams`` leaves (repro.forms); those are reconstructed
+    in-graph — prefer :func:`linear` on matmul hot paths so the polarized
+    kernel consumes the (mags, signs) factorization directly.
     """
     v = p[name]
     if isinstance(v, dict) and "q" in v:
         return v["q"].astype(dtype) * v["s"].astype(dtype)
+    if isinstance(v, FormsLinearParams):
+        return forms_to_dense(v).astype(dtype)
     return v.astype(dtype)
+
+
+def linear(p: Params, name: str, x: jax.Array, dtype) -> jax.Array:
+    """``x @ W`` where ``W = p[name]`` may be dense, int8-quantized or
+    FORMS-compressed.
+
+    Compressed 2-D weights (including scan-sliced stacked leaves) route
+    through the polarized-matmul kernel so serving consumes the compressed
+    pytree directly; anything else falls back to a dense matmul via
+    :func:`wload`.
+    """
+    v = p[name]
+    if isinstance(v, FormsLinearParams) and v.mags.ndim == 2:
+        return forms_apply(v, x).astype(dtype)
+    return x @ wload(p, name, dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -244,10 +267,9 @@ def attention_block(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
     # grad_boundary keeps the backward cotangent bf16 + seq-sharded
     x = grad_boundary(x, ("batch", "model", None))
     x = constrain(x, "batch", None, None)
-    w = lambda n: wload(p, n, dtype)
-    q = x @ w("wq")
-    k = x @ w("wk")
-    v = x @ w("wv")
+    q = linear(p, "wq", x, dtype)
+    k = linear(p, "wk", x, dtype)
+    v = linear(p, "wv", x, dtype)
     if "bq" in p:
         q = q + p["bq"].astype(dtype)
         k = k + p["bk"].astype(dtype)
@@ -279,7 +301,7 @@ def attention_block(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
         out = decode_attention(q, k_cache, v_cache, cache_pos, window=window)
         new_cache = (k_t, v_t)
     out = out.reshape(b, s, n_heads * hd)
-    out = out @ w("wo")
+    out = linear(p, "wo", out, dtype)
     return constrain(out, "batch", "model", None), new_cache
 
 
@@ -288,16 +310,15 @@ def cross_attention_block(p: Params, x: jax.Array, enc: jax.Array, *,
     """Encoder-decoder cross attention (whisper decoder). MHA, no mask."""
     b, s, d = x.shape
     se = enc.shape[1]
-    w = lambda n: p[n].astype(dtype)
-    q = (x @ w("wq")).reshape(b, s, n_heads, hd)
-    k = (enc @ w("wk")).reshape(b, se, n_heads, hd)
-    v = (enc @ w("wv")).reshape(b, se, n_heads, hd)
+    q = linear(p, "wq", x, dtype).reshape(b, s, n_heads, hd)
+    k = linear(p, "wk", enc, dtype).reshape(b, se, n_heads, hd)
+    v = linear(p, "wv", enc, dtype).reshape(b, se, n_heads, hd)
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
     scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhqs,bshd->bqhd", probs, v.astype(jnp.float32)).astype(dtype)
-    return (out.reshape(b, s, n_heads * hd) @ w("wo"))
+    return linear(p, "wo", out.reshape(b, s, n_heads * hd), dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -313,10 +334,9 @@ def swiglu_init(key, d: int, f: int) -> Params:
 def swiglu(p: Params, x: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
     x = grad_boundary(x, ("batch", "model", None))
     x = constrain(x, "batch", None, None)   # Megatron-SP gather
-    w = lambda n: wload(p, n, dtype)
-    h = jax.nn.silu(x @ w("gate")) * (x @ w("up"))
+    h = jax.nn.silu(linear(p, "gate", x, dtype)) * linear(p, "up", x, dtype)
     h = constrain(h, "batch", None, "model")
-    return constrain(h @ w("down"), "batch", "model", None)
+    return constrain(linear(p, "down", h, dtype), "batch", "model", None)
 
 
 def gelu_mlp_init(key, d: int, f: int) -> Params:
@@ -328,10 +348,10 @@ def gelu_mlp_init(key, d: int, f: int) -> Params:
 def gelu_mlp(p: Params, x: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
     x = grad_boundary(x, ("batch", "model", None))
     x = constrain(x, "batch", None, None)   # Megatron-SP gather
-    w = lambda n: wload(p, n, dtype)
-    h = jax.nn.gelu(x @ w("up") + w("b_up"))
+    h = jax.nn.gelu(linear(p, "up", x, dtype) + wload(p, "b_up", dtype))
     h = constrain(h, "batch", None, "model")
-    return constrain(h @ w("down") + w("b_down"), "batch", "model", None)
+    return constrain(linear(p, "down", h, dtype) + wload(p, "b_down", dtype),
+                     "batch", "model", None)
 
 
 # ---------------------------------------------------------------------------
@@ -346,5 +366,8 @@ def embed_lookup(embed: jax.Array, tokens: jax.Array, dtype=jnp.bfloat16) -> jax
 
 
 def lm_logits(x: jax.Array, head: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
-    logits = x @ head.astype(dtype)
+    if isinstance(head, FormsLinearParams) and head.mags.ndim == 2:
+        logits = forms_apply(head, x).astype(dtype)
+    else:
+        logits = x @ head.astype(dtype)
     return constrain(logits, "batch", None, "model")

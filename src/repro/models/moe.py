@@ -52,10 +52,10 @@ def moe_ffn_init(key, cfg: ModelConfig) -> Params:
 
 def _expert_ffn(p: Params, bufe: jax.Array, dtype) -> jax.Array:
     """Batched per-expert SwiGLU on the dispatched buffer (E, C, d)."""
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", bufe, p["w_gate"].astype(dtype)))
-    h = h * jnp.einsum("ecd,edf->ecf", bufe, p["w_up"].astype(dtype))
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", bufe, L.wload(p, "w_gate", dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", bufe, L.wload(p, "w_up", dtype))
     h = constrain(h, "model", "batch", None)
-    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dtype))
+    out = jnp.einsum("ecf,efd->ecd", h, L.wload(p, "w_down", dtype))
     return constrain(out, "model", "batch", None)
 
 
@@ -76,7 +76,7 @@ def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig, dtype
 
     xt = x.reshape(t, d)
     xt = constrain(xt, "tokens", None)
-    logits = (xt @ p["router"].astype(dtype)).astype(jnp.float32)  # (T, E)
+    logits = L.linear(p, "router", xt, dtype).astype(jnp.float32)  # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
     gates, idx = jax.lax.top_k(probs, k)                            # (T, K)
     gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
@@ -116,9 +116,9 @@ def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig, dtype
         y = y_tk.reshape(t, k, d).sum(axis=1)
 
     if cfg.num_shared_experts:
-        hs = jax.nn.silu(xt.astype(dtype) @ p["shared_gate"].astype(dtype))
-        hs = hs * (xt.astype(dtype) @ p["shared_up"].astype(dtype))
-        y = y + hs @ p["shared_down"].astype(dtype)
+        hs = jax.nn.silu(L.linear(p, "shared_gate", xt.astype(dtype), dtype))
+        hs = hs * L.linear(p, "shared_up", xt.astype(dtype), dtype)
+        y = y + L.linear(p, "shared_down", hs, dtype)
 
     y = constrain(y, "tokens", None)
     return constrain(y.reshape(b, s, d), "batch", "model", None), aux
@@ -153,16 +153,16 @@ def _mla_qkv_full(p: Params, x, cfg: ModelConfig, positions, dtype):
     qk_rope, qk_nope, dv = m.qk_rope_head_dim, m.qk_nope_head_dim, m.v_head_dim
 
     x = constrain(x, "batch", None, None)   # Megatron-SP gather
-    cq = L.rmsnorm(x @ p["q_down"].astype(dtype), p["q_norm"], cfg.norm_eps)
-    q = (cq @ p["q_up"].astype(dtype)).reshape(b, s, h, qk_nope + qk_rope)
+    cq = L.rmsnorm(L.linear(p, "q_down", x, dtype), p["q_norm"], cfg.norm_eps)
+    q = L.linear(p, "q_up", cq, dtype).reshape(b, s, h, qk_nope + qk_rope)
     q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
     q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
 
-    kv = x @ p["kv_down"].astype(dtype)
+    kv = L.linear(p, "kv_down", x, dtype)
     c_kv = L.rmsnorm(kv[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
     k_rope = L.apply_rope(kv[..., m.kv_lora_rank:], positions, cfg.rope_theta)
 
-    kvu = (c_kv @ p["kv_up"].astype(dtype)).reshape(b, s, h, qk_nope + dv)
+    kvu = L.linear(p, "kv_up", c_kv, dtype).reshape(b, s, h, qk_nope + dv)
     k_nope, v = kvu[..., :qk_nope], kvu[..., qk_nope:]
     q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
     k_full = jnp.concatenate(
@@ -176,7 +176,7 @@ def mla_full(p: Params, x, cfg: ModelConfig, positions, dtype,
     q, k, v, _, _ = _mla_qkv_full(p, x, cfg, positions, dtype)
     out = L.causal_attention(q, k, v, q_chunk=q_chunk, positions=positions)
     b, s = x.shape[:2]
-    return constrain(out.reshape(b, s, -1) @ p["wo"].astype(dtype),
+    return constrain(L.linear(p, "wo", out.reshape(b, s, -1), dtype),
                      "batch", "model", None)
 
 
@@ -193,12 +193,12 @@ def mla_decode(p: Params, x, cfg: ModelConfig, cache: Dict[str, jax.Array],
                                m.v_head_dim, m.kv_lora_rank)
     positions = pos[None].astype(jnp.int32)
 
-    cq = L.rmsnorm(x @ p["q_down"].astype(dtype), p["q_norm"], cfg.norm_eps)
-    q = (cq @ p["q_up"].astype(dtype)).reshape(b, h, qk_nope + qk_rope)
+    cq = L.rmsnorm(L.linear(p, "q_down", x, dtype), p["q_norm"], cfg.norm_eps)
+    q = L.linear(p, "q_up", cq, dtype).reshape(b, h, qk_nope + qk_rope)
     q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
     # apply_rope wants (B, S, H, hd): lift the single decode position to S=1
     q_rope = L.apply_rope(q_rope[:, None], positions, cfg.rope_theta)[:, 0]
-    kv = x @ p["kv_down"].astype(dtype)
+    kv = L.linear(p, "kv_down", x, dtype)
     c_new = L.rmsnorm(kv[..., :r], p["kv_norm"], cfg.norm_eps)
     k_rope_new = L.apply_rope(kv[..., r:], positions, cfg.rope_theta)
 
@@ -210,8 +210,9 @@ def mla_decode(p: Params, x, cfg: ModelConfig, cache: Dict[str, jax.Array],
         cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), pos, axis=1)
 
     # absorb: q_lat[b,h,r] = q_nope @ W_uk(h)^T
-    w_uk = p["kv_up"].astype(dtype).reshape(r, h, qk_nope + dv)[..., :qk_nope]
-    w_uv = p["kv_up"].astype(dtype).reshape(r, h, qk_nope + dv)[..., qk_nope:]
+    kv_up = L.wload(p, "kv_up", dtype)
+    w_uk = kv_up.reshape(r, h, qk_nope + dv)[..., :qk_nope]
+    w_uv = kv_up.reshape(r, h, qk_nope + dv)[..., qk_nope:]
     q_lat = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)
     scale = 1.0 / jnp.sqrt(qk_nope + qk_rope).astype(jnp.float32)
     scores = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(c_cache.dtype), c_cache,
@@ -224,7 +225,7 @@ def mla_decode(p: Params, x, cfg: ModelConfig, cache: Dict[str, jax.Array],
     o_lat = jnp.einsum("bhs,bsr->bhr", probs.astype(c_cache.dtype), c_cache,
                        preferred_element_type=jnp.float32).astype(dtype)
     o = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv)
-    out = o.reshape(b, 1, h * dv) @ p["wo"].astype(dtype)
+    out = L.linear(p, "wo", o.reshape(b, 1, h * dv), dtype)
     return out, {"c_kv": c_new.astype(cache["c_kv"].dtype),
                  "k_rope": k_rope_new.astype(cache["k_rope"].dtype)}
 
@@ -314,7 +315,7 @@ def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array], *,
         # multi-token prediction: combine h_t with emb(token_{t+1}) -> predict t+2
         emb_next = jnp.roll(L.embed_lookup(params["embed"], batch["tokens"], dtype),
                             -1, axis=1)
-        hm = jnp.concatenate([x, emb_next], axis=-1) @ params["mtp"]["proj"].astype(dtype)
+        hm = L.linear(params["mtp"], "proj", jnp.concatenate([x, emb_next], axis=-1), dtype)
         hm, mtp_aux, _ = _block_apply(cfg, params["mtp"]["block"], hm, positions,
                                       None, None, dtype, q_chunk)
         hm = L.rmsnorm(hm, params["mtp"]["norm"], cfg.norm_eps)

@@ -83,7 +83,7 @@ def encode(cfg: ModelConfig, params: Params, frames: jax.Array, *,
     """frames: (B, S, d) precomputed frame embeddings (stub frontend)."""
     dtype = jnp.dtype(cfg.dtype)
     b, s, _ = frames.shape
-    x = frames.astype(dtype) @ params["frame_proj"].astype(dtype)
+    x = L.linear(params, "frame_proj", frames.astype(dtype), dtype)
     x = x + sinusoidal_positions(s, cfg.d_model).astype(dtype)[None]
     x = constrain(x, "batch", "model", None)
     positions = jnp.arange(s, dtype=jnp.int32)

@@ -54,15 +54,14 @@ def _mlstm_qkv(p: Params, x, cfg: ModelConfig, dtype):
     b, s, d = x.shape
     h, dk = cfg.num_heads, cfg.hd()
     x = constrain(x, "batch", None, None)   # Megatron-SP gather
-    w = lambda n: p[n].astype(dtype)
-    q = (x @ w("wq")).reshape(b, s, h, dk)
-    k = (x @ w("wk")).reshape(b, s, h, dk) / jnp.sqrt(dk).astype(dtype)
-    v = (x @ w("wv")).reshape(b, s, h, dk)
+    q = L.linear(p, "wq", x, dtype).reshape(b, s, h, dk)
+    k = L.linear(p, "wk", x, dtype).reshape(b, s, h, dk) / jnp.sqrt(dk).astype(dtype)
+    v = L.linear(p, "wv", x, dtype).reshape(b, s, h, dk)
     v_aug = jnp.concatenate([v, jnp.ones((b, s, h, 1), dtype)], axis=-1)
-    log_a = jax.nn.log_sigmoid((x @ w("wf")).astype(jnp.float32)
+    log_a = jax.nn.log_sigmoid(L.linear(p, "wf", x, dtype).astype(jnp.float32)
                                + p["bf"][None, None, :])
-    gate = jax.nn.sigmoid((x @ w("wi")).astype(jnp.float32))
-    o = jax.nn.sigmoid(x @ w("wo"))
+    gate = jax.nn.sigmoid(L.linear(p, "wi", x, dtype).astype(jnp.float32))
+    o = jax.nn.sigmoid(L.linear(p, "wo", x, dtype))
     return q, k, v_aug, log_a, gate, o
 
 
@@ -70,7 +69,7 @@ def _mlstm_finish(p: Params, y_aug, o, b, s, dtype):
     num, den = y_aug[..., :-1], y_aug[..., -1:]
     y = num / jnp.maximum(jnp.abs(den), 1.0)
     y = (y.reshape(b, s, -1).astype(dtype) * o)
-    return y @ p["wout"].astype(dtype)
+    return L.linear(p, "wout", y, dtype)
 
 
 def mlstm_block(p: Params, x, cfg: ModelConfig, dtype,
@@ -130,10 +129,10 @@ def slstm_block(p: Params, x, cfg: ModelConfig, dtype,
     b, s, d = x.shape
     h = cfg.num_heads
     xa = L.rmsnorm(x, p["norm"], cfg.norm_eps).astype(jnp.float32)
-    zx = xa @ p["wz"]
-    ix = xa @ p["wi"]
-    fx = xa @ p["wf"]
-    ox = xa @ p["wo_g"]
+    zx = L.linear(p, "wz", xa, jnp.float32)
+    ix = L.linear(p, "wi", xa, jnp.float32)
+    fx = L.linear(p, "wf", xa, jnp.float32)
+    ox = L.linear(p, "wo_g", xa, jnp.float32)
     if state is None:
         zero = jnp.zeros((b, d), jnp.float32)
         state = (zero, zero, zero)
@@ -143,7 +142,7 @@ def slstm_block(p: Params, x, cfg: ModelConfig, dtype,
 
     xs = tuple(a.swapaxes(0, 1) for a in (zx, ix, fx, ox))
     fstate, hs = jax.lax.scan(step, state, xs)
-    y = hs.swapaxes(0, 1).astype(dtype) @ p["wout"].astype(dtype)
+    y = L.linear(p, "wout", hs.swapaxes(0, 1).astype(dtype), dtype)
     return x + y, fstate
 
 
@@ -151,9 +150,12 @@ def slstm_decode(p: Params, x, cfg: ModelConfig, dtype, state):
     b, _, d = x.shape
     h = cfg.num_heads
     xa = L.rmsnorm(x, p["norm"], cfg.norm_eps).astype(jnp.float32)[:, 0]
-    new_state, hcur = _slstm_cell(p, xa @ p["wz"], xa @ p["wi"], xa @ p["wf"],
-                                  xa @ p["wo_g"], state, (b, h, d // h))
-    y = hcur[:, None].astype(dtype) @ p["wout"].astype(dtype)
+    new_state, hcur = _slstm_cell(p, L.linear(p, "wz", xa, jnp.float32),
+                                  L.linear(p, "wi", xa, jnp.float32),
+                                  L.linear(p, "wf", xa, jnp.float32),
+                                  L.linear(p, "wo_g", xa, jnp.float32),
+                                  state, (b, h, d // h))
+    y = L.linear(p, "wout", hcur[:, None].astype(dtype), dtype)
     return x + y, new_state
 
 

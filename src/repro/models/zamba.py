@@ -59,7 +59,7 @@ def _mamba_streams(p: Params, x, cfg: ModelConfig, dtype, conv_state):
     d_in, heads = _dims(cfg)
     st = cfg.ssm_state
     x = constrain(x, "batch", None, None)   # Megatron-SP gather
-    proj = x @ p["in_proj"].astype(dtype)
+    proj = L.linear(p, "in_proj", x, dtype)
     z, xs, bmat, cmat, dt = jnp.split(
         proj, [d_in, 2 * d_in, 2 * d_in + st, 2 * d_in + 2 * st], axis=-1)
     xs, new_conv = causal_conv1d(xs, p["conv_w"].astype(dtype),
@@ -79,7 +79,7 @@ def _mamba_finish(p: Params, y, v, z, cfg: ModelConfig, dtype, b, s):
     y = y + v * p["d_skip"][None, None, :, None].astype(dtype)
     y = y.reshape(b, s, d_in)
     y = L.rmsnorm(y, p["gate_norm"], cfg.norm_eps) * jax.nn.silu(z)
-    return constrain(y @ p["out_proj"].astype(dtype), "batch", "model", None)
+    return constrain(L.linear(p, "out_proj", y, dtype), "batch", "model", None)
 
 
 def mamba_block(p: Params, x, cfg: ModelConfig, dtype, chunk: int = 128):

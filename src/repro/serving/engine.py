@@ -3,8 +3,9 @@
 A deliberately small but real engine: fixed-batch slots, greedy/temperature
 sampling, per-slot lengths, continuous batching (a finished slot is refilled
 from the queue), and an optional FORMS compression pass over the weights
-(quantize + polarize every matmul weight — the paper's deployment story:
-inference runs on compressed, polarized magnitudes).
+(``repro.forms.compress_tree`` — the paper's deployment story: the decode
+step consumes the *compressed* pytree directly, uint8 magnitudes + fragment
+signs through the polarized-matmul kernel, no float fake-quant copy).
 
 The decode step is a single jitted function over (params, cache, tokens,
 pos) — exactly what the decode dry-run cells lower at production shape.
@@ -14,6 +15,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -21,50 +23,33 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import polarization as polmod
-from repro.core import quantization as quantmod
-from repro.core.fragments import FragmentSpec, is_crossbar_weight, pad_rows
-from repro.core.quantization import QuantSpec
+from repro.forms import (CompressReport, FormsSpec, compress_tree,
+                         decompress_tree, default_spec)
 from repro.models.registry import Model
 
 
 def forms_compress_params(params: Any, fragment: int = 8, bits: int = 8
                           ) -> Tuple[Any, Dict[str, float]]:
-    """Project every crossbar-mappable weight onto the FORMS sets (P, Q).
+    """DEPRECATED: thin wrapper over :func:`repro.forms.compress_tree`.
 
-    Weights stay float (dequantized values on the polarized+quantized grid) so
-    the model code is unchanged; storage/compute savings are modeled by the
-    perf model, while kernels/polarized_matmul consumes the (mags, signs)
-    factorization for the hot path.  Returns (new_params, per-layer errors).
+    Returns a *float fake-quant* tree (dense values on the polarized+
+    quantized grid), like the old API.  For 2-D/3-D/conv leaves the values
+    match the old implementation exactly (policy="C" reproduces the old
+    row-major conv flatten); scan-stacked MoE expert tensors (L, E, in, out)
+    are now projected per (layer, expert) instead of as one flat matrix —
+    per-matrix scales and signs, which is what the hardware mapping does.
+    New code should call ``compress_tree`` and keep the compressed pytree —
+    the model layers consume it directly.
     """
-    frag = FragmentSpec(m=fragment)
-    quant = QuantSpec(bits=bits)
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    errors: Dict[str, float] = {}
-    new_leaves = []
-    def project2d(mat):
-        matp = pad_rows(mat.astype(jnp.float32), frag.m)
-        pol, _signs = polmod.project_polarize(matp, frag.m, rule="energy")
-        q = quantmod.project_quantize(pol, quant)
-        return q[: mat.shape[0]]
-
-    for path, leaf in flat:
-        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        if not (hasattr(leaf, "ndim") and is_crossbar_weight(pstr, tuple(leaf.shape))):
-            new_leaves.append(leaf)
-            continue
-        if leaf.ndim == 3:      # scan-stacked (L, in, out): project per layer
-            q = jax.vmap(project2d)(leaf).astype(leaf.dtype)
-        elif leaf.ndim == 4:    # conv (kh, kw, cin, cout)
-            q = project2d(leaf.reshape(-1, leaf.shape[-1])
-                          ).reshape(leaf.shape).astype(leaf.dtype)
-        else:
-            q = project2d(leaf).astype(leaf.dtype)
-        err = float(jnp.linalg.norm(q - leaf) /
-                    jnp.maximum(jnp.linalg.norm(leaf), 1e-12))
-        errors[pstr] = err
-        new_leaves.append(q)
-    return jax.tree_util.tree_unflatten(treedef, [l for l in new_leaves]), errors
+    warnings.warn(
+        "forms_compress_params is deprecated; use repro.forms.compress_tree "
+        "(and keep the compressed pytree) or decompress_tree for the float "
+        "projection (see DESIGN.md migration notes)",
+        DeprecationWarning, stacklevel=2)
+    # policy="C" reproduces the old row-major conv flatten exactly
+    spec = FormsSpec(m=fragment, bits=bits, policy="C")
+    compressed, report = compress_tree(params, spec)
+    return decompress_tree(compressed), report.errors
 
 
 @dataclasses.dataclass
@@ -88,22 +73,31 @@ class ServingEngine:
 
     def __init__(self, model: Model, params: Any, *, max_len: int = 512,
                  batch_slots: int = 8, forms: bool = False,
+                 spec: Optional[FormsSpec] = None,
                  fragment: int = 8, bits: int = 8, rng_seed: int = 0):
         self.model = model
         self.cfg = model.config
-        if forms:
-            params, self.compression_errors = forms_compress_params(
-                params, fragment, bits)
-        else:
-            self.compression_errors = {}
+        self.spec: Optional[FormsSpec] = None
+        self.compression_report: Optional[CompressReport] = None
+        self.compression_errors: Dict[str, float] = {}
+        if forms or spec is not None:
+            self.spec = spec if spec is not None else FormsSpec(m=fragment,
+                                                                bits=bits)
+            params, self.compression_report = compress_tree(params, self.spec)
+            self.compression_errors = self.compression_report.errors
         self.params = params
         self.max_len = max_len
         self.slots = batch_slots
         self.cache = model.init_cache(batch_slots, max_len)
         self.rng = np.random.RandomState(rng_seed)
 
-        self._decode = jax.jit(
-            lambda p, t, c, pos: model.decode_step(p, t, c, pos))
+        # the spec's backend/tiling hints bake into the traced decode step
+        # (repro.forms.default_spec is read at trace time by forms.apply)
+        def _decode_fn(p, t, c, pos):
+            with default_spec(self.spec):
+                return model.decode_step(p, t, c, pos)
+
+        self._decode = jax.jit(_decode_fn)
 
     def _sample(self, logits: np.ndarray, temperature: float) -> int:
         if temperature <= 0.0:

@@ -4,9 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import admm
-from repro.core.fragments import FragmentSpec
+from repro.forms import FormsSpec
 from repro.core.pruning import PruneSpec
-from repro.core.quantization import QuantSpec
 
 
 def _params(key):
@@ -37,8 +36,7 @@ def test_penalty_zero_at_init_then_positive():
 def test_update_makes_z_feasible():
     params = _params(jax.random.PRNGKey(1))
     cfn = admm.default_constraints(prune=PruneSpec(alpha=0.5, beta=1.0),
-                                   polarize=FragmentSpec(m=8),
-                                   quantize=QuantSpec(bits=8))
+                                   forms=FormsSpec(m=8, bits=8, rule="sum"))
     state, table = admm.init_admm(params, cfn)
     state = admm.admm_update(params, state, table)
     from repro.core import polarization as P
@@ -51,8 +49,8 @@ def test_update_makes_z_feasible():
 
 def test_hard_projection_feasible_and_close():
     params = _params(jax.random.PRNGKey(2))
-    cfn = admm.default_constraints(prune=None, polarize=FragmentSpec(m=4),
-                                   quantize=QuantSpec(bits=8))
+    cfn = admm.default_constraints(prune=None,
+                                   forms=FormsSpec(m=4, bits=8, rule="sum"))
     state, table = admm.init_admm(params, cfn)
     projected = admm.project_hard(params, state, table)
     from repro.core import polarization as P
@@ -69,7 +67,7 @@ def test_admm_drives_w_to_constraint_set():
     key = jax.random.PRNGKey(3)
     target = jax.random.normal(key, (16, 4))
     params = {"lin": {"w": jnp.zeros((16, 4))}}
-    cfn = admm.default_constraints(prune=None, polarize=FragmentSpec(m=8),
+    cfn = admm.default_constraints(prune=None, polarize=FormsSpec(m=8).fragment,
                                    quantize=None, rho=2.0)
     state, table = admm.init_admm(params, cfn)
 

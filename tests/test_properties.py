@@ -1,8 +1,16 @@
-"""Hypothesis property tests for the system's core invariants."""
+"""Hypothesis property tests for the system's core invariants.
+
+``hypothesis`` is an optional test dependency (the ``[test]`` extra in
+pyproject.toml); the whole module skips cleanly when it is absent so the
+tier-1 suite collects everywhere.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import polarization as P
 from repro.core import pruning as PR

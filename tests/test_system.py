@@ -16,12 +16,10 @@ import pytest
 from repro.configs.paper_cnns import tiny_cnn
 from repro.core import admm as admm_mod
 from repro.core import crossbar as xbar_mod
-from repro.core import forms_layer as FL
 from repro.core import polarization as pol_mod
 from repro.core import zeroskip as zs_mod
-from repro.core.fragments import FragmentSpec, conv_to_matrix, pad_rows
 from repro.core.pruning import PruneSpec
-from repro.core.quantization import QuantSpec
+from repro.forms import FormsSpec, apply_simulated, from_dense
 from repro.data.synthetic import ImageStreamConfig, image_batch
 from repro.models import cnn as cnn_mod
 from repro.training.optimizer import sgd_init, sgd_update
@@ -65,11 +63,10 @@ def forms_pipeline():
         params, opt = step(params, opt, img, lab)
     acc_pre = accuracy(params)
 
-    # phase 2: ADMM with the three FORMS constraints
-    frag = FragmentSpec(m=4)
+    # phase 2: ADMM with the three FORMS constraints, one FormsSpec
+    spec = FormsSpec(m=4, bits=8, rule="sum")
     cfn = admm_mod.default_constraints(
-        prune=PruneSpec(alpha=0.75, beta=0.75), polarize=frag,
-        quantize=QuantSpec(bits=8), rho=5e-3)
+        prune=PruneSpec(alpha=0.75, beta=0.75), forms=spec, rho=5e-3)
     admm_state, table = admm_mod.init_admm(params, cfn)
     astep = jax.jit(lambda p, a, o, img, lab: _sgd(loss_fn, p, a, table, o, img, lab))
     for i in range(240):
@@ -90,7 +87,7 @@ def forms_pipeline():
     acc_forms = accuracy(projected)
     return dict(cfg=cfg, ds=ds, params=params, projected=projected,
                 admm_state=admm_state, table=table,
-                acc_pre=acc_pre, acc_forms=acc_forms, frag=frag)
+                acc_pre=acc_pre, acc_forms=acc_forms, spec=spec)
 
 
 def test_accuracy_preserved(forms_pipeline):
@@ -113,7 +110,7 @@ def test_crossbar_reduction_counted(forms_pipeline):
     f = forms_pipeline
     shapes = cnn_mod.crossbar_weight_shapes(f["cfg"], f["projected"])
     xb = xbar_mod.CrossbarSpec(rows=128, cols=128)
-    rep = xbar_mod.reduction_report(shapes, shapes, xb, QuantSpec(bits=8),
+    rep = xbar_mod.reduction_report(shapes, shapes, xb, f["spec"].quant,
                                     baseline_bits=16)
     assert rep.quant_factor == 2.0
     assert rep.polarization_factor == 2.0
@@ -121,7 +118,7 @@ def test_crossbar_reduction_counted(forms_pipeline):
     # part of the factor; at paper-scale (VGG-16) the full 4x materializes:
     vgg_shapes = [(3 * 3 * 512, 512)] * 8 + [(3 * 3 * 256, 256)] * 4
     rep_vgg = xbar_mod.reduction_report(vgg_shapes, vgg_shapes, xb,
-                                        QuantSpec(bits=8), baseline_bits=16)
+                                        f["spec"].quant, baseline_bits=16)
     assert rep_vgg.total >= 4.0  # quant x polarization at minimum
     assert rep.total >= 2.0
 
@@ -136,10 +133,10 @@ def test_insitu_inference_matches_dense(forms_pipeline):
             w = leaf
             break
     assert w is not None
-    fparams, err = FL.from_dense(w, FragmentSpec(m=4), QuantSpec(bits=8))
+    fparams, err = from_dense(w, f["spec"])
     x = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (8, w.shape[0])))
     y_dense = x @ w
-    y_sim, eic, _ = FL.apply_simulated(fparams, x, input_bits=16)
+    y_sim, eic, _ = apply_simulated(fparams, x, f["spec"])
     rel = float(jnp.linalg.norm(y_sim - y_dense) /
                 jnp.maximum(jnp.linalg.norm(y_dense), 1e-9))
     assert rel < 0.05, rel
