@@ -1,10 +1,14 @@
 """Paper Figs 13/14: frame-per-second speedup composition vs original ISAAC,
-driven by the measured crossbar reduction + measured EIC of the trained CNN."""
+driven by the measured crossbar reduction + measured EIC of the trained CNN —
+plus the serving hot-path microbench (bulk prefill vs stepwise, donated
+chunked decode vs a per-token host-sync loop)."""
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
-from benchmarks.common import emit, trained_forms_cnn
+from benchmarks.common import emit, time_fn, trained_forms_cnn
 from repro.core import crossbar as xbar
 from repro.core import perfmodel as pm
 from repro.core.quantization import quantize_activations
@@ -13,9 +17,87 @@ from repro.data.synthetic import image_batch
 from repro.models import cnn as cnn_mod
 
 
-def run() -> None:
-    for fragment in (8, 16):
-        t = trained_forms_cnn(fragment=min(fragment, 8))
+def serving_hot_path(smoke: bool = False) -> None:
+    """Prefill/decode hot-path numbers on the CPU oracle path.
+
+    * ``serving.prefill``: one bulk ``model.prefill`` call vs the pre-PR
+      admit loop (one jitted decode step per prompt token, sequentially
+      dispatched) for a 64-token prompt.
+    * ``serving.decode``: tokens/s of the donated chunked decode loop with
+      on-device sampling vs a per-token loop that syncs logits to the host
+      and samples there (the pre-PR steady state).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.models.registry import build
+    from repro.serving.engine import ServingEngine
+
+    cfg = dataclasses.replace(get_reduced("yi-9b"), num_layers=2, d_model=64,
+                              num_heads=4, num_kv_heads=2, head_dim=16,
+                              d_ff=128, vocab_size=512)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt_len, max_len, slots, block = 64, 160, 4, 8
+    iters = 3 if smoke else 5
+    prompt = np.arange(prompt_len, dtype=np.int32) % cfg.vocab_size
+
+    eng = ServingEngine(model, params, max_len=max_len, batch_slots=slots,
+                        decode_block=block)
+    us_bulk = time_fn(lambda: eng.prefill_slot(0, prompt), iters=iters,
+                      warmup=1)
+
+    # pre-PR prefill: one jitted decode step per prompt token
+    dec = jax.jit(model.decode_step)
+    state = {"cache": model.init_cache(slots, max_len)}
+
+    def stepwise_prefill():
+        c = state["cache"]
+        for t in range(prompt_len - 1):
+            toks = jnp.full((slots, 1), int(prompt[t]), jnp.int32)
+            _, c = dec(eng.params, toks, c, jnp.array(t, jnp.int32))
+        state["cache"] = c
+        return c
+
+    us_step = time_fn(stepwise_prefill, iters=iters, warmup=1)
+    emit("serving.prefill_bulk", us_bulk, f"prompt={prompt_len}")
+    emit("serving.prefill_stepwise", us_step, f"prompt={prompt_len}")
+    emit("serving.prefill_speedup", 0.0, f"{us_step / us_bulk:.1f}x")
+
+    # steady-state decode: donated chunked device loop vs host-sync loop
+    toks = np.zeros(slots, np.int32)
+    pos = np.full(slots, prompt_len, np.int32)
+    temps = np.zeros(slots, np.float32)
+    us_chunk = time_fn(lambda: eng.decode_chunk(toks, pos, temps),
+                       iters=iters, warmup=1)
+    new_tps = slots * block / (us_chunk / 1e6)
+
+    state["cache"] = model.init_cache(slots, max_len)
+
+    def host_loop():
+        c = state["cache"]
+        for i in range(block):
+            lg, c = dec(eng.params, jnp.asarray(toks)[:, None], c,
+                        jnp.asarray(pos + i))
+            np.argmax(np.asarray(lg.astype(jnp.float32))[:, 0], axis=-1)
+        state["cache"] = c
+
+    us_host = time_fn(host_loop, iters=iters, warmup=1)
+    old_tps = slots * block / (us_host / 1e6)
+    emit("serving.decode_device_loop", us_chunk,
+         f"tok/s={new_tps:.0f};block={block}")
+    emit("serving.decode_host_loop", us_host, f"tok/s={old_tps:.0f}")
+    emit("serving.decode_speedup", 0.0, f"{new_tps / old_tps:.2f}x")
+
+
+def run(smoke: bool = False) -> None:
+    serving_hot_path(smoke=smoke)
+    fragments = (8,) if smoke else (8, 16)
+    kw = (dict(pretrain_steps=20, admm_steps=30, finetune_steps=10)
+          if smoke else {})
+    for fragment in fragments:
+        t = trained_forms_cnn(fragment=min(fragment, 8), **kw)
         shapes = cnn_mod.crossbar_weight_shapes(t["cfg"], t["projected"])
         rep = xbar.reduction_report(shapes, shapes, xbar.CrossbarSpec(),
                                     t["spec"].quant, baseline_bits=32)

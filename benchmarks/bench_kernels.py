@@ -10,9 +10,9 @@ from repro.forms import FormsSpec
 from repro.kernels import ops, ref
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
     key = jax.random.PRNGKey(0)
-    M, K, N, m = 256, 1024, 1024, 8
+    M, K, N, m = (64, 256, 256, 8) if smoke else (256, 1024, 1024, 8)
     x = jax.random.normal(key, (M, K))
     w = jax.random.normal(jax.random.PRNGKey(1), (K, N))
     mags = jax.random.randint(jax.random.PRNGKey(2), (K, N), 0, 256).astype(jnp.uint8)

@@ -1,6 +1,9 @@
-"""Shared benchmark utilities: timing, CSV emission, the trained-CNN fixture."""
+"""Shared benchmark utilities: timing, CSV/JSON emission, the trained-CNN
+fixture."""
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 from typing import Callable, Dict, List, Optional, Tuple
@@ -14,6 +17,23 @@ _ROWS: List[Tuple[str, float, str]] = []
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     _ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def rows() -> List[Tuple[str, float, str]]:
+    """All rows emitted so far (name, us_per_call, derived)."""
+    return list(_ROWS)
+
+
+def write_json(path: str) -> None:
+    """Dump every emitted row as a JSON artifact (the CI perf trajectory)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in _ROWS],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {len(_ROWS)} rows to {path}", flush=True)
 
 
 def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:

@@ -1,40 +1,58 @@
 """Benchmark driver: one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit);
+``--json PATH`` additionally dumps every row as a JSON artifact (the per-PR
+perf trajectory CI accumulates), and ``--smoke`` runs only bench_fps +
+bench_kernels at tiny shapes (the CI smoke job).
 Sections:
   tables I/II  -> bench_accuracy       (accuracy + crossbar reduction)
   fig 6        -> bench_fragment_size  (accuracy vs fragment size + sign-rule ablation)
   fig 8        -> bench_eic            (EIC stats on real activations)
   tables III-V -> bench_hw_model       (area/power/throughput model vs published)
-  figs 13/14   -> bench_fps            (FPS speedup composition)
+  figs 13/14   -> bench_fps            (FPS speedup composition + serving hot path)
   table VI     -> bench_variation      (device-variation robustness)
   kernels      -> bench_kernels        (wall-times, oracle + interpret sanity)
   system       -> bench_train_serve    (train/decode step micro-bench)
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 import traceback
 
+from benchmarks import common
 from benchmarks.common import header
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="bench_fps + bench_kernels only, at tiny shapes")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write all emitted rows to PATH as JSON")
+    args = ap.parse_args()
+
     from benchmarks import (bench_accuracy, bench_eic, bench_fps,
                             bench_fragment_size, bench_hw_model,
                             bench_kernels, bench_train_serve, bench_variation)
     header()
-    sections = [
-        ("tables_I_II", bench_accuracy.run),
-        ("fig6", bench_fragment_size.run),
-        ("fig8", bench_eic.run),
-        ("tables_III_V", bench_hw_model.run),
-        ("figs13_14", bench_fps.run),
-        ("tableVI", bench_variation.run),
-        ("kernels", bench_kernels.run),
-        ("system", bench_train_serve.run),
-    ]
+    if args.smoke:
+        sections = [
+            ("figs13_14", lambda: bench_fps.run(smoke=True)),
+            ("kernels", lambda: bench_kernels.run(smoke=True)),
+        ]
+    else:
+        sections = [
+            ("tables_I_II", bench_accuracy.run),
+            ("fig6", bench_fragment_size.run),
+            ("fig8", bench_eic.run),
+            ("tables_III_V", bench_hw_model.run),
+            ("figs13_14", bench_fps.run),
+            ("tableVI", bench_variation.run),
+            ("kernels", bench_kernels.run),
+            ("system", bench_train_serve.run),
+        ]
     failures = []
     for name, fn in sections:
         t0 = time.time()
@@ -45,6 +63,8 @@ def main() -> None:
             traceback.print_exc()
             failures.append(name)
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if args.json:
+        common.write_json(args.json)
     if failures:
         print(f"# FAILED sections: {failures}", flush=True)
         sys.exit(1)

@@ -170,8 +170,10 @@ def apply(p: FormsLinearParams, x: jax.Array,
             "stacked/conv leaves are consumed via to_dense()")
     spec = _resolve_spec(p, spec)
     x2, lead = _flatten_pad(x, p.mags.shape[0])
-    y = kops.polarized_matmul(x2, p.mags, p.signs.astype(jnp.float32),
-                              p.scale, spec=spec)
+    # signs stay int8 all the way into the kernel: HBM stores (and the kernel
+    # streams) the 1/m-sized int8 sign plane; the f32 cast happens on the
+    # (bk/m, bn) tile in VMEM, never on a full materialized sign grid
+    y = kops.polarized_matmul(x2, p.mags, p.signs, p.scale, spec=spec)
     return y.reshape(*lead, p.n)
 
 
@@ -191,7 +193,7 @@ def apply_simulated(
     x2, lead = _flatten_pad(x, p.mags.shape[0])
     x_codes, x_scale = quantmod.quantize_activations(x2, spec.input_bits)
     cells = quantmod.slice_to_cells(p.mags, spec.quant)
-    acc, eic = kops.bitserial_crossbar(
-        x_codes, cells, p.signs.astype(jnp.int32), spec=spec)
+    # int8 signs through to the simulator kernel; per-tile casts only
+    acc, eic = kops.bitserial_crossbar(x_codes, cells, p.signs, spec=spec)
     y = acc.astype(jnp.float32) * x_scale * p.scale
     return y.reshape(*lead, p.n), eic, x_scale

@@ -52,6 +52,8 @@ def polarized_matmul(
 ) -> jax.Array:
     """y[M,N] = x[M,K] @ (signs*mags)[K,N] * scale[1,N].
 
+    ``signs`` may be int8 (the FORMS storage dtype) or float — both backends
+    cast per tile, so HBM only ever stores the 1/m-sized int8 sign plane.
     ``spec`` (a FormsSpec) overrides ``m``/``prefer_ref``/``bm``/``bn``/``bk``.
     """
     if spec is not None:

@@ -1,11 +1,13 @@
-"""Serving launcher: batched decode with optional FORMS compression.
+"""Serving launcher: bulk prefill + donated batched decode with optional
+FORMS compression.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
-      --requests 8 --forms
+      --requests 8 --forms --decode-block 8
 
 With ``--forms`` the weights are compressed via ``repro.forms.compress_tree``
 and the engine decodes directly on the compressed pytree (uint8 magnitudes +
-fragment signs through the polarized-matmul kernel).
+int8 fragment signs through the polarized-matmul kernel).  ``--decode-block``
+sets how many tokens the jitted decode loop produces per host sync.
 """
 from __future__ import annotations
 
@@ -36,6 +38,13 @@ def main() -> None:
     ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--sign-rule", default="energy", choices=("sum", "energy"))
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--decode-block", type=int, default=4,
+                    help="tokens decoded per jitted dispatch (host syncs "
+                         "once per block)")
+    ap.add_argument("--prompt-len", type=int, default=None,
+                    help="fixed prompt length (default: random 2-5)")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable cache donation (debugging)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -44,12 +53,14 @@ def main() -> None:
     spec = (FormsSpec(m=args.fragment, bits=args.bits, rule=args.sign_rule)
             if args.forms else None)
     engine = ServingEngine(model, params, max_len=args.max_len,
-                           batch_slots=args.slots, spec=spec)
+                           batch_slots=args.slots, spec=spec,
+                           decode_block=args.decode_block,
+                           donate=not args.no_donate)
     if engine.compression_report is not None:
         print(f"forms: {engine.compression_report.summary()}")
     rng = np.random.RandomState(0)
-    reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab_size,
-                                              size=rng.randint(2, 6)),
+    plen = lambda: (args.prompt_len if args.prompt_len else rng.randint(2, 6))
+    reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab_size, size=plen()),
                     max_new_tokens=args.max_new_tokens,
                     temperature=args.temperature)
             for i in range(args.requests)]
@@ -59,8 +70,12 @@ def main() -> None:
     toks = sum(len(r.tokens) for r in results)
     for r in results[:4]:
         print(f"req {r.uid}: {r.tokens}")
+    pf = np.mean([r.prefill_ms for r in results])
+    dm = np.mean([r.decode_ms for r in results])
     print(f"{len(results)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s, forms={args.forms})")
+          f"({toks/dt:.1f} tok/s, forms={args.forms}, "
+          f"block={args.decode_block}); "
+          f"mean prefill {pf:.1f}ms, mean decode share {dm:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -110,15 +110,23 @@ def rope_freqs(hd: int, theta: float) -> jax.Array:
 
 
 def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """x: (..., S, H, hd) or (..., S, hd); positions: (S,) int."""
+    """x: (..., S, H, hd) or (..., S, hd); positions: (S,) or (B, S) int.
+
+    A (B, S) position grid gives every batch row its own timeline — the
+    decode path uses (B, 1) so each serving slot rotates by its own position.
+    """
     hd = x.shape[-1]
     freqs = rope_freqs(hd, theta)                       # (hd/2,)
-    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (S, hd/2)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, hd/2)
     cos, sin = jnp.cos(angles), jnp.sin(angles)
-    if x.ndim == 4:   # (B, S, H, hd)
-        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
-    else:             # (B, S, hd)
-        cos, sin = cos[None, :, :], sin[None, :, :]
+    if positions.ndim == 1:
+        if x.ndim == 4:   # (B, S, H, hd)
+            cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+        else:             # (B, S, hd)
+            cos, sin = cos[None, :, :], sin[None, :, :]
+    else:                 # per-batch positions (B, S)
+        if x.ndim == 4:
+            cos, sin = cos[:, :, None, :], sin[:, :, None, :]
     x1, x2 = x[..., 0::2], x[..., 1::2]
     xr1 = x1 * cos - x2 * sin
     xr2 = x2 * cos + x1 * sin
@@ -223,8 +231,9 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      pos: jax.Array, window: Optional[int] = None) -> jax.Array:
     """Single-token GQA against a cache.
 
-    q: (B, 1, H, hd); caches: (B, Smax, KV, hd); pos: scalar int32 (the index
-    of the current token).  Attends to cache positions <= pos.
+    q: (B, 1, H, hd); caches: (B, Smax, KV, hd); pos: scalar int32 or (B,)
+    per-row positions (the index of each row's current token).  Each row
+    attends to its own cache positions <= pos — independent slot timelines.
     """
     b, _, h, hd = q.shape
     smax, kv = k_cache.shape[1], k_cache.shape[2]
@@ -237,10 +246,11 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     scores = jnp.einsum("bkgh,bskh->bkgs", qr.astype(k_cache.dtype), k_cache,
                         preferred_element_type=jnp.float32) * scale
     kpos = jnp.arange(smax, dtype=jnp.int32)
-    mask = kpos <= pos
+    pos2 = jnp.reshape(pos, (-1, 1))                   # (B, 1) or (1, 1)
+    mask = kpos[None, :] <= pos2
     if window is not None:
-        mask = jnp.logical_and(mask, kpos > pos - window)
-    scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+        mask = jnp.logical_and(mask, kpos[None, :] > pos2 - window)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskh->bkgh", probs.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
@@ -255,12 +265,15 @@ def attention_block(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
                     cache: Optional[Tuple[jax.Array, jax.Array]] = None,
                     cache_pos: Optional[jax.Array] = None,
                     use_rope: bool = True, causal: bool = True,
-                    dtype=jnp.bfloat16):
+                    return_kv: bool = False, dtype=jnp.bfloat16):
     """Full attention sub-layer.  Returns (out, new_cache_kv_or_None).
 
-    Train/prefill: ``cache=None`` -> causal self-attention over x.
+    Train/prefill: ``cache=None`` -> causal self-attention over x;
+    ``return_kv=True`` additionally returns the post-rope (k, v) of shape
+    (B, S, KV, hd) so bulk prefill can commit them to a cache in one write.
     Decode: ``cache=(k, v)`` of shape (B, Smax, KV, hd), x is (B, 1, d),
-    ``cache_pos`` scalar — writes the new K/V at cache_pos and attends.
+    ``cache_pos`` scalar or (B,) per-row positions — writes the new K/V at
+    each row's cache_pos and attends.
     """
     b, s, d = x.shape
     # Megatron-SP: gather the seq-sharded residual before the projections;
@@ -286,18 +299,18 @@ def attention_block(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
     if cache is None:
         out = causal_attention(q, k, v, window=window, q_chunk=q_chunk,
                                positions=positions, causal=causal)
-        new_cache = None
+        new_cache = (k, v) if return_kv else None
     else:
         # write the token into a local (transient) view for attention, but
         # return only the new-token K/V — the caller commits them with ONE
-        # token-column DUS after the layer scan, keeping the persistent cache
-        # update in-place instead of restacking full caches (scan ys).
+        # token-column write after the layer scan, keeping the persistent
+        # cache update in-place instead of restacking full caches (scan ys).
         k_cache, v_cache = cache
         k_t, v_t = k.astype(k_cache.dtype), v.astype(v_cache.dtype)
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            k_cache, k_t, cache_pos, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            v_cache, v_t, cache_pos, axis=1)
+        cache_pos = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))
+        bidx = jnp.arange(b, dtype=jnp.int32)
+        k_cache = k_cache.at[bidx, cache_pos].set(k_t[:, 0])
+        v_cache = v_cache.at[bidx, cache_pos].set(v_t[:, 0])
         out = decode_attention(q, k_cache, v_cache, cache_pos, window=window)
         new_cache = (k_t, v_t)
     out = out.reshape(b, s, n_heads * hd)

@@ -172,26 +172,33 @@ def _mla_qkv_full(p: Params, x, cfg: ModelConfig, positions, dtype):
 
 
 def mla_full(p: Params, x, cfg: ModelConfig, positions, dtype,
-             q_chunk: int) -> jax.Array:
-    q, k, v, _, _ = _mla_qkv_full(p, x, cfg, positions, dtype)
+             q_chunk: int) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Expanded-form MLA.  Returns (out, latents) where latents are the
+    per-position decode-cache entries ({"c_kv", "k_rope"}) so bulk prefill
+    can commit them in one write."""
+    q, k, v, c_kv, k_rope = _mla_qkv_full(p, x, cfg, positions, dtype)
     out = L.causal_attention(q, k, v, q_chunk=q_chunk, positions=positions)
     b, s = x.shape[:2]
-    return constrain(L.linear(p, "wo", out.reshape(b, s, -1), dtype),
-                     "batch", "model", None)
+    out = constrain(L.linear(p, "wo", out.reshape(b, s, -1), dtype),
+                    "batch", "model", None)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
 
 
 def mla_decode(p: Params, x, cfg: ModelConfig, cache: Dict[str, jax.Array],
                pos, dtype) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Absorbed-form decode: attention in the compressed latent space.
 
-    cache: {"c_kv": (B, Smax, r), "k_rope": (B, Smax, qk_rope)}.
+    cache: {"c_kv": (B, Smax, r), "k_rope": (B, Smax, qk_rope)}; pos is a
+    (B,) vector of per-row positions (scalar callers are normalized by
+    ``decode_step``).
     """
     m: MLAConfig = cfg.mla
     b, s, _ = x.shape  # s == 1
     h = cfg.num_heads
     qk_rope, qk_nope, dv, r = (m.qk_rope_head_dim, m.qk_nope_head_dim,
                                m.v_head_dim, m.kv_lora_rank)
-    positions = pos[None].astype(jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos[:, None]                              # (B, 1)
 
     cq = L.rmsnorm(L.linear(p, "q_down", x, dtype), p["q_norm"], cfg.norm_eps)
     q = L.linear(p, "q_up", cq, dtype).reshape(b, h, qk_nope + qk_rope)
@@ -204,10 +211,11 @@ def mla_decode(p: Params, x, cfg: ModelConfig, cache: Dict[str, jax.Array],
 
     # transient updated views for attention; only the new-token latents are
     # returned (the caller commits one token column after the layer scan)
-    c_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
-    r_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    bidx = jnp.arange(b, dtype=jnp.int32)
+    c_cache = cache["c_kv"].at[bidx, pos].set(
+        c_new[:, 0].astype(cache["c_kv"].dtype))
+    r_cache = cache["k_rope"].at[bidx, pos].set(
+        k_rope_new[:, 0].astype(cache["k_rope"].dtype))
 
     # absorb: q_lat[b,h,r] = q_nope @ W_uk(h)^T
     kv_up = L.wload(p, "kv_up", dtype)
@@ -220,7 +228,7 @@ def mla_decode(p: Params, x, cfg: ModelConfig, cache: Dict[str, jax.Array],
               + jnp.einsum("bhp,bsp->bhs", q_rope.astype(r_cache.dtype),
                            r_cache, preferred_element_type=jnp.float32)) * scale
     kpos = jnp.arange(c_cache.shape[1], dtype=jnp.int32)
-    scores = jnp.where(kpos[None, None, :] <= pos, scores, -1e30)
+    scores = jnp.where(kpos[None, None, :] <= pos[:, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     o_lat = jnp.einsum("bhs,bsr->bhr", probs.astype(c_cache.dtype), c_cache,
                        preferred_element_type=jnp.float32).astype(dtype)
@@ -267,12 +275,14 @@ def init(cfg: ModelConfig, key) -> Params:
 
 
 def _block_apply(cfg: ModelConfig, bp: Params, x, positions, cache, pos,
-                 dtype, q_chunk: int):
+                 dtype, q_chunk: int, collect_kv: bool = False):
     xa = L.rmsnorm(x, bp["norm1"], cfg.norm_eps)
     new_cache = None
     if cfg.mla is not None:
         if cache is None:
-            h = mla_full(bp["mla"], xa, cfg, positions, dtype, q_chunk)
+            h, latents = mla_full(bp["mla"], xa, cfg, positions, dtype, q_chunk)
+            if collect_kv:
+                new_cache = latents
         else:
             h, new_cache = mla_decode(bp["mla"], xa, cfg, cache, pos, dtype)
     else:
@@ -280,7 +290,8 @@ def _block_apply(cfg: ModelConfig, bp: Params, x, positions, cache, pos,
         h, new_cache = L.attention_block(
             bp["attn"], xa, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
             hd=cfg.hd(), rope_theta=cfg.rope_theta, positions=positions,
-            q_chunk=q_chunk, cache=kv_cache, cache_pos=pos, dtype=dtype)
+            q_chunk=q_chunk, cache=kv_cache, cache_pos=pos,
+            return_kv=collect_kv, dtype=dtype)
         if new_cache is not None:
             new_cache = {"k": new_cache[0], "v": new_cache[1]}
     x = x + h
@@ -342,12 +353,52 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            cache: Dict[str, jax.Array], slot: jax.Array, length: jax.Array
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Bulk prefill of one serving slot (tokens: (1, S)): expanded-form
+    attention, then one cache write per leaf — MLA latents or GQA K/V,
+    whichever this config caches.
+
+    Served UNPADDED (``registry.Model.padded_prefill`` is False for moe):
+    pad tokens would enter the capacity-based expert dispatch and steal
+    capacity from real tokens.  Note prefill routes the whole prompt in one
+    batch while decode routes ``batch_slots`` tokens per step, so capacity
+    drops can differ between the two paths — inherent to dropping MoE (the
+    aux loss keeps the router balanced enough that drops are rare)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_lookup(params["embed"], tokens, dtype)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(x, bp):
+        out, _aux, kv = _block_apply(cfg, bp, x, positions, None, None, dtype,
+                                     L.DEFAULT_Q_CHUNK, collect_kv=True)
+        return out, kv
+
+    x, kvs = jax.lax.scan(body, x, params["blocks"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    x_last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+    logits = L.lm_logits(x_last, params["head"], dtype)
+    zero = jnp.zeros((), jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+    new_cache = {}
+    for name, full in cache.items():
+        tok = kvs[name].astype(full.dtype)      # (L, 1, S, ...)
+        starts = (zero, slot, zero) + (zero,) * (full.ndim - 3)
+        new_cache[name] = jax.lax.dynamic_update_slice(full, tok, starts)
+    return logits[:, 0], new_cache
+
+
 def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                 cache: Dict[str, jax.Array], pos: jax.Array
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """tokens: (B, 1); pos: scalar int32 or (B,) per-slot positions."""
     dtype = jnp.dtype(cfg.dtype)
+    b = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     x = L.embed_lookup(params["embed"], tokens, dtype)
-    positions = pos[None].astype(jnp.int32)
+    positions = pos[:, None]
 
     def body(x, xs):
         bp, layer_cache = xs
@@ -358,11 +409,11 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
     x, tok_cache = jax.lax.scan(body, x, (params["blocks"], cache))
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = L.lm_logits(x, params["head"], dtype)
-    # commit the new-token column into every cache leaf with one DUS each
-    zero = jnp.zeros((), jnp.int32)
+    # commit the new-token column into every cache leaf: one per-row scatter
+    # each (in-place when the cache is donated into the jitted step)
+    bidx = jnp.arange(b, dtype=jnp.int32)
     new_cache = {}
     for name, full in cache.items():
-        tok = tok_cache[name]
-        starts = (zero, zero, pos) + (zero,) * (full.ndim - 3)
-        new_cache[name] = jax.lax.dynamic_update_slice(full, tok, starts)
+        tok = tok_cache[name]                   # (L, B, 1, ...)
+        new_cache[name] = full.at[:, bidx, pos].set(tok[:, :, 0])
     return logits, new_cache

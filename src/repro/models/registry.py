@@ -26,8 +26,17 @@ class Model:
     forward: Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]
     init_cache: Callable[..., Any]
     decode_step: Callable[..., Tuple[jax.Array, Any]]
+    # prefill(params, tokens (1, S), cache, slot, length) -> (logits (1, V)
+    # at position length-1, cache with slot's rows written in one shot).
+    # The bulk-prefill path of the serving engine: one call per admitted
+    # prompt instead of one decode step per prompt token.
+    prefill: Callable[..., Tuple[jax.Array, Any]]
     head_matrix: Callable[[Params], jax.Array]
     input_fields: Tuple[str, ...]   # batch keys consumed by forward
+    # whether prefill tolerates right-padded token buffers (attention masks
+    # padded positions out; recurrent families consume every token and must
+    # be prefilled at the exact prompt length)
+    padded_prefill: bool = True
 
     def make_inputs(self, rng, batch: int, seq: int) -> Batch:
         """Concrete (random) inputs for smoke tests."""
@@ -72,6 +81,11 @@ def build(cfg: ModelConfig) -> Model:
             cfg, batch, max_len, dtype),
         decode_step=lambda params, tokens, cache, pos: mod.decode_step(
             cfg, params, tokens, cache, pos),
+        prefill=lambda params, tokens, cache, slot, length: mod.prefill(
+            cfg, params, tokens, cache, slot, length),
         head_matrix=lambda params: mod.head_matrix(cfg, params),
         input_fields=fields,
+        # moe is exact-length too: padded tokens would route through the
+        # capacity-based dispatch and steal expert capacity from real tokens
+        padded_prefill=cfg.family not in ("xlstm", "zamba", "moe"),
     )

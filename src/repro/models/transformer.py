@@ -50,13 +50,14 @@ def init(cfg: ModelConfig, key) -> Params:
 
 
 def _block_apply(cfg: ModelConfig, bp: Params, x: jax.Array,
-                 positions: jax.Array, cache, cache_pos, dtype, q_chunk: int):
+                 positions: jax.Array, cache, cache_pos, dtype, q_chunk: int,
+                 collect_kv: bool = False):
     h, new_cache = L.attention_block(
         bp["attn"], L.rmsnorm(x, bp["norm1"], cfg.norm_eps),
         n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, hd=cfg.hd(),
         rope_theta=cfg.rope_theta, positions=positions,
         window=cfg.sliding_window, q_chunk=q_chunk,
-        cache=cache, cache_pos=cache_pos, dtype=dtype)
+        cache=cache, cache_pos=cache_pos, return_kv=collect_kv, dtype=dtype)
     x = x + h
     x = x + L.swiglu(bp["mlp"], L.rmsnorm(x, bp["norm2"], cfg.norm_eps), dtype)
     return x, new_cache
@@ -109,13 +110,49 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            cache: Dict[str, jax.Array], slot: jax.Array, length: jax.Array
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Bulk prefill of one serving slot: chunked full-seq attention + a
+    one-shot cache write.  tokens: (1, S) int32 (padded past ``length``);
+    returns (last-real-token logits (1, vocab), cache).  Padded positions
+    land in the cache but are never attended: decode masks each slot at
+    kpos <= pos, and every position is re-written before it enters a mask.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_lookup(params["embed"], tokens, dtype)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(x, bp):
+        out, kv = _block_apply(cfg, bp, x, positions, None, None, dtype,
+                               L.DEFAULT_Q_CHUNK, collect_kv=True)
+        return out, kv
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    x_last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+    logits = L.lm_logits(x_last, head_matrix(cfg, params), dtype)
+    zero = jnp.zeros((), jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+    starts = (zero, slot, zero, zero, zero)
+    k_new = jax.lax.dynamic_update_slice(cache["k"],
+                                         ks.astype(cache["k"].dtype), starts)
+    v_new = jax.lax.dynamic_update_slice(cache["v"],
+                                         vs.astype(cache["v"].dtype), starts)
+    return logits[:, 0], {"k": k_new, "v": v_new}
+
+
 def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                 cache: Dict[str, jax.Array], pos: jax.Array,
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One decode step.  tokens: (B, 1) int32; pos: scalar int32."""
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 or (B,)
+    per-slot positions (each batch row lives on its own cache timeline)."""
     dtype = jnp.dtype(cfg.dtype)
+    b = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     x = L.embed_lookup(params["embed"], tokens, dtype)
-    positions = pos[None].astype(jnp.int32) if pos.ndim == 0 else pos
+    positions = pos[:, None]
 
     def body(x, xs):
         bp, kc, vc = xs
@@ -127,10 +164,9 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                                                cache["v"]))
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = L.lm_logits(x, head_matrix(cfg, params), dtype)
-    # single token-column write into the persistent caches (in-place on TPU)
-    zero = jnp.zeros((), jnp.int32)
-    k_new = jax.lax.dynamic_update_slice(cache["k"], k_tok,
-                                         (zero, zero, pos, zero, zero))
-    v_new = jax.lax.dynamic_update_slice(cache["v"], v_tok,
-                                         (zero, zero, pos, zero, zero))
+    # per-row token-column write into the persistent caches (in-place when
+    # the cache is donated into the jitted step)
+    bidx = jnp.arange(b, dtype=jnp.int32)
+    k_new = cache["k"].at[:, bidx, pos].set(k_tok[:, :, 0])
+    v_new = cache["v"].at[:, bidx, pos].set(v_tok[:, :, 0])
     return logits, {"k": k_new, "v": v_new}

@@ -105,13 +105,14 @@ def encode(cfg: ModelConfig, params: Params, frames: jax.Array, *,
     return L.layernorm(x, params["enc_final_norm"], cfg.norm_eps)
 
 
-def _dec_block_apply(cfg, bp, x, enc_out, positions, cache, pos, dtype, q_chunk):
+def _dec_block_apply(cfg, bp, x, enc_out, positions, cache, pos, dtype, q_chunk,
+                     collect_kv: bool = False):
     h, new_kv = L.attention_block(
         bp["attn"], L.layernorm(x, bp["norm1"], cfg.norm_eps),
         n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, hd=cfg.hd(),
         rope_theta=cfg.rope_theta, positions=positions,
         q_chunk=q_chunk, cache=cache, cache_pos=pos, use_rope=False,
-        dtype=dtype)
+        return_kv=collect_kv, dtype=dtype)
     x = x + h
     x = x + L.cross_attention_block(
         bp["xattn"], L.layernorm(x, bp["norm_x"], cfg.norm_eps), enc_out,
@@ -166,14 +167,48 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            cache: Dict[str, jax.Array], slot: jax.Array, length: jax.Array
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Bulk decoder prefill of one serving slot against the slot's cached
+    encoder output.  tokens: (1, S) int32, padded past ``length``."""
+    dtype = jnp.dtype(cfg.dtype)
+    s = tokens.shape[1]
+    slot = jnp.asarray(slot, jnp.int32)
+    x = L.embed_lookup(params["embed"], tokens, dtype)
+    x = x + sinusoidal_positions(s, cfg.d_model).astype(dtype)[None]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    enc_out = jax.lax.dynamic_slice_in_dim(cache["enc_out"], slot, 1,
+                                           axis=0).astype(dtype)
+
+    def body(x, bp):
+        out, kv = _dec_block_apply(cfg, bp, x, enc_out, positions, None, None,
+                                   dtype, 512, collect_kv=True)
+        return out, kv
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.layernorm(x, params["final_norm"], cfg.norm_eps)
+    x_last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+    logits = L.lm_logits(x_last, params["embed"].T, dtype)
+    zero = jnp.zeros((), jnp.int32)
+    starts = (zero, slot, zero, zero, zero)
+    k_new = jax.lax.dynamic_update_slice(cache["k"],
+                                         ks.astype(cache["k"].dtype), starts)
+    v_new = jax.lax.dynamic_update_slice(cache["v"],
+                                         vs.astype(cache["v"].dtype), starts)
+    return logits[:, 0], {"k": k_new, "v": v_new, "enc_out": cache["enc_out"]}
+
+
 def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                 cache: Dict[str, jax.Array], pos: jax.Array
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """tokens: (B, 1); pos: scalar int32 or (B,) per-slot positions."""
     dtype = jnp.dtype(cfg.dtype)
     b = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     x = L.embed_lookup(params["embed"], tokens, dtype)
-    positions = pos[None].astype(jnp.int32)
-    x = x + sinusoidal_embed(positions, cfg.d_model).astype(dtype)[None]
+    positions = pos[:, None]
+    x = x + sinusoidal_embed(pos, cfg.d_model).astype(dtype)[:, None, :]
     enc_out = cache["enc_out"].astype(dtype)
 
     def body(x, xs):
@@ -186,9 +221,7 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                                                cache["k"], cache["v"]))
     x = L.layernorm(x, params["final_norm"], cfg.norm_eps)
     logits = L.lm_logits(x, params["embed"].T, dtype)
-    zero = jnp.zeros((), jnp.int32)
-    k_new = jax.lax.dynamic_update_slice(cache["k"], k_tok,
-                                         (zero, zero, pos, zero, zero))
-    v_new = jax.lax.dynamic_update_slice(cache["v"], v_tok,
-                                         (zero, zero, pos, zero, zero))
+    bidx = jnp.arange(b, dtype=jnp.int32)
+    k_new = cache["k"].at[:, bidx, pos].set(k_tok[:, :, 0])
+    v_new = cache["v"].at[:, bidx, pos].set(v_tok[:, :, 0])
     return logits, {"k": k_new, "v": v_new, "enc_out": cache["enc_out"]}

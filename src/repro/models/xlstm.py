@@ -214,11 +214,42 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     cache: Dict[str, Any] = {}
     for i in range(cfg.num_layers):
         if _is_slstm(cfg, i):
-            zero = jnp.zeros((batch, d), jnp.float32)
-            cache[f"layer{i}"] = (zero, zero, zero)
+            # three DISTINCT buffers: the cache is donated into the jitted
+            # decode step, and XLA rejects donating one buffer twice
+            cache[f"layer{i}"] = tuple(
+                jnp.zeros((batch, d), jnp.float32) for _ in range(3))
         else:
             cache[f"layer{i}"] = jnp.zeros((batch, h, dk, dk + 1), jnp.float32)
     return cache
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            cache: Dict[str, Any], slot: jax.Array, length: jax.Array
+            ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Bulk prefill of one serving slot: chunkwise-parallel (mLSTM) / scanned
+    (sLSTM) full-sequence pass from a fresh state, then one state write per
+    layer at ``slot``.  tokens: (1, S) int32 — NOT padded (recurrent state
+    consumes every token, so the engine prefills recurrent families at the
+    exact prompt length; see registry.Model.padded_prefill)."""
+    dtype = jnp.dtype(cfg.dtype)
+    slot = jnp.asarray(slot, jnp.int32)
+    x = L.embed_lookup(params["embed"], tokens, dtype)
+    new_cache: Dict[str, Any] = {}
+    for i, bp in enumerate(params["blocks"]):
+        full = cache[f"layer{i}"]
+        if "slstm" in bp:
+            x, fstate = slstm_block(bp["slstm"], x, cfg, dtype)
+            new_cache[f"layer{i}"] = tuple(
+                f.at[slot].set(st[0].astype(f.dtype))
+                for f, st in zip(full, fstate))
+        else:
+            x, fstate = mlstm_block(bp["mlstm"], x, cfg, dtype)
+            new_cache[f"layer{i}"] = full.at[slot].set(
+                fstate[0].astype(full.dtype))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    x_last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+    logits = L.lm_logits(x_last, params["head"], dtype)
+    return logits[:, 0], new_cache
 
 
 def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,

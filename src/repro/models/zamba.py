@@ -82,12 +82,19 @@ def _mamba_finish(p: Params, y, v, z, cfg: ModelConfig, dtype, b, s):
     return constrain(L.linear(p, "out_proj", y, dtype), "batch", "model", None)
 
 
-def mamba_block(p: Params, x, cfg: ModelConfig, dtype, chunk: int = 128):
+def mamba_block(p: Params, x, cfg: ModelConfig, dtype, chunk: int = 128,
+                return_state: bool = False):
+    """Full-sequence Mamba2 block.  ``return_state=True`` additionally
+    returns the final (ssm_state, conv_state) so bulk prefill can seed the
+    decode caches in one write."""
     b, s, _ = x.shape
     xa = L.rmsnorm(x, p["norm"], cfg.norm_eps)
-    z, v, k, q, log_a, dt, _ = _mamba_streams(p, xa, cfg, dtype, None)
-    y, _ = chunked_linear_recurrence(q, k, v, log_a, dt, chunk=chunk)
-    return x + _mamba_finish(p, y.astype(dtype), v, z, cfg, dtype, b, s)
+    z, v, k, q, log_a, dt, new_conv = _mamba_streams(p, xa, cfg, dtype, None)
+    y, fstate = chunked_linear_recurrence(q, k, v, log_a, dt, chunk=chunk)
+    out = x + _mamba_finish(p, y.astype(dtype), v, z, cfg, dtype, b, s)
+    if return_state:
+        return out, fstate, new_conv
+    return out
 
 
 def mamba_decode(p: Params, x, cfg: ModelConfig, dtype, ssm_state, conv_state):
@@ -112,12 +119,12 @@ def shared_attn_init(key, cfg: ModelConfig) -> Params:
 
 
 def _shared_attn_apply(sp: Params, x, cfg: ModelConfig, positions, cache,
-                       pos, dtype, q_chunk):
+                       pos, dtype, q_chunk, collect_kv: bool = False):
     h, new_cache = L.attention_block(
         sp["attn"], L.rmsnorm(x, sp["norm1"], cfg.norm_eps),
         n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, hd=cfg.hd(),
         rope_theta=cfg.rope_theta, positions=positions, q_chunk=q_chunk,
-        cache=cache, cache_pos=pos, dtype=dtype)
+        cache=cache, cache_pos=pos, return_kv=collect_kv, dtype=dtype)
     x = x + h
     x = x + L.swiglu(sp["mlp"], L.rmsnorm(x, sp["norm2"], cfg.norm_eps), dtype)
     return x, new_cache
@@ -191,12 +198,68 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            cache: Dict[str, jax.Array], slot: jax.Array, length: jax.Array
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Bulk prefill of one serving slot: chunkwise SSD over the prompt plus
+    per-group shared-attention K/V, committed with one write per cache leaf.
+    tokens: (1, S) int32 — NOT padded (the SSM/conv state consumes every
+    token; see registry.Model.padded_prefill)."""
+    dtype = jnp.dtype(cfg.dtype)
+    slot = jnp.asarray(slot, jnp.int32)
+    x = L.embed_lookup(params["embed"], tokens, dtype)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    n_groups, per = _groups(cfg)
+    grouped = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_groups, per, *a.shape[1:]), params["blocks"])
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+
+    def mamba_body(x, bp):
+        out, fs, fc = mamba_block(bp, x, cfg, dtype, return_state=True)
+        return out, (fs, fc)
+
+    for g in range(n_groups):
+        gp = jax.tree_util.tree_map(lambda a: a[g], grouped)
+        x, (fss, fcs) = jax.lax.scan(mamba_body, x, gp)
+        new_ssm.append(fss)           # (per, 1, H, st, hd)
+        new_conv.append(fcs)          # (per, 1, K-1, d_in)
+        x, kv = _shared_attn_apply(params["shared_attn"], x, cfg, positions,
+                                   None, None, dtype, L.DEFAULT_Q_CHUNK,
+                                   collect_kv=True)
+        new_k.append(kv[0])           # (1, S, KV, hd)
+        new_v.append(kv[1])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    x_last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+    logits = L.lm_logits(x_last, params["head"], dtype)
+    zero = jnp.zeros((), jnp.int32)
+    dus = jax.lax.dynamic_update_slice
+    new_cache = {
+        "ssm": dus(cache["ssm"],
+                   jnp.concatenate(new_ssm, 0).astype(cache["ssm"].dtype),
+                   (zero, slot, zero, zero, zero)),
+        "conv": dus(cache["conv"],
+                    jnp.concatenate(new_conv, 0).astype(cache["conv"].dtype),
+                    (zero, slot, zero, zero)),
+        "attn_k": dus(cache["attn_k"],
+                      jnp.stack(new_k, 0).astype(cache["attn_k"].dtype),
+                      (zero, slot, zero, zero, zero)),
+        "attn_v": dus(cache["attn_v"],
+                      jnp.stack(new_v, 0).astype(cache["attn_v"].dtype),
+                      (zero, slot, zero, zero, zero)),
+    }
+    return logits[:, 0], new_cache
+
+
 def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                 cache: Dict[str, jax.Array], pos: jax.Array
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """tokens: (B, 1); pos: scalar int32 or (B,) per-slot positions."""
     dtype = jnp.dtype(cfg.dtype)
+    b = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     x = L.embed_lookup(params["embed"], tokens, dtype)
-    positions = pos[None].astype(jnp.int32)
+    positions = pos[:, None]
     n_groups, per = _groups(cfg)
     grouped = jax.tree_util.tree_map(
         lambda a: a.reshape(n_groups, per, *a.shape[1:]), params["blocks"])
@@ -221,15 +284,13 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
         new_v.append(kv[1])
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = L.lm_logits(x, params["head"], dtype)
-    zero = jnp.zeros((), jnp.int32)
+    bidx = jnp.arange(b, dtype=jnp.int32)
     new_cache = {
         "ssm": jnp.concatenate(new_ssm, axis=0),
         "conv": jnp.concatenate(new_conv, axis=0),
-        "attn_k": jax.lax.dynamic_update_slice(
-            cache["attn_k"], jnp.stack(new_k, axis=0),
-            (zero, zero, pos, zero, zero)),
-        "attn_v": jax.lax.dynamic_update_slice(
-            cache["attn_v"], jnp.stack(new_v, axis=0),
-            (zero, zero, pos, zero, zero)),
+        "attn_k": cache["attn_k"].at[:, bidx, pos].set(
+            jnp.stack(new_k, axis=0)[:, :, 0]),
+        "attn_v": cache["attn_v"].at[:, bidx, pos].set(
+            jnp.stack(new_v, axis=0)[:, :, 0]),
     }
     return logits, new_cache

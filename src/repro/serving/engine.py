@@ -1,28 +1,43 @@
-"""Batched serving engine: prefill + decode with KV caches, FORMS weights.
+"""Batched serving engine: bulk prefill + donated decode with KV caches and
+FORMS weights.
 
-A deliberately small but real engine: fixed-batch slots, greedy/temperature
-sampling, per-slot lengths, continuous batching (a finished slot is refilled
-from the queue), and an optional FORMS compression pass over the weights
-(``repro.forms.compress_tree`` — the paper's deployment story: the decode
-step consumes the *compressed* pytree directly, uint8 magnitudes + fragment
-signs through the polarized-matmul kernel, no float fake-quant copy).
+A deliberately small but real engine, built so a steady-state decode step
+does no avoidable HBM copies and no host round-trips:
 
-The decode step is a single jitted function over (params, cache, tokens,
-pos) — exactly what the decode dry-run cells lower at production shape.
+* **Bulk prefill** — admitting an L-token prompt costs ONE jitted
+  ``model.prefill`` call (chunked full-sequence attention + a one-shot cache
+  write at the slot), not L decode steps.  Attention families pad prompts to
+  power-of-two buckets to bound recompilation; recurrent families
+  (``Model.padded_prefill == False``) compile per exact length.
+* **Donated caches** — the KV/state cache is donated into both jitted entry
+  points (``donate_argnums``, matching launch/train.py), so cache updates
+  alias in place instead of copying the full cache every token.
+* **On-device sampling** — greedy and temperature sampling run inside the
+  jitted step (``jax.random.categorical``, per-slot temperature vector); the
+  host never sees logits on the hot path.
+* **Chunked decode** — an inner ``lax.scan`` decodes ``decode_block`` tokens
+  per dispatch, so the host syncs once every k tokens instead of every token.
+* **Per-slot positions** — every slot owns its cache timeline end to end
+  (vector ``pos`` through ``decode_step``), so continuous batching admits a
+  new prompt into a finished slot without burning the other slots' cache
+  length.
+
+With ``forms=True``/``spec=...`` the engine compresses the weights once
+(``repro.forms.compress_tree``) and decodes directly on the compressed
+pytree: uint8 magnitudes + int8 fragment signs through the polarized-matmul
+kernel, no float fake-quant copy.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 import warnings
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
 from repro.forms import (CompressReport, FormsSpec, compress_tree,
                          decompress_tree, default_spec)
 from repro.models.registry import Model
@@ -68,13 +83,17 @@ class Result:
     decode_ms: float = 0.0
 
 
+_MIN_BUCKET = 8
+
+
 class ServingEngine:
     """Continuous-batching engine over fixed decode slots."""
 
     def __init__(self, model: Model, params: Any, *, max_len: int = 512,
                  batch_slots: int = 8, forms: bool = False,
                  spec: Optional[FormsSpec] = None,
-                 fragment: int = 8, bits: int = 8, rng_seed: int = 0):
+                 fragment: int = 8, bits: int = 8, rng_seed: int = 0,
+                 decode_block: int = 4, donate: bool = True):
         self.model = model
         self.cfg = model.config
         self.spec: Optional[FormsSpec] = None
@@ -88,90 +107,199 @@ class ServingEngine:
         self.params = params
         self.max_len = max_len
         self.slots = batch_slots
+        self.decode_block = max(1, int(decode_block))
+        self.donate = donate
         self.cache = model.init_cache(batch_slots, max_len)
-        self.rng = np.random.RandomState(rng_seed)
+        self._key = jax.random.PRNGKey(rng_seed)
 
-        # the spec's backend/tiling hints bake into the traced decode step
-        # (repro.forms.default_spec is read at trace time by forms.apply)
-        def _decode_fn(p, t, c, pos):
+        # the spec's backend/tiling hints bake into the traced hot-path fns
+        # (repro.forms.default_spec is read at trace time by forms.apply);
+        # the cache (argument 1) is DONATED — updates alias in place and the
+        # caller must always rebind ``self.cache`` to the returned tree.
+        def _decode_fn(p, c, toks, pos, temps, key):
             with default_spec(self.spec):
-                return model.decode_step(p, t, c, pos)
+                def body(carry, _):
+                    tok, cache, pos, key = carry
+                    logits, cache = model.decode_step(p, tok[:, None], cache,
+                                                      pos)
+                    lg = logits[:, 0].astype(jnp.float32)
+                    key, sub = jax.random.split(key)
+                    nxt = _sample_on_device(lg, temps, sub)
+                    return (nxt, cache, pos + 1, key), nxt
 
-        self._decode = jax.jit(_decode_fn)
+                (_, c, _, _), toks_out = jax.lax.scan(
+                    body, (toks, c, pos, key), None,
+                    length=self.decode_block)
+            return toks_out, c
 
-    def _sample(self, logits: np.ndarray, temperature: float) -> int:
-        if temperature <= 0.0:
-            return int(np.argmax(logits))
-        z = logits / temperature
-        z = z - z.max()
-        p = np.exp(z) / np.exp(z).sum()
-        return int(self.rng.choice(len(p), p=p))
+        self._decode = jax.jit(_decode_fn,
+                               donate_argnums=(1,) if donate else ())
+        self._prefill_fns: Dict[int, Any] = {}
+
+    # ------------------------------------------------------------------
+    # prefill
+    # ------------------------------------------------------------------
+
+    def _bucket(self, n: int) -> int:
+        """Padded-prefill bucket (power of two) to bound recompilation; the
+        exact length for recurrent families, whose state consumes every
+        token."""
+        if not self.model.padded_prefill:
+            return n
+        b = _MIN_BUCKET
+        while b < n:
+            b *= 2
+        return min(b, self.max_len)
+
+    def _get_prefill(self, bucket: int):
+        fn = self._prefill_fns.get(bucket)
+        if fn is None:
+            def _prefill_fn(p, toks, c, slot, length, temp, key):
+                with default_spec(self.spec):
+                    logits, c = self.model.prefill(p, toks, c, slot, length)
+                lg = logits.reshape(1, -1).astype(jnp.float32)
+                tok = _sample_on_device(lg, temp[None], key)
+                return tok[0], c
+
+            fn = jax.jit(_prefill_fn,
+                         donate_argnums=(2,) if self.donate else ())
+            self._prefill_fns[bucket] = fn
+        return fn
+
+    def prefill_slot(self, slot: int, prompt: np.ndarray,
+                     temperature: float = 0.0) -> int:
+        """Admit a prompt into ``slot`` with one bulk-prefill call; returns
+        the first sampled token.  The slot's timeline restarts at 0 and the
+        next decode write position is ``len(prompt)``."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        n = int(prompt.shape[0])
+        if not 1 <= n < self.max_len:
+            raise ValueError(
+                f"prompt length {n} must be in [1, max_len={self.max_len})")
+        bucket = self._bucket(n)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = prompt
+        self._key, sub = jax.random.split(self._key)
+        fn = self._get_prefill(bucket)
+        tok, self.cache = fn(self.params, jnp.asarray(toks), self.cache,
+                             jnp.asarray(slot, jnp.int32),
+                             jnp.asarray(n, jnp.int32),
+                             jnp.asarray(temperature, jnp.float32), sub)
+        return int(tok)
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+
+    def decode_chunk(self, tokens: np.ndarray, positions: np.ndarray,
+                     temps: np.ndarray) -> np.ndarray:
+        """One donated, jitted dispatch of ``decode_block`` steps for all
+        slots; returns the (decode_block, slots) sampled-token grid.  The
+        single host sync of the steady-state loop.
+
+        The host buffers are COPIED at the boundary (``jnp.array``, not
+        ``asarray``): CPU transfers are zero-copy and dispatch is async, so
+        handing the device a view of a numpy buffer the serving loop mutates
+        right after is a read race (observed: decode steps seeing
+        next-iteration positions).
+        """
+        self._key, sub = jax.random.split(self._key)
+        toks_out, self.cache = self._decode(
+            self.params, self.cache,
+            jnp.array(tokens, jnp.int32, copy=True),
+            jnp.array(positions, jnp.int32, copy=True),
+            jnp.array(temps, jnp.float32, copy=True), sub)
+        return np.asarray(toks_out)
+
+    # ------------------------------------------------------------------
+    # serving loop
+    # ------------------------------------------------------------------
 
     def run(self, requests: List[Request]) -> List[Result]:
         """Serve a list of requests with continuous batching over slots."""
         queue = list(requests)
-        active: List[Optional[Tuple[Request, Result, int]]] = [None] * self.slots
+        active: List[Optional[Tuple[Request, Result]]] = [None] * self.slots
         done: List[Result] = []
-        # position is global per engine run (single shared cache timeline per
-        # slot): each slot tracks its own write position
-        slot_pos = [0] * self.slots
+        cur = np.zeros(self.slots, np.int32)        # current token per slot
+        slot_pos = np.zeros(self.slots, np.int32)   # next cache write position
+        temps = np.zeros(self.slots, np.float32)
 
-        def admit(slot: int) -> bool:
-            if not queue:
-                return False
-            req = queue.pop(0)
-            res = Result(uid=req.uid, tokens=[])
-            t0 = time.perf_counter()
-            # prefill: feed prompt tokens through decode steps (simple engine;
-            # the bulk-prefill path exists in the dry-run prefill cells)
-            pos = 0
-            for tok in req.prompt[:-1]:
-                tok_b = jnp.full((self.slots, 1), int(tok), jnp.int32)
-                _, self.cache = self._slot_step(tok_b, slot, pos)
-                pos += 1
-            res.prefill_ms = (time.perf_counter() - t0) * 1e3
-            active[slot] = (req, res, int(req.prompt[-1]))
-            slot_pos[slot] = pos
-            return True
+        def admit(slot: int) -> None:
+            """Admit queued requests into ``slot`` until one survives its
+            prefill (a request whose budget is exhausted by the prefill
+            token completes immediately and the loop drains the next one —
+            iteratively, so a long queue of 1-token requests can't blow the
+            stack)."""
+            while queue:
+                req = queue.pop(0)
+                res = Result(uid=req.uid, tokens=[])
+                # oversized prompts keep their most recent context-window
+                # worth of tokens (leaving room to generate) instead of
+                # aborting the whole run
+                prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+                if prompt.shape[0] >= self.max_len:
+                    prompt = prompt[-(self.max_len - 1):]
+                t0 = time.perf_counter()
+                first = self.prefill_slot(slot, prompt, req.temperature)
+                res.prefill_ms = (time.perf_counter() - t0) * 1e3
+                res.tokens.append(first)
+                n_prompt = int(prompt.shape[0])
+                if (len(res.tokens) >= req.max_new_tokens
+                        or n_prompt >= self.max_len - 1):
+                    done.append(res)
+                    continue
+                cur[slot] = first
+                slot_pos[slot] = n_prompt
+                temps[slot] = req.temperature
+                active[slot] = (req, res)
+                return
 
-        def _noop():
-            pass
+        def finish(slot: int) -> None:
+            done.append(active[slot][1])
+            active[slot] = None
+            temps[slot] = 0.0
+            admit(slot)
 
         for slot in range(self.slots):
             admit(slot)
 
+        k = self.decode_block
         while any(a is not None for a in active):
-            # batch the current token of every active slot
-            toks = np.zeros((self.slots, 1), np.int32)
-            for s, a in enumerate(active):
-                if a is not None:
-                    toks[s, 0] = a[2]
-            # all slots share one position counter per step; use per-slot max
-            pos = max(slot_pos)
+            # snapshot the attribution denominator BEFORE the loop body
+            # mutates ``active`` (finished slots must still pay their share
+            # of the step they took part in)
+            n_active = sum(a is not None for a in active)
             t0 = time.perf_counter()
-            logits, self.cache = self._decode(
-                self.params, jnp.asarray(toks), self.cache,
-                jnp.array(pos, jnp.int32))
-            logits = np.asarray(logits.astype(jnp.float32))[:, 0]
+            out = self.decode_chunk(cur, slot_pos, temps)   # (k, slots)
             dt = (time.perf_counter() - t0) * 1e3
             for s in range(self.slots):
                 a = active[s]
                 if a is None:
                     continue
-                req, res, _ = a
-                res.decode_ms += dt / max(1, sum(x is not None for x in active))
-                nxt = self._sample(logits[s], req.temperature)
-                res.tokens.append(nxt)
-                slot_pos[s] = pos + 1
-                if len(res.tokens) >= req.max_new_tokens or pos + 1 >= self.max_len - 1:
-                    done.append(res)
-                    active[s] = None
-                    if queue and pos + 1 < self.max_len // 2:
-                        admit(s)
+                req, res = a
+                res.decode_ms += dt / max(1, n_active)
+                # tokens this slot can still accept: request budget and the
+                # slot's remaining cache length
+                budget = min(req.max_new_tokens - len(res.tokens),
+                             self.max_len - 1 - int(slot_pos[s]))
+                take = min(k, budget)
+                res.tokens.extend(int(t) for t in out[:take, s])
+                if take >= budget:
+                    finish(s)      # may re-admit into this slot
                 else:
-                    active[s] = (req, res, nxt)
+                    cur[s] = out[k - 1, s]
+                    slot_pos[s] += k
         return done
 
-    def _slot_step(self, toks, slot, pos):
-        return self._decode(self.params, toks, self.cache,
-                            jnp.array(pos, jnp.int32))
+
+def _sample_on_device(logits: jax.Array, temps: jax.Array,
+                      key: jax.Array) -> jax.Array:
+    """Greedy/temperature sampling inside the jitted step.
+
+    logits: (B, V) f32; temps: (B,) — rows with temp <= 0 take the argmax,
+    others sample from softmax(logits / temp) via ``jax.random.categorical``.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.random.categorical(key, scaled).astype(jnp.int32)
+    return jnp.where(temps > 0.0, sampled, greedy)
