@@ -53,6 +53,21 @@ def header() -> None:
     print("name,us_per_call,derived", flush=True)
 
 
+def tiny_serving_cfg():
+    """The one tiny yi-9b config of the serving microbenches.
+
+    Shared by bench_fps.serving_hot_path and the sharded child process so
+    the single-device and sharded rows always measure the same model.
+    """
+    import dataclasses
+
+    from repro.configs import get_reduced
+
+    return dataclasses.replace(get_reduced("yi-9b"), num_layers=2, d_model=64,
+                               num_heads=4, num_kv_heads=2, head_dim=16,
+                               d_ff=128, vocab_size=512)
+
+
 # ---------------------------------------------------------------------------
 # Trained FORMS CNN (shared across accuracy/eic/fps/variation benches)
 # ---------------------------------------------------------------------------

@@ -158,7 +158,9 @@ def _operands(line: str, op: Optional[str] = None) -> List[str]:
         paren = line[start + 1:]
     except ValueError:
         return []
-    depth, out, tok = 1, [], ""
+    # depth counts parens AND brackets/braces: typed operands carry shapes
+    # ("f32[16,32]{1,0} %x") whose commas must not split the operand list
+    depth, bdepth, out, tok = 1, 0, [], ""
     for ch in paren:
         if ch == "(":
             depth += 1
@@ -166,7 +168,11 @@ def _operands(line: str, op: Optional[str] = None) -> List[str]:
             depth -= 1
             if depth == 0:
                 break
-        if ch == "," and depth == 1:
+        elif ch in "[{":
+            bdepth += 1
+        elif ch in "]}":
+            bdepth -= 1
+        if ch == "," and depth == 1 and bdepth == 0:
             out.append(tok.strip())
             tok = ""
         else:
@@ -175,7 +181,11 @@ def _operands(line: str, op: Optional[str] = None) -> List[str]:
         out.append(tok.strip())
     names = []
     for t in out:
-        m = re.match(r"%?([\w.\-]+)", t)
+        # operands may be typed ("f32[16,32]{1,0} %dot.3") or bare ("%dot.3"
+        # / "dot.3"); the operand NAME is always the last whitespace token —
+        # matching from the front would return the dtype instead.
+        last = t.split()[-1] if t.split() else ""
+        m = re.match(r"%?([\w.\-]+)", last)
         if m:
             names.append(m.group(1))
     return names

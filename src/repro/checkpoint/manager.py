@@ -91,8 +91,18 @@ def save(path: str, tree: PyTree, step: int,
     return final
 
 
-def restore(path: str, template: PyTree, step: Optional[int] = None) -> Tuple[PyTree, int]:
-    """Restore the given (or latest) step into the template's structure."""
+def restore(path: str, template: PyTree, step: Optional[int] = None,
+            shardings: Optional[PyTree] = None) -> Tuple[PyTree, int]:
+    """Restore the given (or latest) step into the template's structure.
+
+    ``shardings`` (a pytree of ``jax.sharding.Sharding`` matching the
+    template — e.g. ``distributed.sharding.params_shardings`` output, whose
+    compressed ``FormsLinearParams`` nodes flatten to per-array shardings)
+    places every leaf straight onto its mesh layout: each device receives
+    only its shard of the host array, so a model-parallel restore never
+    materializes a replicated copy per device.  Leaves without a sharding
+    (``None``) land on the default device as before.
+    """
     if step is None:
         step = latest_step(path)
         if step is None:
@@ -105,12 +115,25 @@ def restore(path: str, template: PyTree, step: Optional[int] = None) -> Tuple[Py
     if len(leaves) != len(data.files):
         raise ValueError(
             f"checkpoint has {len(data.files)} leaves, template has {len(leaves)}")
+    sh_leaves: Optional[List[Any]] = None
+    if shardings is not None:
+        # None entries mean "default placement" — keep them as leaves
+        # (plain tree_flatten drops None as an empty subtree)
+        sh_leaves = jax.tree_util.tree_flatten(
+            shardings, is_leaf=lambda x: x is None)[0]
+        if len(sh_leaves) != len(leaves):
+            raise ValueError(
+                f"shardings tree has {len(sh_leaves)} leaves, template has "
+                f"{len(leaves)} — pass the params_shardings of the template")
     new_leaves = []
     for i, tmpl in enumerate(leaves):
         arr = _decode(data[f"leaf_{i}"], meta["dtypes"][i])
         if hasattr(tmpl, "shape") and tuple(arr.shape) != tuple(np.shape(tmpl)):
             raise ValueError(f"leaf {i}: shape {arr.shape} != {np.shape(tmpl)}")
-        new_leaves.append(jnp.asarray(arr))
+        if sh_leaves is not None and sh_leaves[i] is not None:
+            new_leaves.append(jax.device_put(arr, sh_leaves[i]))
+        else:
+            new_leaves.append(jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, new_leaves), step
 
 
@@ -187,9 +210,10 @@ class CheckpointManager:
         if t is not None:
             t.join()
 
-    def restore_latest(self, template: PyTree) -> Tuple[PyTree, int]:
+    def restore_latest(self, template: PyTree,
+                       shardings: Optional[PyTree] = None) -> Tuple[PyTree, int]:
         self.wait()
-        return restore(self.path, template)
+        return restore(self.path, template, shardings=shardings)
 
     def latest_step(self) -> Optional[int]:
         return latest_step(self.path)

@@ -28,6 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.paths import path_str as _path_str
+from repro.forms.linear import FormsLinearParams
+
 PyTree = Any
 
 
@@ -220,6 +223,10 @@ def param_spec(path: str, shape: Tuple[int, ...], scanned: bool = False) -> P:
 
 FSDP_THRESHOLD = 1 << 22   # leaves above 4M elements get FSDP sharding
 
+# tree prefixes whose params carry a leading scan (layer) axis
+SCANNED_PREFIXES: Tuple[str, ...] = ("blocks", "enc_blocks", "dec_blocks",
+                                     "groups")
+
 
 def _fsdp_extend(entries: list, shape: Sequence[int], ctx: ParallelContext,
                  threshold: int = FSDP_THRESHOLD) -> list:
@@ -253,35 +260,179 @@ def _fsdp_extend(entries: list, shape: Sequence[int], ctx: ParallelContext,
     return entries
 
 
+def _is_forms_leaf(x) -> bool:
+    return isinstance(x, FormsLinearParams)
+
+
+def _dense_entries(pstr: str, shape: Tuple[int, ...], ctx: ParallelContext,
+                   scanned: bool, fsdp: bool) -> list:
+    spec = param_spec(pstr, shape, scanned=scanned)
+    logical = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    entries = []
+    for dim, name in zip(shape, logical):
+        if name is None:
+            entries.append(None)
+        else:
+            size = ctx.axis_size(name)
+            entries.append(ctx.resolve(name)
+                           if size > 1 and dim % size == 0 else None)
+    if fsdp:
+        entries = _fsdp_extend(entries, shape, ctx)
+    return entries
+
+
+def forms_param_spec(pstr: str, leaf: FormsLinearParams, ctx: ParallelContext,
+                     scanned: bool = False, fsdp: bool = True,
+                     threshold: int = FSDP_THRESHOLD
+                     ) -> Tuple[P, P, P]:
+    """(mags, signs, scale) PartitionSpecs for one compressed leaf.
+
+    The three planes are per-column state of ONE logical matrix and must
+    co-shard (arXiv:2310.12182 makes the same point for block-wise
+    quantization metadata):
+
+    * the N (output-column) entry is identical on all three planes;
+    * the sign plane ``(Kp/m, N)`` shards its fragment axis iff the magnitude
+      K axis shards — a fragment's sign multiplies all ``m`` of its rows, so
+      a K shard is only legal when every device holds a whole number of
+      fragments, i.e. ``Kp % (axis_size * m) == 0``.  Anything else
+      (including the FSDP extension) falls back to replicating K;
+    * the scale ``(..., 1, N)`` never shards its row axis.
+
+    Leading (scan / expert) axes follow the dense rules and are shared by
+    all three planes.
+    """
+    shape = tuple(leaf.mags.shape)
+    spec = param_spec(pstr, shape, scanned=scanned)
+    logical = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    lead = []
+    for dim, name in zip(shape[:-2], logical[:-2]):
+        size = ctx.axis_size(name) if name is not None else 1
+        lead.append(ctx.resolve(name)
+                    if name is not None and size > 1 and dim % size == 0
+                    else None)
+    (kp, n), (k_name, n_name) = shape[-2:], logical[-2:]
+    k_entry = None
+    if k_name is not None:
+        size = ctx.axis_size(k_name)
+        if size > 1 and kp % (size * leaf.m) == 0:
+            k_entry = ctx.resolve(k_name)
+    n_entry = None
+    if n_name is not None:
+        size = ctx.axis_size(n_name)
+        if size > 1 and n % size == 0:
+            n_entry = ctx.resolve(n_name)
+    if fsdp and leaf.mags.size >= threshold:
+        fsdp_axes = ctx.batch_axes
+        fsize = 1
+        for a in fsdp_axes:
+            fsize *= ctx.mesh.shape[a]
+        if fsize > 1:
+            entry = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+            # K preferred (usually the larger unsharded dim); same
+            # m-granularity rule as the model-axis path
+            if k_entry is None and kp % (fsize * leaf.m) == 0:
+                k_entry = entry
+            elif n_entry is None and n % fsize == 0:
+                n_entry = entry
+    mags = P(*lead, k_entry, n_entry)
+    signs = P(*lead, k_entry, n_entry)
+    scale = P(*lead, None, n_entry)
+    return mags, signs, scale
+
+
+def forms_leaf_shardings(pstr: str, leaf: FormsLinearParams,
+                         ctx: ParallelContext, scanned: bool = False,
+                         fsdp: bool = True) -> FormsLinearParams:
+    """Co-sharded ``NamedSharding`` trio for one compressed leaf, packaged as
+    a ``FormsLinearParams`` whose array fields hold shardings (same treedef as
+    the data leaf, so it zips in ``tree_map``/``device_put``)."""
+    mags, signs, scale = forms_param_spec(pstr, leaf, ctx, scanned=scanned,
+                                          fsdp=fsdp)
+    return dataclasses.replace(leaf,
+                               mags=NamedSharding(ctx.mesh, mags),
+                               signs=NamedSharding(ctx.mesh, signs),
+                               scale=NamedSharding(ctx.mesh, scale))
+
+
 def params_shardings(params: PyTree, ctx: ParallelContext,
-                     scanned_prefixes: Tuple[str, ...] = ("blocks", "enc_blocks",
-                                                          "dec_blocks", "groups"),
+                     scanned_prefixes: Tuple[str, ...] = SCANNED_PREFIXES,
                      fsdp: bool = True) -> PyTree:
     """NamedSharding pytree for a parameter pytree (divisibility-checked).
 
     Model-axis specs come from the naming rules; ``fsdp=True`` additionally
     shards large leaves over the data axes (see :func:`_fsdp_extend`).
+    FORMS-compressed leaves (``FormsLinearParams``) get the co-sharded
+    (mags, signs, scale) trio of :func:`forms_param_spec` — the same rule
+    their dense ancestor would have matched, constrained so sign fragments
+    never straddle a K shard.
     """
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=_is_forms_leaf)
     out = []
     for path, leaf in flat:
-        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        pstr = _path_str(path)
         scanned = any(seg in pstr.split("/") for seg in scanned_prefixes)
-        spec = param_spec(pstr, tuple(leaf.shape), scanned=scanned)
-        logical = tuple(spec) + (None,) * (len(leaf.shape) - len(tuple(spec)))
-        entries = []
-        for dim, name in zip(leaf.shape, logical):
-            if name is None:
-                entries.append(None)
-            else:
-                size = ctx.axis_size(name)
-                entries.append(ctx.resolve(name)
-                               if size > 1 and dim % size == 0 else None)
-        if fsdp:
-            entries = _fsdp_extend(entries, leaf.shape, ctx)
+        if _is_forms_leaf(leaf):
+            out.append(forms_leaf_shardings(pstr, leaf, ctx, scanned=scanned,
+                                            fsdp=fsdp))
+            continue
+        entries = _dense_entries(pstr, tuple(leaf.shape), ctx, scanned, fsdp)
         while entries and entries[-1] is None:
             entries.pop()
         out.append(NamedSharding(ctx.mesh, P(*entries)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Serving cache sharding
+# ---------------------------------------------------------------------------
+
+def cache_logical_axes(pstr: str, shape: Tuple[int, ...],
+                       ctx: ParallelContext) -> Tuple[Optional[str], ...]:
+    """Logical axes for one decode-cache leaf (shared by the serving engine
+    and launch/dryrun.py — ONE source of truth for cache layouts).
+
+    Slot (batch) dims ride the data axes, head dims the model axis.  GQA
+    caches whose KV heads don't divide the model axis shard the SEQUENCE
+    dim over it instead — context-parallel decode; without this a
+    48L x 128B x 32k GQA cache is 26 GB/device.  Every entry is still
+    divisibility-checked by the caller, so anything that doesn't fit
+    replicates rather than erroring.
+    """
+    last = pstr.split("/")[-1]
+    if "enc_out" in pstr:                       # whisper (B, S, d)
+        return ("batch", None, "model")
+    if last.startswith("layer") or ("layer" in pstr and len(shape) <= 4):
+        # xlstm recurrent states: leading dim is batch
+        return ("batch",) + (None,) * (len(shape) - 1)
+    if len(shape) == 5:     # (L, B, S, KV, hd) or (L, B, H, state, hd)
+        if "ssm" in pstr:
+            return (None, "batch", "model", None, None)
+        if shape[3] % max(ctx.axis_size("model"), 1) != 0:
+            # context-parallel fallback (see docstring)
+            return (None, "batch", "model", None, None)
+        return (None, "batch", None, "model", None)
+    if len(shape) == 4:     # (L,B,S,r) MLA latents / (L,B,K-1,d_in) conv
+        tail = "model" if ("conv" in pstr or "c_kv" in pstr) else None
+        return (None, "batch", None, tail)
+    if len(shape) == 3:
+        return (None, "batch", None)
+    if len(shape) == 2:
+        return ("batch", None)
+    return tuple(None for _ in shape)
+
+
+def cache_shardings(cache: PyTree, ctx: ParallelContext) -> PyTree:
+    """NamedSharding pytree for a serving KV/state cache
+    (:func:`cache_logical_axes` per leaf, divisibility-checked — dims that
+    don't divide their axes fall back to replication)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in flat:
+        logical = cache_logical_axes(_path_str(path), tuple(leaf.shape), ctx)
+        spec = _checked_spec(logical, tuple(leaf.shape), ctx)
+        out.append(NamedSharding(ctx.mesh, spec))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

@@ -20,10 +20,12 @@ from repro.forms.linear import (FormsLinearParams, apply, apply_simulated,
 from repro.forms.spec import FormsSpec
 from repro.forms.tree import (CompressedParams, CompressReport,
                               compress_tree, compressed_paths,
-                              decompress_tree)
+                              decompress_tree, shard_tree,
+                              tree_sharding_specs, validate_tree_sharding)
 
 __all__ = [
     "FormsSpec", "FormsLinearParams", "from_dense", "to_dense", "apply",
     "apply_simulated", "default_spec", "compress_tree", "decompress_tree",
     "compressed_paths", "CompressReport", "CompressedParams",
+    "shard_tree", "tree_sharding_specs", "validate_tree_sharding",
 ]

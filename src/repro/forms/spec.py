@@ -93,6 +93,10 @@ class FormsSpec:
             if getattr(self, name) < 1:
                 raise ValueError(f"tile size {name} must be >= 1, "
                                  f"got {getattr(self, name)}")
+        # NOTE: bk need not divide by m here — the kernel clamps its K tile
+        # to a fragment multiple (bk -> max(m, bk//m*m)), so e.g. m=12 with
+        # the default bk=512 runs at an effective 504 tile.  Rejecting it
+        # would break every m that doesn't divide the default bk.
 
     # -- views onto the legacy spec types (internal / crossbar-model use) ----
 
@@ -133,3 +137,34 @@ class FormsSpec:
 
     def padded_k(self, k: int) -> int:
         return self.fragment.padded_k(k)
+
+    # -- sharding granularity (mesh partitioning of compressed leaves) -------
+
+    @property
+    def k_shard_unit(self) -> int:
+        """Minimum K-shard granularity of a compressed leaf.
+
+        The fragment-sign plane stores one sign per ``m`` magnitude rows, so
+        a K (input-dim) shard is only legal when every device holds a whole
+        number of fragments — shard sizes must be multiples of this unit.
+        ``kernels/ops.polarized_matmul`` checks sharded operands against it
+        (via :meth:`validate_k_shard`); the placement rules in
+        ``distributed/sharding.forms_param_spec`` enforce the same invariant
+        (falling back to replication rather than raising).
+        """
+        return self.m
+
+    def validate_k_shard(self, kp: int, num_shards: int) -> None:
+        """Raise with an actionable message if K-sharding ``kp`` rows over
+        ``num_shards`` devices would split a sign fragment."""
+        if num_shards <= 1:
+            return
+        unit = self.k_shard_unit
+        if kp % num_shards != 0 or (kp // num_shards) % unit != 0:
+            raise ValueError(
+                f"cannot shard K={kp} rows over {num_shards} devices with "
+                f"fragment size m={self.m}: each shard must hold a whole "
+                f"number of fragments (K/shards = "
+                f"{kp / num_shards:g} rows, needs a multiple of {unit}). "
+                f"Use a K divisible by shards*{unit}, a different mesh, or "
+                f"let the sharding rules replicate K.")

@@ -41,6 +41,8 @@ class CompressReport:
     num_skipped: int = 0              # array leaves left dense (non-crossbar)
     bytes_dense: int = 0              # bytes of the leaves that were compressed
     bytes_compressed: int = 0         # bytes of their FORMS representation
+    shardings: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # path -> mags PartitionSpec string, when compressed onto a mesh (ctx)
 
     @property
     def ratio(self) -> float:
@@ -90,6 +92,7 @@ def compress_tree(
     params: Any,
     spec: FormsSpec = FormsSpec(),
     predicate: Callable[[str, Tuple[int, ...]], bool] = is_crossbar_weight,
+    ctx: Optional[Any] = None,
 ) -> Tuple[CompressedParams, CompressReport]:
     """Compress every crossbar-mappable weight of a params pytree.
 
@@ -98,6 +101,13 @@ def compress_tree(
     leaves pass through untouched.  Already-compressed leaves are left alone,
     so the function is idempotent.  ``predicate(path, shape)`` selects the
     leaves to compress (default: the shared crossbar-weight heuristic).
+
+    ``ctx`` (a ``distributed.sharding.ParallelContext``) places every
+    compressed leaf straight onto its mesh sharding — mags/signs/scale
+    co-sharded along N, K sharded only at whole-fragment granularity
+    (``spec.k_shard_unit``) — and records the chosen specs in
+    ``report.shardings``.  Dense (skipped) leaves are left where they are;
+    use :func:`shard_tree` to place the whole tree.
     """
     flat, treedef = jax.tree_util.tree_flatten_with_path(
         params, is_leaf=_is_forms_leaf)
@@ -112,6 +122,9 @@ def compress_tree(
             new_leaves.append(leaf)
             continue
         fp = _compress_leaf(pstr, leaf, spec)
+        if ctx is not None:
+            fp = _place_forms_leaf(pstr, fp, ctx)
+            report.shardings[pstr] = str(fp.mags.sharding.spec)
         recon = to_dense(fp)
         err = float(jnp.linalg.norm(recon - leaf) /
                     jnp.maximum(jnp.linalg.norm(leaf), 1e-12))
@@ -125,13 +138,19 @@ def compress_tree(
     return jax.tree_util.tree_unflatten(treedef, new_leaves), report
 
 
-def decompress_tree(params: CompressedParams) -> Any:
+def decompress_tree(params: CompressedParams, validate: bool = True) -> Any:
     """Exact inverse of :func:`compress_tree`.
 
     Replaces every ``FormsLinearParams`` leaf with its dense reconstruction
     (original shape and dtype); all other leaves pass through untouched.  The
     result equals the dense tree projected onto the polarized+quantized sets.
+    ``validate=True`` first checks the co-sharding invariants of any
+    mesh-committed leaves (:func:`validate_tree_sharding`) — reconstructing
+    from a sign plane that shards differently from its magnitudes would
+    silently apply wrong signs.
     """
+    if validate:
+        validate_tree_sharding(params)
     flat, treedef = jax.tree_util.tree_flatten_with_path(
         params, is_leaf=_is_forms_leaf)
     new_leaves = [to_dense(leaf) if _is_forms_leaf(leaf) else leaf
@@ -144,3 +163,113 @@ def compressed_paths(params: CompressedParams) -> Dict[str, FormsLinearParams]:
     flat, _ = jax.tree_util.tree_flatten_with_path(
         params, is_leaf=_is_forms_leaf)
     return {_path_str(p): l for p, l in flat if _is_forms_leaf(l)}
+
+
+# ---------------------------------------------------------------------------
+# Mesh sharding of compressed trees
+# ---------------------------------------------------------------------------
+# distributed.sharding is imported lazily: it imports forms.linear at module
+# level, so a module-level import here would be circular.
+
+def _scanned(pstr: str) -> bool:
+    from repro.distributed.sharding import SCANNED_PREFIXES
+    return any(seg in pstr.split("/") for seg in SCANNED_PREFIXES)
+
+
+def _place_forms_leaf(pstr: str, fp: FormsLinearParams, ctx: Any
+                      ) -> FormsLinearParams:
+    from repro.distributed.sharding import forms_leaf_shardings
+    sh = forms_leaf_shardings(pstr, fp, ctx, scanned=_scanned(pstr),
+                              fsdp=False)
+    return jax.tree_util.tree_map(jax.device_put, fp, sh)
+
+
+def shard_tree(params: CompressedParams, ctx: Any,
+               fsdp: bool = False) -> CompressedParams:
+    """Place a (possibly compressed) params pytree onto the mesh of ``ctx``.
+
+    Compressed leaves get the co-sharded (mags, signs, scale) trio; dense
+    leaves follow the standard naming rules.  ``fsdp=False`` by default —
+    serving wants tensor-parallel weights replicated over the data axes, not
+    ZeRO-3 gathers in the decode loop.
+    """
+    from repro.distributed.sharding import params_shardings, reshard_state
+    return reshard_state(params, params_shardings(params, ctx, fsdp=fsdp))
+
+
+def tree_sharding_specs(params: CompressedParams) -> Dict[str, Any]:
+    """path -> ``mags`` PartitionSpec for every mesh-committed compressed
+    leaf (inspection / test assertions via ``.sharding``)."""
+    out = {}
+    for pstr, fp in compressed_paths(params).items():
+        sh = getattr(fp.mags, "sharding", None)
+        if sh is not None and hasattr(sh, "spec"):
+            out[pstr] = sh.spec
+    return out
+
+
+def _padded_spec(sharding: Any, ndim: int) -> Tuple[Any, ...]:
+    spec = tuple(getattr(sharding, "spec", ()) or ())
+    return spec + (None,) * (ndim - len(spec))
+
+
+def _axis_shards(sharding: Any, entry: Any) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, (tuple, list)) else (entry,)
+    size = 1
+    for a in names:
+        size *= dict(sharding.mesh.shape)[a]
+    return size
+
+
+def validate_tree_sharding(params: CompressedParams) -> Dict[str, Any]:
+    """Validate the co-sharding invariants of every compressed leaf.
+
+    For each mesh-committed ``FormsLinearParams`` leaf, checks that
+
+    * mags and signs shard their K/fragment axis identically, and the K
+      shard holds a whole number of fragments (multiple of ``m``);
+    * mags, signs and scale carry the same N (output-column) entry;
+    * the scale row axis is replicated.
+
+    Raises ``ValueError`` naming the offending path; returns
+    path -> mags PartitionSpec for the leaves checked.  Leaves whose arrays
+    are not committed to a mesh (no ``NamedSharding``) are skipped.
+    """
+    checked = {}
+    for pstr, fp in compressed_paths(params).items():
+        shs = [getattr(a, "sharding", None)
+               for a in (fp.mags, fp.signs, fp.scale)]
+        if any(s is None or not hasattr(s, "spec") for s in shs):
+            continue
+        mags_sh, signs_sh, scale_sh = shs
+        mspec = _padded_spec(mags_sh, fp.mags.ndim)
+        sspec = _padded_spec(signs_sh, fp.signs.ndim)
+        cspec = _padded_spec(scale_sh, fp.scale.ndim)
+        if mspec[-1] != sspec[-1] or mspec[-1] != cspec[-1]:
+            raise ValueError(
+                f"{pstr}: N (output-column) axis must co-shard across "
+                f"mags/signs/scale, got {mspec[-1]!r}/{sspec[-1]!r}/"
+                f"{cspec[-1]!r} — per-column scales and fragment signs are "
+                f"state of the same columns as the magnitudes")
+        if mspec[-2] != sspec[-2]:
+            raise ValueError(
+                f"{pstr}: sign fragment axis must shard exactly like the "
+                f"mags K axis (got {sspec[-2]!r} vs {mspec[-2]!r}); a "
+                f"fragment's sign multiplies all {fp.m} of its rows")
+        if cspec[-2] is not None:
+            raise ValueError(
+                f"{pstr}: scale row axis must be replicated, got "
+                f"{cspec[-2]!r}")
+        kshards = _axis_shards(mags_sh, mspec[-2])
+        kp = fp.mags.shape[-2]
+        if kshards > 1 and (kp % kshards != 0
+                            or (kp // kshards) % fp.m != 0):
+            raise ValueError(
+                f"{pstr}: K={kp} sharded {kshards}-way gives "
+                f"{kp / kshards:g}-row shards, not a multiple of the "
+                f"fragment size m={fp.m} — sign blocks would straddle "
+                f"devices.  Re-shard with shards*m dividing K.")
+        checked[pstr] = mags_sh.spec
+    return checked

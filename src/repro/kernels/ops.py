@@ -44,6 +44,66 @@ def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
 # polarized matmul
 # ---------------------------------------------------------------------------
 
+def _k_shard_count(arr: jax.Array, k_dim: int) -> int:
+    """How many ways ``arr`` is sharded along its K dimension (1 for tracers,
+    uncommitted arrays, and non-named shardings)."""
+    sh = getattr(arr, "sharding", None)
+    spec = getattr(sh, "spec", None)
+    if spec is None:
+        return 1
+    entries = tuple(spec) + (None,) * (arr.ndim - len(tuple(spec)))
+    entry = entries[k_dim]
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, (tuple, list)) else (entry,)
+    shape = dict(sh.mesh.shape)
+    count = 1
+    for a in names:
+        count *= shape[a]
+    return count
+
+
+def _validate_polarized_geometry(x: jax.Array, mags: jax.Array,
+                                 signs: jax.Array, m: int,
+                                 spec: Optional[Any] = None) -> None:
+    """Fragment-geometry validation with actionable messages.
+
+    Two ways a caller can split a sign fragment across a boundary, both
+    rejected here rather than by a bare assert deep in the kernel: a K
+    dimension that doesn't tile into fragments, and a mesh-sharded K
+    dimension whose per-device shard isn't a whole number of fragments.
+    (The kernel's K *tile* is clamped to a fragment multiple internally, so
+    any ``bk`` hint is safe.)
+    """
+    K, N = mags.shape
+    if m < 1:
+        raise ValueError(f"fragment size m must be >= 1, got {m}")
+    if K % m != 0:
+        raise ValueError(
+            f"K={K} magnitude rows do not tile into fragments of m={m} "
+            f"rows; pad K to {-(-K // m) * m} (core.fragments.pad_rows / "
+            f"forms.from_dense do this) or choose an m dividing K")
+    if signs.shape != (K // m, N):
+        raise ValueError(
+            f"signs must hold one row per fragment: expected "
+            f"{(K // m, N)} for mags {tuple(mags.shape)} with m={m}, got "
+            f"{tuple(signs.shape)}")
+    for name, arr, k_dim in (("x", x, 1), ("mags", mags, 0)):
+        shards = _k_shard_count(arr, k_dim)
+        if shards <= 1:
+            continue
+        if spec is not None and hasattr(spec, "validate_k_shard"):
+            spec.validate_k_shard(K, shards)
+        elif K % shards != 0 or (K // shards) % m != 0:
+            raise ValueError(
+                f"{name} is sharded {shards}-way along K={K}, giving "
+                f"{K / shards:g}-row shards — not a whole number of m={m} "
+                f"fragments, so per-fragment signs would straddle devices. "
+                f"Shard K only at multiples of shards*m "
+                f"(distributed.sharding.forms_param_spec enforces this for "
+                f"parameter trees), or replicate K.")
+
+
 def polarized_matmul(
     x: jax.Array, mags: jax.Array, signs: jax.Array, scale: jax.Array,
     *, m: int = 8, prefer_ref: Optional[bool] = None,
@@ -61,6 +121,7 @@ def polarized_matmul(
         bm, bn, bk = spec.bm, spec.bn, spec.bk
     M, K = x.shape
     _, N = mags.shape
+    _validate_polarized_geometry(x, mags, signs, m, spec=spec)
     if prefer_ref is None:
         prefer_ref = not on_tpu()
     if prefer_ref:

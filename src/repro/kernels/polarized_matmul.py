@@ -74,18 +74,32 @@ def polarized_matmul(
 ) -> jax.Array:
     M, K = x.shape
     K2, N = mags.shape
-    assert K == K2, (x.shape, mags.shape)
-    assert K % m == 0, f"K ({K}) must be a multiple of fragment size m ({m})"
-    assert signs.shape == (K // m, N), (signs.shape, (K // m, N))
+    if K != K2:
+        raise ValueError(
+            f"x and mags disagree on K: x is {x.shape}, mags is "
+            f"{mags.shape}; pad activations to the magnitude rows "
+            f"(ops.polarized_matmul / forms.apply do this automatically)")
+    if K % m != 0:
+        raise ValueError(
+            f"K={K} is not a multiple of the fragment size m={m}: the sign "
+            f"plane stores one sign per {m} rows, so K must tile into whole "
+            f"fragments.  Pad K to {-(-K // m) * m} rows "
+            f"(core.fragments.pad_rows) or change m.")
+    if signs.shape != (K // m, N):
+        raise ValueError(
+            f"signs must be one row per fragment: expected shape "
+            f"{(K // m, N)} for mags {mags.shape} with m={m}, got "
+            f"{tuple(signs.shape)}")
 
     bm = min(bm, M)
     bn = min(bn, N)
     bk = min(bk, K)
     # bk must be a multiple of m so sign blocks tile cleanly
     bk = max(m, (bk // m) * m)
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
-        f"shapes (M={M}, N={N}, K={K}) must tile by (bm={bm}, bn={bn}, bk={bk}); "
-        "use ops.polarized_matmul for automatic padding")
+    if M % bm != 0 or N % bn != 0 or K % bk != 0:
+        raise ValueError(
+            f"shapes (M={M}, N={N}, K={K}) must tile by (bm={bm}, bn={bn}, "
+            f"bk={bk}); use ops.polarized_matmul for automatic padding")
 
     grid = (M // bm, N // bn, K // bk)
     return pl.pallas_call(

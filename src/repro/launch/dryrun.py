@@ -90,39 +90,12 @@ def _path_str(path) -> str:
 
 def cache_shardings(cache: PyTree, cfg: ModelConfig,
                     ctx: shd.ParallelContext) -> PyTree:
-    """Decode-cache shardings: batch dim over ('pod','data'), heads over model."""
-    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
-    out = []
-    for path, leaf in flat:
-        p = _path_str(path)
-        shape = leaf.shape
-        logical: Tuple[Optional[str], ...]
-        if "enc_out" in p:
-            logical = ("batch", None, "model")
-        elif p.split("/")[-1].startswith("layer") or ("layer" in p and len(shape) <= 4):
-            # xlstm recurrent states: leading dim is batch
-            logical = ("batch",) + (None,) * (len(shape) - 1)
-        elif len(shape) == 5:       # (L, B, S, KV, hd) or (L, B, H, state, hd)
-            logical = (None, "batch", None, "model", None)
-            if "ssm" in p:
-                logical = (None, "batch", "model", None, None)
-            elif shape[3] * ctx.mesh.shape.get("model", 1) > 0 and \
-                    shape[3] % max(ctx.axis_size("model"), 1) != 0:
-                # KV heads don't divide the model axis (GQA with few heads):
-                # shard the SEQUENCE dim instead — context-parallel decode.
-                # Without this a 48Lx128Bx32k GQA cache is 26 GB/device.
-                logical = (None, "batch", "model", None, None)
-        elif len(shape) == 4:       # (L,B,S,r) MLA latents / (L,B,K-1,d_in) conv
-            last = "model" if ("conv" in p or "c_kv" in p) else None
-            logical = (None, "batch", None, last)
-        elif len(shape) == 3:
-            logical = (None, "batch", None)
-        elif len(shape) == 2:
-            logical = ("batch", None)
-        else:
-            logical = tuple(None for _ in shape)
-        out.append(NamedSharding(ctx.mesh, shd._checked_spec(logical, shape, ctx)))
-    return jax.tree_util.tree_unflatten(treedef, out)
+    """Decode-cache shardings: batch dim over ('pod','data'), heads over
+    model.  Delegates to the shared rules in distributed/sharding.py (also
+    used by the serving engine) so dry-run cells and real serving always
+    analyze/run the same cache layout."""
+    del cfg
+    return shd.cache_shardings(cache, ctx)
 
 
 def batch_shardings(specs: Dict[str, jax.ShapeDtypeStruct],

@@ -31,3 +31,39 @@ def make_mesh(cfg: MeshConfig):
 def single_device_mesh():
     """Trivial mesh for tests/examples on one device."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def parse_mesh_arg(arg: str) -> MeshConfig:
+    """Parse a ``--mesh`` CLI value like ``"data=2,model=4"`` into a
+    :class:`MeshConfig` (axes default to 1; ``pod=``/``pods=`` accepted)."""
+    sizes = {"pods": 1, "data": 1, "model": 1}
+    alias = {"pod": "pods", "pods": "pods", "data": "data", "model": "model"}
+    for part in arg.split(","):
+        if not part.strip():
+            continue
+        name, sep, value = part.partition("=")
+        key = alias.get(name.strip())
+        if key is None or not sep or not value.strip().isdigit() \
+                or int(value) < 1:
+            raise ValueError(
+                f"bad --mesh entry {part!r}: expected axis=size with axis "
+                f"in {sorted(set(alias))} and size a positive integer "
+                f"(e.g. \"data=2,model=4\")")
+        sizes[key] = int(value)
+    return MeshConfig(**sizes)
+
+
+def force_host_device_count(n: int) -> None:
+    """Pin ``--xla_force_host_platform_device_count=n`` in ``XLA_FLAGS``,
+    replacing any existing occurrence (appending a second copy leaves the
+    effective count to XLA's duplicate-flag handling).
+
+    Must run before the jax *backend* initializes — importing jax is fine,
+    touching devices is not.  Shared by ``launch/serve.py --fake-devices``,
+    the bench_fps sharded child and tests/_sharded_child.py.
+    """
+    import os
+    flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
+             if not f.startswith("--xla_force_host_platform_device_count")]
+    flags.append(f"--xla_force_host_platform_device_count={int(n)}")
+    os.environ["XLA_FLAGS"] = " ".join(flags)

@@ -1,13 +1,21 @@
 """Serving launcher: bulk prefill + donated batched decode with optional
-FORMS compression.
+FORMS compression and mesh sharding.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --requests 8 --forms --decode-block 8
+
+  # tensor/data-parallel decode on the compressed pytree (8 devices):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --forms --mesh data=2,model=4 --fake-devices 8
 
 With ``--forms`` the weights are compressed via ``repro.forms.compress_tree``
 and the engine decodes directly on the compressed pytree (uint8 magnitudes +
 int8 fragment signs through the polarized-matmul kernel).  ``--decode-block``
 sets how many tokens the jitted decode loop produces per host sync.
+``--mesh data=D,model=M`` runs the engine SPMD over a device mesh (see
+launch/mesh.py): compressed leaves co-shard along N, KV caches shard slots
+over the data axes; ``--fake-devices N`` forces N host devices (CPU
+demo/testing — on real fleets the device count comes from the runtime).
 """
 from __future__ import annotations
 
@@ -15,13 +23,9 @@ import argparse
 import dataclasses
 import time
 
-import jax
 import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config, get_reduced
-from repro.forms import FormsSpec
-from repro.models.registry import build
-from repro.serving.engine import Request, ServingEngine
 
 
 def main() -> None:
@@ -45,19 +49,51 @@ def main() -> None:
                     help="fixed prompt length (default: random 2-5)")
     ap.add_argument("--no-donate", action="store_true",
                     help="disable cache donation (debugging)")
+    ap.add_argument("--mesh", default=None, metavar="AXES",
+                    help='device mesh as "data=D,model=M" (sharded serving); '
+                         "omit for single-device")
+    ap.add_argument("--fake-devices", type=int, default=None,
+                    help="force N host-platform devices (CPU demo/testing)")
     args = ap.parse_args()
+
+    if args.fake_devices:
+        # must land before the first jax backend touch below
+        from repro.launch.mesh import force_host_device_count
+        force_host_device_count(args.fake_devices)
+    import jax
+
+    from repro.forms import FormsSpec
+    from repro.models.registry import build
+    from repro.serving.engine import Request, ServingEngine
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
     spec = (FormsSpec(m=args.fragment, bits=args.bits, rule=args.sign_rule)
             if args.forms else None)
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_mesh, parse_mesh_arg
+        mesh_cfg = parse_mesh_arg(args.mesh)
+        if mesh_cfg.num_devices > jax.device_count():
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {mesh_cfg.num_devices} devices, "
+                f"have {jax.device_count()} (try --fake-devices "
+                f"{mesh_cfg.num_devices} on CPU)")
+        mesh = make_mesh(mesh_cfg)
     engine = ServingEngine(model, params, max_len=args.max_len,
                            batch_slots=args.slots, spec=spec,
                            decode_block=args.decode_block,
-                           donate=not args.no_donate)
+                           donate=not args.no_donate, mesh=mesh)
     if engine.compression_report is not None:
         print(f"forms: {engine.compression_report.summary()}")
+    if mesh is not None:
+        n_sharded = sum(
+            1 for s in jax.tree_util.tree_leaves(engine.param_shardings)
+            if hasattr(s, "spec")
+            and any(e is not None for e in tuple(s.spec)))
+        print(f"mesh: {dict(mesh.shape)} over {jax.device_count()} devices, "
+              f"{n_sharded} param leaves sharded")
     rng = np.random.RandomState(0)
     plen = lambda: (args.prompt_len if args.prompt_len else rng.randint(2, 6))
     reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab_size, size=plen()),

@@ -55,6 +55,13 @@ def linear(p: Params, name: str, x: jax.Array, dtype) -> jax.Array:
     through the polarized-matmul kernel so serving consumes the compressed
     pytree directly; anything else falls back to a dense matmul via
     :func:`wload`.
+
+    On a mesh the compressed leaves arrive sharded (co-sharded
+    mags/signs/scale, ``distributed/sharding.forms_param_spec``), and the
+    sign-folded MVM runs on the per-device shards under GSPMD: N
+    (output-column) shards compute their columns locally, K shards sum
+    partials across devices — the sign-combine stays device-local because
+    K shards always hold whole fragments.
     """
     v = p[name]
     if isinstance(v, FormsLinearParams) and v.mags.ndim == 2:

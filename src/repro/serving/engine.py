@@ -21,6 +21,15 @@ does no avoidable HBM copies and no host round-trips:
   (vector ``pos`` through ``decode_step``), so continuous batching admits a
   new prompt into a finished slot without burning the other slots' cache
   length.
+* **Mesh sharding** — ``mesh=...`` runs the whole engine SPMD on a device
+  mesh: weights follow the logical-axis rules (compressed
+  ``FormsLinearParams`` leaves co-shard mags/int8 signs/scales along N, with
+  K shards constrained to whole sign fragments), KV caches shard their slot
+  dim over the data axes and head dims over the model axis, and both jitted
+  entry points trace under the engine's ``ParallelContext`` so the
+  models' ``constrain`` annotations are live.  The polarized matmul then
+  runs on per-device shards — GSPMD partitions the sign-folded MVM exactly
+  like the paper partitions columns across sub-arrays and tiles.
 
 With ``forms=True``/``spec=...`` the engine compresses the weights once
 (``repro.forms.compress_tree``) and decodes directly on the compressed
@@ -38,6 +47,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.sharding import (ParallelContext, cache_shardings,
+                                        parallel_context, params_shardings,
+                                        reshard_state)
 from repro.forms import (CompressReport, FormsSpec, compress_tree,
                          decompress_tree, default_spec)
 from repro.models.registry import Model
@@ -93,16 +105,20 @@ class ServingEngine:
                  batch_slots: int = 8, forms: bool = False,
                  spec: Optional[FormsSpec] = None,
                  fragment: int = 8, bits: int = 8, rng_seed: int = 0,
-                 decode_block: int = 4, donate: bool = True):
+                 decode_block: int = 4, donate: bool = True,
+                 mesh: Optional[Any] = None):
         self.model = model
         self.cfg = model.config
+        self.ctx: Optional[ParallelContext] = (
+            ParallelContext.for_mesh(mesh) if mesh is not None else None)
         self.spec: Optional[FormsSpec] = None
         self.compression_report: Optional[CompressReport] = None
         self.compression_errors: Dict[str, float] = {}
         if forms or spec is not None:
             self.spec = spec if spec is not None else FormsSpec(m=fragment,
                                                                 bits=bits)
-            params, self.compression_report = compress_tree(params, self.spec)
+            params, self.compression_report = compress_tree(params, self.spec,
+                                                            ctx=self.ctx)
             self.compression_errors = self.compression_report.errors
         self.params = params
         self.max_len = max_len
@@ -111,6 +127,19 @@ class ServingEngine:
         self.donate = donate
         self.cache = model.init_cache(batch_slots, max_len)
         self._key = jax.random.PRNGKey(rng_seed)
+        self.param_shardings = None
+        self.cache_shardings = None
+        if self.ctx is not None:
+            # weights: tensor-parallel over the model axis, replicated over
+            # data (fsdp=False — a ZeRO all-gather per decode step would sit
+            # on the latency path); caches: slots over data, heads over model.
+            # The checkpoint path can restore straight into this layout via
+            # checkpoint.restore(..., shardings=engine.param_shardings).
+            self.param_shardings = params_shardings(self.params, self.ctx,
+                                                    fsdp=False)
+            self.params = reshard_state(self.params, self.param_shardings)
+            self.cache_shardings = cache_shardings(self.cache, self.ctx)
+            self.cache = reshard_state(self.cache, self.cache_shardings)
 
         # the spec's backend/tiling hints bake into the traced hot-path fns
         # (repro.forms.default_spec is read at trace time by forms.apply);
@@ -133,8 +162,20 @@ class ServingEngine:
             return toks_out, c
 
         self._decode = jax.jit(_decode_fn,
-                               donate_argnums=(1,) if donate else ())
+                               donate_argnums=(1,) if donate else (),
+                               **self._out_shardings_kw())
         self._prefill_fns: Dict[int, Any] = {}
+
+    def _out_shardings_kw(self) -> Dict[str, Any]:
+        """Pin the jitted outputs' shardings on a mesh: the returned cache
+        keeps the engine's NamedSharding layout (exact donation aliasing, and
+        ``.sharding`` stays assertable across steps); sampled tokens come
+        back replicated — the host reads them every block anyway."""
+        if self.ctx is None:
+            return {}
+        from jax.sharding import NamedSharding, PartitionSpec
+        replicated = NamedSharding(self.ctx.mesh, PartitionSpec())
+        return {"out_shardings": (replicated, self.cache_shardings)}
 
     # ------------------------------------------------------------------
     # prefill
@@ -162,7 +203,8 @@ class ServingEngine:
                 return tok[0], c
 
             fn = jax.jit(_prefill_fn,
-                         donate_argnums=(2,) if self.donate else ())
+                         donate_argnums=(2,) if self.donate else (),
+                         **self._out_shardings_kw())
             self._prefill_fns[bucket] = fn
         return fn
 
@@ -181,10 +223,13 @@ class ServingEngine:
         toks[0, :n] = prompt
         self._key, sub = jax.random.split(self._key)
         fn = self._get_prefill(bucket)
-        tok, self.cache = fn(self.params, jnp.asarray(toks), self.cache,
-                             jnp.asarray(slot, jnp.int32),
-                             jnp.asarray(n, jnp.int32),
-                             jnp.asarray(temperature, jnp.float32), sub)
+        # parallel_context makes the models' logical-axis ``constrain``
+        # annotations live while a new bucket traces (no-op when ctx is None)
+        with parallel_context(self.ctx):
+            tok, self.cache = fn(self.params, jnp.asarray(toks), self.cache,
+                                 jnp.asarray(slot, jnp.int32),
+                                 jnp.asarray(n, jnp.int32),
+                                 jnp.asarray(temperature, jnp.float32), sub)
         return int(tok)
 
     # ------------------------------------------------------------------
@@ -204,11 +249,12 @@ class ServingEngine:
         next-iteration positions).
         """
         self._key, sub = jax.random.split(self._key)
-        toks_out, self.cache = self._decode(
-            self.params, self.cache,
-            jnp.array(tokens, jnp.int32, copy=True),
-            jnp.array(positions, jnp.int32, copy=True),
-            jnp.array(temps, jnp.float32, copy=True), sub)
+        with parallel_context(self.ctx):
+            toks_out, self.cache = self._decode(
+                self.params, self.cache,
+                jnp.array(tokens, jnp.int32, copy=True),
+                jnp.array(positions, jnp.int32, copy=True),
+                jnp.array(temps, jnp.float32, copy=True), sub)
         return np.asarray(toks_out)
 
     # ------------------------------------------------------------------

@@ -1,0 +1,159 @@
+"""Child process for tests/test_serving_sharded.py.
+
+Forces N fake host-platform devices BEFORE importing jax (the parent pytest
+session must keep seeing 1 device — see conftest.py), then runs one named
+check: ``python tests/_sharded_child.py <check> [num_devices]``.  Exits
+non-zero (assertion/exception) on failure.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.mesh import force_host_device_count  # noqa: E402
+
+# replace (not append) any inherited count flag; the jax backend has not
+# initialized yet, so this still takes effect
+force_host_device_count(int(sys.argv[2]) if len(sys.argv) > 2 else 8)
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_reduced  # noqa: E402
+from repro.models.registry import build  # noqa: E402
+from repro.serving.engine import Request, ServingEngine  # noqa: E402
+
+
+def _tiny_model(heads: int = 2, kv: int = 2, hd: int = 16, d_ff: int = 64):
+    cfg = dataclasses.replace(get_reduced("yi-9b"), num_layers=2,
+                              d_model=heads * hd, num_heads=heads,
+                              num_kv_heads=kv, head_dim=hd, d_ff=d_ff,
+                              vocab_size=64, dtype="float32")
+    return build(cfg)
+
+
+def _requests(n: int = 4, new: int = 6):
+    return [Request(uid=i, prompt=np.array([1 + i, 2, 3]), max_new_tokens=new)
+            for i in range(n)]
+
+
+def _spec_entries(arr):
+    spec = tuple(arr.sharding.spec)
+    return spec + (None,) * (arr.ndim - len(spec))
+
+
+def check_parity():
+    """Sharded decode is token-identical to the single-device engine for
+    greedy decoding on a compressed pytree, with params and caches
+    verifiably sharded (asserted via .sharding)."""
+    from repro.forms import validate_tree_sharding
+
+    m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    ref = ServingEngine(m, params, max_len=32, batch_slots=4, forms=True)
+    want = {r.uid: r.tokens for r in ref.run(_requests())}
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    eng = ServingEngine(m, params, max_len=32, batch_slots=4, forms=True,
+                        mesh=mesh)
+    # compressed leaves co-shard along N over the model axis
+    wq = eng.params["blocks"]["attn"]["wq"]
+    assert _spec_entries(wq.mags)[-1] == "model", wq.mags.sharding
+    assert _spec_entries(wq.signs)[-1] == "model", wq.signs.sharding
+    assert _spec_entries(wq.scale)[-1] == "model", wq.scale.sharding
+    checked = validate_tree_sharding(eng.params)
+    assert "blocks/attn/wq" in checked and "blocks/mlp/gate" in checked
+    # KV cache slots shard over the data axis
+    assert _spec_entries(eng.cache["k"])[1] == "data", eng.cache["k"].sharding
+    got = {r.uid: r.tokens for r in eng.run(_requests())}
+    assert got == want, (got, want)
+    # the steady-state cache kept its mesh layout across donated steps
+    assert _spec_entries(eng.cache["k"])[1] == "data"
+    print("parity ok:", want)
+
+
+def check_donation():
+    """Cache donation stays legal with mesh-sharded caches: the jitted decode
+    consumes the old shards in place (no full-cache copy per block)."""
+    m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    eng = ServingEngine(m, params, max_len=32, batch_slots=4, forms=True,
+                        mesh=mesh)
+    eng.prefill_slot(0, np.array([5, 6], np.int32))
+    old = jax.tree_util.tree_leaves(eng.cache)
+    out1 = eng.decode_chunk(np.zeros(4, np.int32),
+                            np.array([2, 0, 0, 0], np.int32),
+                            np.zeros(4, np.float32))
+    assert all(leaf.is_deleted() for leaf in old), \
+        "sharded decode copied the cache instead of donating it"
+    out2 = eng.decode_chunk(out1[-1], np.array([6, 4, 4, 4], np.int32),
+                            np.zeros(4, np.float32))
+    assert out1.shape == out2.shape == (eng.decode_block, 4)
+    print("donation ok")
+
+
+def check_fallback():
+    """12 heads on a 16-way model axis: head-grid dims that don't divide the
+    axis replicate instead of erroring, the fragment-granularity rule
+    replicates a K=192 plane (192 % (16*8) != 0 even though 192 % 16 == 0),
+    and decoding still matches the single-device engine."""
+    assert jax.device_count() == 16, jax.device_count()
+    m = _tiny_model(heads=12, kv=12, hd=16, d_ff=384)
+    params = m.init(jax.random.PRNGKey(0))
+    ref = ServingEngine(m, params, max_len=32, batch_slots=2, forms=True)
+    want = {r.uid: r.tokens for r in ref.run(_requests(2))}
+
+    mesh = jax.make_mesh((1, 16), ("data", "model"))
+    eng = ServingEngine(m, params, max_len=32, batch_slots=2, forms=True,
+                        mesh=mesh)
+    wq = eng.params["blocks"]["attn"]["wq"]   # (L, 192, 192) compressed
+    wo = eng.params["blocks"]["attn"]["wo"]
+    down = eng.params["blocks"]["mlp"]["down"]  # (L, 384, 192) compressed
+    # N = 192 divides 16 -> wq shards its columns
+    assert _spec_entries(wq.mags)[-1] == "model", wq.mags.sharding
+    # wo K = 192: 16-way shards would hold 12 rows — not a whole number of
+    # m=8 fragments — so K must fall back to replication...
+    assert _spec_entries(wo.mags)[-2] is None, wo.mags.sharding
+    assert _spec_entries(wo.signs)[-2] is None, wo.signs.sharding
+    # ...while K = 384 (24-row shards, 3 fragments each) may shard
+    assert _spec_entries(down.mags)[-2] == "model", down.mags.sharding
+    assert _spec_entries(down.signs)[-2] == "model", down.signs.sharding
+    got = {r.uid: r.tokens for r in eng.run(_requests(2))}
+    assert got == want, (got, want)
+    print("fallback ok:", want)
+
+
+def check_restore():
+    """checkpoint.restore(shardings=...) loads a compressed tree straight
+    into the mesh layout the engine serves from."""
+    import tempfile
+
+    from repro.checkpoint import manager as ckpt
+    from repro.distributed import sharding as shd
+    from repro.forms import FormsSpec, compress_tree
+
+    m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    comp, _ = compress_tree(params, FormsSpec(m=8))
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    ctx = shd.ParallelContext.for_mesh(mesh)
+    sh = shd.params_shardings(comp, ctx, fsdp=False)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, comp, step=1)
+        out, step = ckpt.restore(d, comp, shardings=sh)
+    wq = out["blocks"]["attn"]["wq"]
+    assert _spec_entries(wq.mags)[-1] == "model", wq.mags.sharding
+    np.testing.assert_array_equal(
+        np.asarray(wq.mags), np.asarray(comp["blocks"]["attn"]["wq"].mags))
+    # the restored tree serves as-is: weights already placed, engine reuses
+    eng = ServingEngine(m, out, max_len=32, batch_slots=2, mesh=mesh)
+    res = eng.run([Request(uid=0, prompt=np.array([3, 4]), max_new_tokens=4)])
+    assert len(res[0].tokens) == 4
+    print("restore ok")
+
+
+if __name__ == "__main__":
+    globals()[f"check_{sys.argv[1]}"]()

@@ -336,3 +336,17 @@ def test_deprecated_forms_compress_params_warns_and_matches():
                     jax.tree_util.tree_leaves(dec)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert errors == rep.errors
+
+
+def test_fragment_size_not_dividing_default_bk():
+    """An m that doesn't divide the default bk=512 stays usable: the kernel
+    clamps its K tile to a fragment multiple (regression guard — spec-level
+    bk % m validation once rejected m=12 at construction)."""
+    spec = FormsSpec(m=12)
+    assert spec.k_shard_unit == 12
+    w = jax.random.normal(jax.random.PRNGKey(0), (24, 8))
+    p, _ = forms.from_dense(w, spec)
+    y = forms.apply(p, jnp.ones((2, 24)), spec)
+    assert y.shape == (2, 8)
+    with pytest.raises(ValueError, match="whole number of fragments"):
+        spec.validate_k_shard(24, 4)

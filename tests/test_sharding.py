@@ -84,3 +84,46 @@ def test_parallel_context_resolution():
     assert ctx.resolve(None) is None
     with pytest.raises(ValueError):
         ctx.resolve("bogus")
+
+
+def test_forms_leaves_get_cosharded_trio():
+    """params_shardings on a compressed tree: the FormsLinearParams leaf
+    flattens to a sharding trio with one shared N entry (single-device mesh;
+    the multi-device behaviour is covered by test_serving_sharded.py)."""
+    from repro.forms import FormsSpec, compress_tree
+
+    mesh = single_device_mesh()
+    ctx = shd.ParallelContext.for_mesh(mesh)
+    params = {"blocks": {"attn": {"wq": jnp.ones((2, 16, 16))}},
+              "norm": jnp.ones((16,))}
+    comp, _ = compress_tree(params, FormsSpec(m=8))
+    sh = shd.params_shardings(comp, ctx)
+    trio = sh["blocks"]["attn"]["wq"]
+    assert hasattr(trio.mags, "spec") and hasattr(trio.signs, "spec")
+    placed = shd.reshard_state(comp, sh)
+    np.testing.assert_array_equal(
+        np.asarray(placed["blocks"]["attn"]["wq"].mags),
+        np.asarray(comp["blocks"]["attn"]["wq"].mags))
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs 8 devices (the XLA_FLAGS CI job)")
+def test_compressed_tree_shards_on_8_devices():
+    """On a real 2x4 mesh: N co-shards over the model axis on all three
+    planes, the cache slot dim shards over data, and the co-sharding
+    validator passes."""
+    from repro.forms import FormsSpec, compress_tree, validate_tree_sharding
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    ctx = shd.ParallelContext.for_mesh(mesh)
+    params = {"blocks": {"attn": {"wq": jnp.ones((2, 64, 128)),
+                                  "wo": jnp.ones((2, 128, 64))}}}
+    comp, rep = compress_tree(params, FormsSpec(m=8), ctx=ctx)
+    assert rep.shardings["blocks/attn/wq"] == str(
+        comp["blocks"]["attn"]["wq"].mags.sharding.spec)
+    checked = validate_tree_sharding(comp)
+    wq_spec = tuple(checked["blocks/attn/wq"])
+    assert wq_spec[-1] == "model"
+    cache = {"k": jnp.zeros((2, 8, 32, 4, 16))}
+    csh = shd.cache_shardings(cache, ctx)
+    assert tuple(csh["k"].spec)[1] == "data"
