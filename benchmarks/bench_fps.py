@@ -5,6 +5,7 @@ chunked decode vs a per-token host-sync loop)."""
 from __future__ import annotations
 
 import os
+import time
 
 import numpy as np
 
@@ -89,6 +90,60 @@ def serving_hot_path(smoke: bool = False) -> None:
     emit("serving.decode_speedup", 0.0, f"{new_tps / old_tps:.2f}x")
 
 
+def serving_paged(smoke: bool = False) -> None:
+    """Paged-vs-dense serving rows (tokens/s, cache HBM bytes, max
+    concurrent slots) at the SAME cache-memory budget.
+
+    The dense engine pays ``max_len`` rows per slot; the paged engine pays
+    each request's actual footprint from a shared page pool, so the same
+    HBM admits more concurrent requests (here 2x the slots on an equal-row
+    pool).  On the CPU oracle the tok/s pair mostly tracks the extra
+    gather/scatter cost — the rows exist so the perf trajectory catches
+    regressions in the paged decode path and the concurrency claim.
+    """
+    import jax
+
+    from benchmarks.common import tiny_serving_cfg
+    from repro.models.registry import build
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = tiny_serving_cfg()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len, block = 160, 8
+    n_req, new = (8, 16) if smoke else (16, 24)
+    prompt_len, page = 16, 16
+
+    def requests():
+        rng = np.random.RandomState(0)
+        return [Request(uid=i,
+                        prompt=rng.randint(0, cfg.vocab_size,
+                                           size=prompt_len),
+                        max_new_tokens=new) for i in range(n_req)]
+
+    rows = {}
+    for label, kw in (("dense", dict(batch_slots=4)),
+                      ("paged", dict(batch_slots=8, page_size=page,
+                                     num_pages=4 * max_len // page,
+                                     prefix_cache=True))):
+        eng = ServingEngine(model, params, max_len=max_len,
+                            decode_block=block, **kw)
+        eng.run(requests())                      # compile + warm
+        t0 = time.perf_counter()
+        results = eng.run(requests())
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.tokens) for r in results)
+        rows[label] = (dt, toks, eng)
+        emit(f"serving.{label}_run", dt * 1e6,
+             f"tok/s={toks / dt:.0f};hbm_bytes={eng.cache_bytes()};"
+             f"max_concurrent={eng.scheduler.max_concurrent}")
+    (ddt, dtoks, deng), (pdt, ptoks, peng) = rows["dense"], rows["paged"]
+    emit("serving.paged_vs_dense", 0.0,
+         f"concurrency={peng.scheduler.max_concurrent / max(1, deng.scheduler.max_concurrent):.1f}x;"
+         f"hbm={peng.cache_bytes() / deng.cache_bytes():.2f}x;"
+         f"tok_s={ptoks / pdt / (dtoks / ddt):.2f}x")
+
+
 # Runs in a subprocess: XLA_FLAGS must force the fake host devices before
 # jax initializes, and the parent bench session must keep its single device.
 # Prints "ROW name,us,derived" lines the parent re-emits.
@@ -164,6 +219,7 @@ def serving_sharded(smoke: bool = False) -> None:
 
 def run(smoke: bool = False) -> None:
     serving_hot_path(smoke=smoke)
+    serving_paged(smoke=smoke)
     serving_sharded(smoke=smoke)
     fragments = (8,) if smoke else (8, 16)
     kw = (dict(pretrain_steps=20, admm_steps=30, finetune_steps=10)

@@ -399,8 +399,25 @@ def cache_logical_axes(pstr: str, shape: Tuple[int, ...],
     48L x 128B x 32k GQA cache is 26 GB/device.  Every entry is still
     divisibility-checked by the caller, so anything that doesn't fit
     replicates rather than erroring.
+
+    Page-pool leaves (serving/kv_cache.PagedKVCache, path prefix
+    ``pool/``) shard their PAGE dim over the data axes — pages are the
+    paged engine's unit of parallel placement exactly as slots are the
+    dense engine's — and head dims over the model axis.  The page-row dim
+    never shards (a page is the atomic gather/scatter unit of the block
+    tables, like a sign fragment on the K axis); non-dividing head grids
+    replicate.
     """
     last = pstr.split("/")[-1]
+    if "pool/" in pstr:
+        if len(shape) == 5:     # (L, P, page, KV, hd)
+            if shape[3] % max(ctx.axis_size("model"), 1) != 0:
+                return (None, "batch", None, None, None)
+            return (None, "batch", None, "model", None)
+        if len(shape) == 4:     # (L, P, page, r) MLA latents
+            tail = "model" if "c_kv" in pstr else None
+            return (None, "batch", None, tail)
+        return (None, "batch") + (None,) * (len(shape) - 2)
     if "enc_out" in pstr:                       # whisper (B, S, d)
         return ("batch", None, "model")
     if last.startswith("layer") or ("layer" in pstr and len(shape) <= 4):

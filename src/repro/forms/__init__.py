@@ -11,9 +11,10 @@ One spec, one compressed representation, one pipeline:
   producing pytrees whose crossbar leaves are real ``FormsLinearParams``,
   consumed directly by ``models/layers.linear`` and the serving engine.
 
-The deprecated entry points (``repro.core.forms_layer``,
-``repro.serving.engine.forms_compress_params``) delegate here and emit
-``DeprecationWarning``; see DESIGN.md for migration notes.
+The PR-1 deprecation shims (``repro.core.forms_layer``,
+``repro.serving.engine.forms_compress_params``) have been REMOVED; this
+package is the only compression surface (see DESIGN.md §9 for the old ->
+new mapping).
 """
 from repro.forms.linear import (FormsLinearParams, apply, apply_simulated,
                                 default_spec, from_dense, to_dense)

@@ -1,8 +1,12 @@
-"""Serving launcher: bulk prefill + donated batched decode with optional
-FORMS compression and mesh sharding.
+"""Serving launcher: paged KV cache + bulk prefill + donated batched decode
+with optional FORMS compression and mesh sharding.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --requests 8 --forms --decode-block 8
+
+  # paged KV cache with prompt-prefix sharing (attention families):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --page-size 16 --prefix-cache
 
   # tensor/data-parallel decode on the compressed pytree (8 devices):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
@@ -12,10 +16,15 @@ With ``--forms`` the weights are compressed via ``repro.forms.compress_tree``
 and the engine decodes directly on the compressed pytree (uint8 magnitudes +
 int8 fragment signs through the polarized-matmul kernel).  ``--decode-block``
 sets how many tokens the jitted decode loop produces per host sync.
+``--page-size`` (default 16, ``0`` disables) serves the attention families
+from a paged KV pool — admission is by free-page budget, so short requests
+only hold the pages they need — and ``--prefix-cache`` shares page-aligned
+prompt prefixes across concurrent requests (DESIGN.md §6d).
 ``--mesh data=D,model=M`` runs the engine SPMD over a device mesh (see
 launch/mesh.py): compressed leaves co-shard along N, KV caches shard slots
-over the data axes; ``--fake-devices N`` forces N host devices (CPU
-demo/testing — on real fleets the device count comes from the runtime).
+(or page pools) over the data axes; ``--fake-devices N`` forces N host
+devices (CPU demo/testing — on real fleets the device count comes from the
+runtime).
 """
 from __future__ import annotations
 
@@ -49,6 +58,16 @@ def main() -> None:
                     help="fixed prompt length (default: random 2-5)")
     ap.add_argument("--no-donate", action="store_true",
                     help="disable cache donation (debugging)")
+    ap.add_argument("--page-size", type=int, default=16, metavar="ROWS",
+                    help="KV-cache page size for paged serving (attention "
+                         "families; recurrent families always use the dense "
+                         "slot cache); 0 = dense slot cache")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page-pool size (default: every slot can hold a "
+                         "full max_len request)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share page-aligned prompt prefixes across "
+                         "concurrent requests (paged serving only)")
     ap.add_argument("--mesh", default=None, metavar="AXES",
                     help='device mesh as "data=D,model=M" (sharded serving); '
                          "omit for single-device")
@@ -84,9 +103,20 @@ def main() -> None:
     engine = ServingEngine(model, params, max_len=args.max_len,
                            batch_slots=args.slots, spec=spec,
                            decode_block=args.decode_block,
-                           donate=not args.no_donate, mesh=mesh)
+                           donate=not args.no_donate, mesh=mesh,
+                           page_size=args.page_size or None,
+                           num_pages=args.num_pages,
+                           prefix_cache=args.prefix_cache)
     if engine.compression_report is not None:
         print(f"forms: {engine.compression_report.summary()}")
+    if engine.paged:
+        alloc = engine.page_allocator
+        print(f"paged cache: {alloc.capacity} pages x {engine.page_size} "
+              f"rows (+1 scratch), {engine.cache_bytes()/2**20:.1f} MiB, "
+              f"prefix_cache={'on' if engine.prefix_cache else 'off'}")
+    elif args.page_size:
+        print(f"paged cache: unsupported for family {cfg.family!r} "
+              "(O(1) recurrent state) — dense slot cache")
     if mesh is not None:
         n_sharded = sum(
             1 for s in jax.tree_util.tree_leaves(engine.param_shardings)

@@ -241,6 +241,12 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     q: (B, 1, H, hd); caches: (B, Smax, KV, hd); pos: scalar int32 or (B,)
     per-row positions (the index of each row's current token).  Each row
     attends to its own cache positions <= pos — independent slot timelines.
+
+    The cache operands may be persistent dense leaves OR the per-slot
+    block-table gathers of a paged pool (serving/kv_cache.gather_views):
+    both present the same logically-contiguous (B, Smax, KV, hd) layout,
+    and the ``kpos <= pos`` per-slot length mask is what keeps stale rows
+    (dense) and scratch-page rows (paged) out of the softmax.
     """
     b, _, h, hd = q.shape
     smax, kv = k_cache.shape[1], k_cache.shape[2]
@@ -278,9 +284,13 @@ def attention_block(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
     Train/prefill: ``cache=None`` -> causal self-attention over x;
     ``return_kv=True`` additionally returns the post-rope (k, v) of shape
     (B, S, KV, hd) so bulk prefill can commit them to a cache in one write.
-    Decode: ``cache=(k, v)`` of shape (B, Smax, KV, hd), x is (B, 1, d),
-    ``cache_pos`` scalar or (B,) per-row positions — writes the new K/V at
-    each row's cache_pos and attends.
+    Decode: ``cache=(k, v)`` of shape (B, Smax, KV, hd) — dense cache
+    leaves or paged block-table gathers, see :func:`decode_attention` —
+    x is (B, 1, d), ``cache_pos`` scalar or (B,) per-row positions — writes
+    the new K/V at each row's cache_pos and attends.  The write targets a
+    local TRANSIENT view either way; the caller commits the returned
+    new-token K/V to the persistent cache (slot scatter or page scatter)
+    after the layer scan.
     """
     b, s, d = x.shape
     # Megatron-SP: gather the seq-sharded residual before the projections;

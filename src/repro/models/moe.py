@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.configs.base import MLAConfig, ModelConfig
 from repro.distributed.sharding import constrain
 from repro.models import layers as L
+from repro.serving import kv_cache as KV
 
 Params = Dict[str, Any]
 
@@ -353,6 +354,27 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     slots: int, max_len: int, dtype=jnp.bfloat16
+                     ) -> KV.PagedKVCache:
+    """Page-pool cache: GQA K/V — or MLA latents — paged along the sequence
+    dim (DESIGN.md §6d)."""
+    del slots, max_len
+    if cfg.mla is not None:
+        m = cfg.mla
+        pool = {
+            "c_kv": jnp.zeros((cfg.num_layers, num_pages, page_size,
+                               m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((cfg.num_layers, num_pages, page_size,
+                                 m.qk_rope_head_dim), dtype),
+        }
+    else:
+        shape = (cfg.num_layers, num_pages, page_size, cfg.num_kv_heads,
+                 cfg.hd())
+        pool = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    return KV.PagedKVCache(pool=pool, dense={}, page_size=page_size)
+
+
 def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
             cache: Dict[str, jax.Array], slot: jax.Array, length: jax.Array
             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
@@ -366,6 +388,21 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
     batch while decode routes ``batch_slots`` tokens per step, so capacity
     drops can differ between the two paths — inherent to dropping MoE (the
     aux loss keeps the router balanced enough that drops are rare)."""
+    logits, rows = _prefill_core(cfg, params, tokens, length)
+    zero = jnp.zeros((), jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+    new_cache = {}
+    for name, full in cache.items():
+        tok = rows[name].astype(full.dtype)     # (L, 1, S, ...)
+        starts = (zero, slot, zero) + (zero,) * (full.ndim - 3)
+        new_cache[name] = jax.lax.dynamic_update_slice(full, tok, starts)
+    return logits, new_cache
+
+
+def _prefill_core(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                  length: jax.Array):
+    """Shared bulk-prefill compute.  Returns (last-real-token logits (1, V),
+    per-leaf full-prompt rows (L, 1, S, ...) — MLA latents or GQA K/V)."""
     dtype = jnp.dtype(cfg.dtype)
     x = L.embed_lookup(params["embed"], tokens, dtype)
     s = x.shape[1]
@@ -380,23 +417,25 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     x_last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
     logits = L.lm_logits(x_last, params["head"], dtype)
-    zero = jnp.zeros((), jnp.int32)
-    slot = jnp.asarray(slot, jnp.int32)
-    new_cache = {}
-    for name, full in cache.items():
-        tok = kvs[name].astype(full.dtype)      # (L, 1, S, ...)
-        starts = (zero, slot, zero) + (zero,) * (full.ndim - 3)
-        new_cache[name] = jax.lax.dynamic_update_slice(full, tok, starts)
-    return logits[:, 0], new_cache
+    return logits[:, 0], kvs
 
 
-def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
-                cache: Dict[str, jax.Array], pos: jax.Array
-                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """tokens: (B, 1); pos: scalar int32 or (B,) per-slot positions."""
+def prefill_paged(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                  cache: KV.PagedKVCache, pages: jax.Array, slot: jax.Array,
+                  length: jax.Array) -> Tuple[jax.Array, KV.PagedKVCache]:
+    """Paged bulk prefill: same compute as :func:`prefill` (exact-length,
+    unpadded tokens), committed as whole-page scatters at ``pages``."""
+    del slot
+    logits, rows = _prefill_core(cfg, params, tokens, length)
+    return logits, KV.commit_pages(cache, rows, pages)
+
+
+def _decode_core(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                 views: Dict[str, jax.Array], pos: jax.Array):
+    """Shared decode compute against (L, B, S, ...) cache views (persistent
+    dense leaves or block-table gathers).  Returns (logits, per-leaf
+    new-token rows (L, B, 1, ...))."""
     dtype = jnp.dtype(cfg.dtype)
-    b = tokens.shape[0]
-    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     x = L.embed_lookup(params["embed"], tokens, dtype)
     positions = pos[:, None]
 
@@ -406,9 +445,19 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                                             pos, dtype, L.DEFAULT_Q_CHUNK)
         return out, new_cache
 
-    x, tok_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x, tok_cache = jax.lax.scan(body, x, (params["blocks"], views))
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = L.lm_logits(x, params["head"], dtype)
+    return logits, tok_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: Dict[str, jax.Array], pos: jax.Array
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """tokens: (B, 1); pos: scalar int32 or (B,) per-slot positions."""
+    b = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    logits, tok_cache = _decode_core(cfg, params, tokens, cache, pos)
     # commit the new-token column into every cache leaf: one per-row scatter
     # each (in-place when the cache is donated into the jitted step)
     bidx = jnp.arange(b, dtype=jnp.int32)
@@ -417,3 +466,19 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
         tok = tok_cache[name]                   # (L, B, 1, ...)
         new_cache[name] = full.at[:, bidx, pos].set(tok[:, :, 0])
     return logits, new_cache
+
+
+def decode_paged(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                 cache: KV.PagedKVCache, pos: jax.Array,
+                 block_tables: jax.Array
+                 ) -> Tuple[jax.Array, KV.PagedKVCache]:
+    """Paged decode step: block-table gathers feed the same attention (MLA
+    absorbed or GQA), then the new-token rows scatter into their pages."""
+    b = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    views = KV.gather_views(cache, block_tables)
+    logits, tok_cache = _decode_core(cfg, params, tokens, views, pos)
+    cache = KV.commit_token(cache,
+                            {n: t[:, :, 0] for n, t in tok_cache.items()},
+                            block_tables, pos)
+    return logits, cache

@@ -37,6 +37,22 @@ class Model:
     # padded positions out; recurrent families consume every token and must
     # be prefilled at the exact prompt length)
     padded_prefill: bool = True
+    # paged-KV serving (serving/kv_cache.py): attention families expose a
+    # page-pool cache plus block-table prefill/decode; recurrent families
+    # (xlstm/zamba — O(1) SSD/LSTM state) leave these None and the engine
+    # falls back to the dense slot-addressed cache.
+    # init_paged_cache(num_pages, page_size, slots, max_len, dtype)
+    init_paged_cache: Optional[Callable[..., Any]] = None
+    # prefill_paged(params, tokens (1, S), cache, pages, slot, length)
+    prefill_paged: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
+    # decode_paged(params, tokens (B, 1), cache, pos (B,), block_tables)
+    decode_paged: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
+
+    @property
+    def supports_paged(self) -> bool:
+        return (self.init_paged_cache is not None
+                and self.prefill_paged is not None
+                and self.decode_paged is not None)
 
     def make_inputs(self, rng, batch: int, seq: int) -> Batch:
         """Concrete (random) inputs for smoke tests."""
@@ -73,6 +89,22 @@ def build(cfg: ModelConfig) -> Model:
         fields = ("frames", "tokens")
     elif cfg.num_image_tokens:
         fields = ("tokens", "patch_embeds")
+    paged_kw: Dict[str, Any] = {}
+    if hasattr(mod, "init_paged_cache"):
+        paged_kw = dict(
+            init_paged_cache=(
+                lambda num_pages, page_size, slots, max_len,
+                dtype=jnp.bfloat16: mod.init_paged_cache(
+                    cfg, num_pages, page_size, slots, max_len, dtype)),
+            prefill_paged=(
+                lambda params, tokens, cache, pages, slot, length:
+                mod.prefill_paged(cfg, params, tokens, cache, pages, slot,
+                                  length)),
+            decode_paged=(
+                lambda params, tokens, cache, pos, block_tables:
+                mod.decode_paged(cfg, params, tokens, cache, pos,
+                                 block_tables)),
+        )
     return Model(
         config=cfg,
         init=lambda key: mod.init(cfg, key),
@@ -88,4 +120,5 @@ def build(cfg: ModelConfig) -> Model:
         # moe is exact-length too: padded tokens would route through the
         # capacity-based dispatch and steal expert capacity from real tokens
         padded_prefill=cfg.family not in ("xlstm", "zamba", "moe"),
+        **paged_kw,
     )

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
+from repro.serving import kv_cache as KV
 
 Params = Dict[str, Any]
 
@@ -110,15 +111,25 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
-            cache: Dict[str, jax.Array], slot: jax.Array, length: jax.Array
-            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Bulk prefill of one serving slot: chunked full-seq attention + a
-    one-shot cache write.  tokens: (1, S) int32 (padded past ``length``);
-    returns (last-real-token logits (1, vocab), cache).  Padded positions
-    land in the cache but are never attended: decode masks each slot at
-    kpos <= pos, and every position is re-written before it enters a mask.
-    """
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     slots: int, max_len: int, dtype=jnp.bfloat16
+                     ) -> KV.PagedKVCache:
+    """Page-pool cache: ``(L, num_pages, page_size, kv, hd)`` pools replace
+    the dense ``(L, slots, max_len, kv, hd)`` leaves (DESIGN.md §6d)."""
+    del slots, max_len
+    kv, hd = cfg.num_kv_heads, cfg.hd()
+    shape = (cfg.num_layers, num_pages, page_size, kv, hd)
+    return KV.PagedKVCache(pool={"k": jnp.zeros(shape, dtype),
+                                 "v": jnp.zeros(shape, dtype)},
+                           dense={}, page_size=page_size)
+
+
+def _prefill_core(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                  length: jax.Array):
+    """Shared bulk-prefill compute: chunked full-seq attention over the
+    prompt.  Returns (last-real-token logits (1, V), per-leaf full-prompt
+    rows (L, 1, S, ...)); the dense/paged entry points differ only in how
+    they commit those rows."""
     dtype = jnp.dtype(cfg.dtype)
     x = L.embed_lookup(params["embed"], tokens, dtype)
     s = x.shape[1]
@@ -133,21 +144,46 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     x_last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
     logits = L.lm_logits(x_last, head_matrix(cfg, params), dtype)
+    return logits[:, 0], {"k": ks, "v": vs}
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            cache: Dict[str, jax.Array], slot: jax.Array, length: jax.Array
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Bulk prefill of one serving slot: chunked full-seq attention + a
+    one-shot cache write.  tokens: (1, S) int32 (padded past ``length``);
+    returns (last-real-token logits (1, vocab), cache).  Padded positions
+    land in the cache but are never attended: decode masks each slot at
+    kpos <= pos, and every position is re-written before it enters a mask.
+    """
+    logits, rows = _prefill_core(cfg, params, tokens, length)
     zero = jnp.zeros((), jnp.int32)
     slot = jnp.asarray(slot, jnp.int32)
     starts = (zero, slot, zero, zero, zero)
-    k_new = jax.lax.dynamic_update_slice(cache["k"],
-                                         ks.astype(cache["k"].dtype), starts)
-    v_new = jax.lax.dynamic_update_slice(cache["v"],
-                                         vs.astype(cache["v"].dtype), starts)
-    return logits[:, 0], {"k": k_new, "v": v_new}
+    k_new = jax.lax.dynamic_update_slice(
+        cache["k"], rows["k"].astype(cache["k"].dtype), starts)
+    v_new = jax.lax.dynamic_update_slice(
+        cache["v"], rows["v"].astype(cache["v"].dtype), starts)
+    return logits, {"k": k_new, "v": v_new}
 
 
-def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
-                cache: Dict[str, jax.Array], pos: jax.Array,
-                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 or (B,)
-    per-slot positions (each batch row lives on its own cache timeline)."""
+def prefill_paged(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                  cache: KV.PagedKVCache, pages: jax.Array, slot: jax.Array,
+                  length: jax.Array) -> Tuple[jax.Array, KV.PagedKVCache]:
+    """Paged bulk prefill: same compute as :func:`prefill`, committed as a
+    one-shot whole-page scatter at ``pages`` (scratch-0 entries protect
+    prefix-shared pages)."""
+    del slot
+    logits, rows = _prefill_core(cfg, params, tokens, length)
+    return logits, KV.commit_pages(cache, rows, pages)
+
+
+def _decode_core(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                 k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array):
+    """Shared decode compute against ``(L, B, S, kv, hd)`` cache views
+    (persistent dense leaves or block-table gathers — the per-slot
+    ``kpos <= pos`` masks are identical).  Returns (logits, new-token K/V
+    of shape (L, B, 1, kv, hd)); committing them is the caller's job."""
     dtype = jnp.dtype(cfg.dtype)
     b = tokens.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
@@ -160,13 +196,42 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                                       dtype, L.DEFAULT_Q_CHUNK)
         return out, new_cache
 
-    x, (k_tok, v_tok) = jax.lax.scan(body, x, (params["blocks"], cache["k"],
-                                               cache["v"]))
+    x, (k_tok, v_tok) = jax.lax.scan(body, x, (params["blocks"], k_cache,
+                                               v_cache))
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = L.lm_logits(x, head_matrix(cfg, params), dtype)
+    return logits, k_tok, v_tok
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: Dict[str, jax.Array], pos: jax.Array,
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 or (B,)
+    per-slot positions (each batch row lives on its own cache timeline)."""
+    b = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    logits, k_tok, v_tok = _decode_core(cfg, params, tokens, cache["k"],
+                                        cache["v"], pos)
     # per-row token-column write into the persistent caches (in-place when
     # the cache is donated into the jitted step)
     bidx = jnp.arange(b, dtype=jnp.int32)
     k_new = cache["k"].at[:, bidx, pos].set(k_tok[:, :, 0])
     v_new = cache["v"].at[:, bidx, pos].set(v_tok[:, :, 0])
     return logits, {"k": k_new, "v": v_new}
+
+
+def decode_paged(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                 cache: KV.PagedKVCache, pos: jax.Array,
+                 block_tables: jax.Array
+                 ) -> Tuple[jax.Array, KV.PagedKVCache]:
+    """Paged decode step: gather per-slot K/V views via the block tables,
+    attend exactly like :func:`decode_step`, commit the new token into its
+    page."""
+    b = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    views = KV.gather_views(cache, block_tables)
+    logits, k_tok, v_tok = _decode_core(cfg, params, tokens, views["k"],
+                                        views["v"], pos)
+    cache = KV.commit_token(cache, {"k": k_tok[:, :, 0], "v": v_tok[:, :, 0]},
+                            block_tables, pos)
+    return logits, cache

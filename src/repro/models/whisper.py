@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain
 from repro.models import layers as L
+from repro.serving import kv_cache as KV
 
 Params = Dict[str, Any]
 
@@ -167,19 +168,30 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
-def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
-            cache: Dict[str, jax.Array], slot: jax.Array, length: jax.Array
-            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Bulk decoder prefill of one serving slot against the slot's cached
-    encoder output.  tokens: (1, S) int32, padded past ``length``."""
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     slots: int, max_len: int, dtype=jnp.bfloat16
+                     ) -> KV.PagedKVCache:
+    """Decoder self-attn K/V is paged; the encoder output (cross-attn
+    context) is consumed whole per slot and stays slot-addressed in the
+    ``dense`` dict (DESIGN.md §6d)."""
+    kv, hd = cfg.num_kv_heads, cfg.hd()
+    shape = (cfg.num_layers, num_pages, page_size, kv, hd)
+    return KV.PagedKVCache(
+        pool={"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)},
+        dense={"enc_out": jnp.zeros((slots, max_len, cfg.d_model), dtype)},
+        page_size=page_size)
+
+
+def _prefill_core(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                  enc_out: jax.Array, length: jax.Array):
+    """Shared decoder bulk-prefill compute against one slot's encoder
+    output.  Returns (last-real-token logits (1, V), full-prompt K/V rows
+    (L, 1, S, KV, hd))."""
     dtype = jnp.dtype(cfg.dtype)
     s = tokens.shape[1]
-    slot = jnp.asarray(slot, jnp.int32)
     x = L.embed_lookup(params["embed"], tokens, dtype)
     x = x + sinusoidal_positions(s, cfg.d_model).astype(dtype)[None]
     positions = jnp.arange(s, dtype=jnp.int32)
-    enc_out = jax.lax.dynamic_slice_in_dim(cache["enc_out"], slot, 1,
-                                           axis=0).astype(dtype)
 
     def body(x, bp):
         out, kv = _dec_block_apply(cfg, bp, x, enc_out, positions, None, None,
@@ -190,26 +202,50 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
     x = L.layernorm(x, params["final_norm"], cfg.norm_eps)
     x_last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
     logits = L.lm_logits(x_last, params["embed"].T, dtype)
+    return logits[:, 0], {"k": ks, "v": vs}
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            cache: Dict[str, jax.Array], slot: jax.Array, length: jax.Array
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Bulk decoder prefill of one serving slot against the slot's cached
+    encoder output.  tokens: (1, S) int32, padded past ``length``."""
+    dtype = jnp.dtype(cfg.dtype)
+    slot = jnp.asarray(slot, jnp.int32)
+    enc_out = jax.lax.dynamic_slice_in_dim(cache["enc_out"], slot, 1,
+                                           axis=0).astype(dtype)
+    logits, rows = _prefill_core(cfg, params, tokens, enc_out, length)
     zero = jnp.zeros((), jnp.int32)
     starts = (zero, slot, zero, zero, zero)
-    k_new = jax.lax.dynamic_update_slice(cache["k"],
-                                         ks.astype(cache["k"].dtype), starts)
-    v_new = jax.lax.dynamic_update_slice(cache["v"],
-                                         vs.astype(cache["v"].dtype), starts)
-    return logits[:, 0], {"k": k_new, "v": v_new, "enc_out": cache["enc_out"]}
+    k_new = jax.lax.dynamic_update_slice(
+        cache["k"], rows["k"].astype(cache["k"].dtype), starts)
+    v_new = jax.lax.dynamic_update_slice(
+        cache["v"], rows["v"].astype(cache["v"].dtype), starts)
+    return logits, {"k": k_new, "v": v_new, "enc_out": cache["enc_out"]}
 
 
-def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
-                cache: Dict[str, jax.Array], pos: jax.Array
-                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """tokens: (B, 1); pos: scalar int32 or (B,) per-slot positions."""
+def prefill_paged(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                  cache: KV.PagedKVCache, pages: jax.Array, slot: jax.Array,
+                  length: jax.Array) -> Tuple[jax.Array, KV.PagedKVCache]:
+    """Paged decoder prefill: self-attn K/V lands in whole pages; the
+    encoder output is read from the slot-addressed ``dense`` leaf."""
     dtype = jnp.dtype(cfg.dtype)
-    b = tokens.shape[0]
-    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    slot = jnp.asarray(slot, jnp.int32)
+    enc_out = jax.lax.dynamic_slice_in_dim(cache.dense["enc_out"], slot, 1,
+                                           axis=0).astype(dtype)
+    logits, rows = _prefill_core(cfg, params, tokens, enc_out, length)
+    return logits, KV.commit_pages(cache, rows, pages)
+
+
+def _decode_core(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                 k_cache: jax.Array, v_cache: jax.Array, enc_out: jax.Array,
+                 pos: jax.Array):
+    """Shared decode compute against (L, B, S, KV, hd) self-attn views."""
+    dtype = jnp.dtype(cfg.dtype)
     x = L.embed_lookup(params["embed"], tokens, dtype)
     positions = pos[:, None]
     x = x + sinusoidal_embed(pos, cfg.d_model).astype(dtype)[:, None, :]
-    enc_out = cache["enc_out"].astype(dtype)
+    enc_out = enc_out.astype(dtype)
 
     def body(x, xs):
         bp, kc, vc = xs
@@ -218,10 +254,38 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
         return out, new_kv
 
     x, (k_tok, v_tok) = jax.lax.scan(body, x, (params["dec_blocks"],
-                                               cache["k"], cache["v"]))
+                                               k_cache, v_cache))
     x = L.layernorm(x, params["final_norm"], cfg.norm_eps)
     logits = L.lm_logits(x, params["embed"].T, dtype)
+    return logits, k_tok, v_tok
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: Dict[str, jax.Array], pos: jax.Array
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """tokens: (B, 1); pos: scalar int32 or (B,) per-slot positions."""
+    b = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    logits, k_tok, v_tok = _decode_core(cfg, params, tokens, cache["k"],
+                                        cache["v"], cache["enc_out"], pos)
     bidx = jnp.arange(b, dtype=jnp.int32)
     k_new = cache["k"].at[:, bidx, pos].set(k_tok[:, :, 0])
     v_new = cache["v"].at[:, bidx, pos].set(v_tok[:, :, 0])
     return logits, {"k": k_new, "v": v_new, "enc_out": cache["enc_out"]}
+
+
+def decode_paged(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                 cache: KV.PagedKVCache, pos: jax.Array,
+                 block_tables: jax.Array
+                 ) -> Tuple[jax.Array, KV.PagedKVCache]:
+    """Paged decode step: block-table gathers feed the decoder self-attn;
+    cross-attn reads the slot-addressed encoder output unchanged."""
+    b = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    views = KV.gather_views(cache, block_tables)
+    logits, k_tok, v_tok = _decode_core(cfg, params, tokens, views["k"],
+                                        views["v"], cache.dense["enc_out"],
+                                        pos)
+    cache = KV.commit_token(cache, {"k": k_tok[:, :, 0], "v": v_tok[:, :, 0]},
+                            block_tables, pos)
+    return logits, cache

@@ -285,9 +285,12 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = L.lm_logits(x, params["head"], dtype)
     bidx = jnp.arange(b, dtype=jnp.int32)
+    # cast into the cache leaves' storage dtypes: the decode scan carries the
+    # cache, and a compute-dtype state (e.g. f32 model over a bf16 cache)
+    # would change the carry type mid-scan
     new_cache = {
-        "ssm": jnp.concatenate(new_ssm, axis=0),
-        "conv": jnp.concatenate(new_conv, axis=0),
+        "ssm": jnp.concatenate(new_ssm, axis=0).astype(cache["ssm"].dtype),
+        "conv": jnp.concatenate(new_conv, axis=0).astype(cache["conv"].dtype),
         "attn_k": cache["attn_k"].at[:, bidx, pos].set(
             jnp.stack(new_k, axis=0)[:, :, 0]),
         "attn_v": cache["attn_v"].at[:, bidx, pos].set(

@@ -1,12 +1,14 @@
-"""Batched serving engine: bulk prefill + donated decode with KV caches and
-FORMS weights.
+"""Batched serving engine, split into a host-side :class:`Scheduler` driving
+a jitted :class:`ModelRunner`, over either a dense slot cache or a paged
+KV-cache pool.
 
-A deliberately small but real engine, built so a steady-state decode step
-does no avoidable HBM copies and no host round-trips:
+The engine keeps every hot-path property of the earlier designs — a
+steady-state decode step does no avoidable HBM copies and no host
+round-trips:
 
 * **Bulk prefill** — admitting an L-token prompt costs ONE jitted
   ``model.prefill`` call (chunked full-sequence attention + a one-shot cache
-  write at the slot), not L decode steps.  Attention families pad prompts to
+  write), not L decode steps.  Attention families pad prompts to
   power-of-two buckets to bound recompilation; recurrent families
   (``Model.padded_prefill == False``) compile per exact length.
 * **Donated caches** — the KV/state cache is donated into both jitted entry
@@ -18,18 +20,23 @@ does no avoidable HBM copies and no host round-trips:
 * **Chunked decode** — an inner ``lax.scan`` decodes ``decode_block`` tokens
   per dispatch, so the host syncs once every k tokens instead of every token.
 * **Per-slot positions** — every slot owns its cache timeline end to end
-  (vector ``pos`` through ``decode_step``), so continuous batching admits a
-  new prompt into a finished slot without burning the other slots' cache
-  length.
+  (vector ``pos`` through every decode step).
 * **Mesh sharding** — ``mesh=...`` runs the whole engine SPMD on a device
-  mesh: weights follow the logical-axis rules (compressed
-  ``FormsLinearParams`` leaves co-shard mags/int8 signs/scales along N, with
-  K shards constrained to whole sign fragments), KV caches shard their slot
-  dim over the data axes and head dims over the model axis, and both jitted
-  entry points trace under the engine's ``ParallelContext`` so the
-  models' ``constrain`` annotations are live.  The polarized matmul then
-  runs on per-device shards — GSPMD partitions the sign-folded MVM exactly
-  like the paper partitions columns across sub-arrays and tiles.
+  mesh (weights follow the logical-axis rules, caches shard slots — or page
+  pools — over the data axes and heads over the model axis, both jitted
+  entry points trace under the engine's ``ParallelContext``).
+
+**Paged serving** (``page_size=...``, DESIGN.md §6d): instead of one
+monolithic ``(layers, slots, max_len, ...)`` allocation, the cache is a
+shared page pool (serving/kv_cache.py) and each slot holds an int32 block
+table.  The :class:`Scheduler` admits by **free-page budget** instead of
+slot count — a request reserves only the pages its prompt + token budget
+actually needs, so the same HBM serves strictly more concurrent requests —
+and shares page-aligned prompt prefixes across requests through a
+:class:`~repro.serving.kv_cache.PrefixCache` (copy-on-write: shared pages
+are never written after registration).  Greedy decode is token-identical to
+the dense engine; recurrent families (xlstm/zamba — O(1) SSD/LSTM state)
+fall back to the dense slot-addressed cache.
 
 With ``forms=True``/``spec=...`` the engine compresses the weights once
 (``repro.forms.compress_tree``) and decodes directly on the compressed
@@ -40,7 +47,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -51,32 +57,9 @@ from repro.distributed.sharding import (ParallelContext, cache_shardings,
                                         parallel_context, params_shardings,
                                         reshard_state)
 from repro.forms import (CompressReport, FormsSpec, compress_tree,
-                         decompress_tree, default_spec)
+                         default_spec)
 from repro.models.registry import Model
-
-
-def forms_compress_params(params: Any, fragment: int = 8, bits: int = 8
-                          ) -> Tuple[Any, Dict[str, float]]:
-    """DEPRECATED: thin wrapper over :func:`repro.forms.compress_tree`.
-
-    Returns a *float fake-quant* tree (dense values on the polarized+
-    quantized grid), like the old API.  For 2-D/3-D/conv leaves the values
-    match the old implementation exactly (policy="C" reproduces the old
-    row-major conv flatten); scan-stacked MoE expert tensors (L, E, in, out)
-    are now projected per (layer, expert) instead of as one flat matrix —
-    per-matrix scales and signs, which is what the hardware mapping does.
-    New code should call ``compress_tree`` and keep the compressed pytree —
-    the model layers consume it directly.
-    """
-    warnings.warn(
-        "forms_compress_params is deprecated; use repro.forms.compress_tree "
-        "(and keep the compressed pytree) or decompress_tree for the float "
-        "projection (see DESIGN.md migration notes)",
-        DeprecationWarning, stacklevel=2)
-    # policy="C" reproduces the old row-major conv flatten exactly
-    spec = FormsSpec(m=fragment, bits=bits, policy="C")
-    compressed, report = compress_tree(params, spec)
-    return decompress_tree(compressed), report.errors
+from repro.serving import kv_cache as KV
 
 
 @dataclasses.dataclass
@@ -98,73 +81,77 @@ class Result:
 _MIN_BUCKET = 8
 
 
-class ServingEngine:
-    """Continuous-batching engine over fixed decode slots."""
+class ModelRunner:
+    """The jitted side of the engine: params + compiled prefill/decode.
 
-    def __init__(self, model: Model, params: Any, *, max_len: int = 512,
-                 batch_slots: int = 8, forms: bool = False,
+    Owns nothing about admission or page bookkeeping — it executes one
+    bulk prefill or one ``decode_block``-token chunk on whatever cache
+    (dense slot cache or :class:`~repro.serving.kv_cache.PagedKVCache`)
+    it was built with, keeping donation, on-device sampling, the inner
+    decode scan and the mesh path.
+    """
+
+    def __init__(self, model: Model, params: Any, cache: Any, *,
+                 max_len: int,
                  spec: Optional[FormsSpec] = None,
-                 fragment: int = 8, bits: int = 8, rng_seed: int = 0,
+                 ctx: Optional[ParallelContext] = None,
                  decode_block: int = 4, donate: bool = True,
-                 mesh: Optional[Any] = None):
+                 rng_seed: int = 0,
+                 cache_shardings: Any = None):
         self.model = model
-        self.cfg = model.config
-        self.ctx: Optional[ParallelContext] = (
-            ParallelContext.for_mesh(mesh) if mesh is not None else None)
-        self.spec: Optional[FormsSpec] = None
-        self.compression_report: Optional[CompressReport] = None
-        self.compression_errors: Dict[str, float] = {}
-        if forms or spec is not None:
-            self.spec = spec if spec is not None else FormsSpec(m=fragment,
-                                                                bits=bits)
-            params, self.compression_report = compress_tree(params, self.spec,
-                                                            ctx=self.ctx)
-            self.compression_errors = self.compression_report.errors
         self.params = params
-        self.max_len = max_len
-        self.slots = batch_slots
+        self.cache = cache
+        self.paged = isinstance(cache, KV.PagedKVCache)
+        self.spec = spec
+        self.ctx = ctx
         self.decode_block = max(1, int(decode_block))
         self.donate = donate
-        self.cache = model.init_cache(batch_slots, max_len)
+        self.cache_shardings = cache_shardings
+        self.max_len = int(max_len)
         self._key = jax.random.PRNGKey(rng_seed)
-        self.param_shardings = None
-        self.cache_shardings = None
-        if self.ctx is not None:
-            # weights: tensor-parallel over the model axis, replicated over
-            # data (fsdp=False — a ZeRO all-gather per decode step would sit
-            # on the latency path); caches: slots over data, heads over model.
-            # The checkpoint path can restore straight into this layout via
-            # checkpoint.restore(..., shardings=engine.param_shardings).
-            self.param_shardings = params_shardings(self.params, self.ctx,
-                                                    fsdp=False)
-            self.params = reshard_state(self.params, self.param_shardings)
-            self.cache_shardings = cache_shardings(self.cache, self.ctx)
-            self.cache = reshard_state(self.cache, self.cache_shardings)
 
         # the spec's backend/tiling hints bake into the traced hot-path fns
         # (repro.forms.default_spec is read at trace time by forms.apply);
         # the cache (argument 1) is DONATED — updates alias in place and the
         # caller must always rebind ``self.cache`` to the returned tree.
-        def _decode_fn(p, c, toks, pos, temps, key):
-            with default_spec(self.spec):
-                def body(carry, _):
-                    tok, cache, pos, key = carry
-                    logits, cache = model.decode_step(p, tok[:, None], cache,
-                                                      pos)
-                    lg = logits[:, 0].astype(jnp.float32)
-                    key, sub = jax.random.split(key)
-                    nxt = _sample_on_device(lg, temps, sub)
-                    return (nxt, cache, pos + 1, key), nxt
-
-                (_, c, _, _), toks_out = jax.lax.scan(
-                    body, (toks, c, pos, key), None,
-                    length=self.decode_block)
-            return toks_out, c
+        # The paged signature only threads the extra block-table argument
+        # into the model call — scan/sampling logic is shared (_decode_impl).
+        if self.paged:
+            def _decode_fn(p, c, toks, pos, tables, temps, key):
+                return self._decode_impl(
+                    p, c, toks, pos, temps, key,
+                    lambda p_, t_, c_, pos_: model.decode_paged(
+                        p_, t_, c_, pos_, tables))
+        else:
+            def _decode_fn(p, c, toks, pos, temps, key):
+                return self._decode_impl(p, c, toks, pos, temps, key,
+                                         model.decode_step)
 
         self._decode = jax.jit(_decode_fn,
                                donate_argnums=(1,) if donate else (),
                                **self._out_shardings_kw())
         self._prefill_fns: Dict[int, Any] = {}
+
+    def _decode_impl(self, p, c, toks, pos, temps, key, step):
+        """The shared decode-block scan: ``decode_block`` model steps with
+        on-device sampling; ``step(p, toks, cache, pos)`` is the dense or
+        block-table-bound paged decode call."""
+        with default_spec(self.spec):
+            def body(carry, _):
+                tok, cache, pos, key = carry
+                logits, cache = step(p, tok[:, None], cache, pos)
+                lg = logits[:, 0].astype(jnp.float32)
+                key, sub = jax.random.split(key)
+                nxt = _sample_on_device(lg, temps, sub)
+                return (nxt, cache, pos + 1, key), nxt
+
+            (_, c, _, _), toks_out = jax.lax.scan(
+                body, (toks, c, pos, key), None, length=self.decode_block)
+        return toks_out, c
+
+    @property
+    def page_size(self) -> int:
+        return self.cache.page_size
 
     def _out_shardings_kw(self) -> Dict[str, Any]:
         """Pin the jitted outputs' shardings on a mesh: the returned cache
@@ -181,7 +168,7 @@ class ServingEngine:
     # prefill
     # ------------------------------------------------------------------
 
-    def _bucket(self, n: int) -> int:
+    def bucket_for(self, n: int) -> int:
         """Padded-prefill bucket (power of two) to bound recompilation; the
         exact length for recurrent families, whose state consumes every
         token."""
@@ -192,15 +179,29 @@ class ServingEngine:
             b *= 2
         return min(b, self.max_len)
 
+    def _prefill_impl(self, p, toks, c, slot, length, temp, key, call):
+        """Shared prefill tail: one bulk model call + on-device sampling of
+        the first token; ``call`` is the dense or destination-page-bound
+        paged prefill."""
+        with default_spec(self.spec):
+            logits, c = call(p, toks, c, slot, length)
+        lg = logits.reshape(1, -1).astype(jnp.float32)
+        tok = _sample_on_device(lg, temp[None], key)
+        return tok[0], c
+
     def _get_prefill(self, bucket: int):
         fn = self._prefill_fns.get(bucket)
         if fn is None:
-            def _prefill_fn(p, toks, c, slot, length, temp, key):
-                with default_spec(self.spec):
-                    logits, c = self.model.prefill(p, toks, c, slot, length)
-                lg = logits.reshape(1, -1).astype(jnp.float32)
-                tok = _sample_on_device(lg, temp[None], key)
-                return tok[0], c
+            if self.paged:
+                def _prefill_fn(p, toks, c, pages, slot, length, temp, key):
+                    return self._prefill_impl(
+                        p, toks, c, slot, length, temp, key,
+                        lambda p_, t_, c_, s_, n_: self.model.prefill_paged(
+                            p_, t_, c_, pages, s_, n_))
+            else:
+                def _prefill_fn(p, toks, c, slot, length, temp, key):
+                    return self._prefill_impl(p, toks, c, slot, length, temp,
+                                              key, self.model.prefill)
 
             fn = jax.jit(_prefill_fn,
                          donate_argnums=(2,) if self.donate else (),
@@ -209,27 +210,35 @@ class ServingEngine:
         return fn
 
     def prefill_slot(self, slot: int, prompt: np.ndarray,
-                     temperature: float = 0.0) -> int:
+                     temperature: float = 0.0,
+                     pages: Optional[np.ndarray] = None) -> int:
         """Admit a prompt into ``slot`` with one bulk-prefill call; returns
         the first sampled token.  The slot's timeline restarts at 0 and the
-        next decode write position is ``len(prompt)``."""
+        next decode write position is ``len(prompt)``.  On a paged cache,
+        ``pages`` is the int32 destination-page vector covering the bucket
+        (scratch-0 entries skip prefix-shared pages)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         n = int(prompt.shape[0])
         if not 1 <= n < self.max_len:
             raise ValueError(
                 f"prompt length {n} must be in [1, max_len={self.max_len})")
-        bucket = self._bucket(n)
+        bucket = self.bucket_for(n)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = prompt
         self._key, sub = jax.random.split(self._key)
         fn = self._get_prefill(bucket)
+        args = [self.params, jnp.asarray(toks), self.cache]
+        if self.paged:
+            if pages is None:
+                raise ValueError("paged prefill needs a destination-page "
+                                 "vector (pages=...)")
+            args.append(jnp.asarray(pages, jnp.int32))
+        args += [jnp.asarray(slot, jnp.int32), jnp.asarray(n, jnp.int32),
+                 jnp.asarray(temperature, jnp.float32), sub]
         # parallel_context makes the models' logical-axis ``constrain``
         # annotations live while a new bucket traces (no-op when ctx is None)
         with parallel_context(self.ctx):
-            tok, self.cache = fn(self.params, jnp.asarray(toks), self.cache,
-                                 jnp.asarray(slot, jnp.int32),
-                                 jnp.asarray(n, jnp.int32),
-                                 jnp.asarray(temperature, jnp.float32), sub)
+            tok, self.cache = fn(*args)
         return int(tok)
 
     # ------------------------------------------------------------------
@@ -237,7 +246,8 @@ class ServingEngine:
     # ------------------------------------------------------------------
 
     def decode_chunk(self, tokens: np.ndarray, positions: np.ndarray,
-                     temps: np.ndarray) -> np.ndarray:
+                     temps: np.ndarray,
+                     block_tables: Optional[np.ndarray] = None) -> np.ndarray:
         """One donated, jitted dispatch of ``decode_block`` steps for all
         slots; returns the (decode_block, slots) sampled-token grid.  The
         single host sync of the steady-state loop.
@@ -249,13 +259,95 @@ class ServingEngine:
         next-iteration positions).
         """
         self._key, sub = jax.random.split(self._key)
-        with parallel_context(self.ctx):
-            toks_out, self.cache = self._decode(
-                self.params, self.cache,
+        args = [self.params, self.cache,
                 jnp.array(tokens, jnp.int32, copy=True),
-                jnp.array(positions, jnp.int32, copy=True),
-                jnp.array(temps, jnp.float32, copy=True), sub)
+                jnp.array(positions, jnp.int32, copy=True)]
+        if self.paged:
+            if block_tables is None:
+                raise ValueError("paged decode needs block_tables")
+            args.append(jnp.array(block_tables, jnp.int32, copy=True))
+        args += [jnp.array(temps, jnp.float32, copy=True), sub]
+        with parallel_context(self.ctx):
+            toks_out, self.cache = self._decode(*args)
         return np.asarray(toks_out)
+
+
+class Scheduler:
+    """The host side of the engine: admission, slot/page bookkeeping, and
+    the continuous-batching loop driving a :class:`ModelRunner`.
+
+    Dense mode (``allocator is None``) admits by free slot, exactly the
+    monolithic-cache engine.  Paged mode admits by **free-page budget**: a
+    request is admitted when a free decode slot exists AND the allocator can
+    reserve ``ceil(min(max(bucket, prompt + max_new), max_len) / page_size)``
+    pages (minus any prefix-shared ones) — pages are reserved up front, so a
+    running request can never be preempted by pool exhaustion.  On finish
+    the pages are released (refcount-aware for shared ones) and the freed
+    budget immediately re-admits from the queue.
+    """
+
+    def __init__(self, runner: ModelRunner, *, slots: int, max_len: int,
+                 allocator: Optional[KV.PageAllocator] = None,
+                 prefix: Optional[KV.PrefixCache] = None):
+        self.runner = runner
+        self.slots = slots
+        self.max_len = max_len
+        self.allocator = allocator
+        self.prefix = prefix
+        self.paged = allocator is not None
+        self.max_concurrent = 0          # peak simultaneously-active slots
+        self.admissions: List[Tuple[int, Tuple[int, ...]]] = []
+        if self.paged:
+            ps = runner.page_size
+            self.n_tables = KV.pages_for(max_len, ps)
+            if allocator.capacity < self.n_tables:
+                raise ValueError(
+                    f"page pool too small: a max_len={max_len} request needs "
+                    f"{self.n_tables} pages, pool holds {allocator.capacity} "
+                    f"(+1 scratch)")
+            self.block_tables = np.zeros((slots, self.n_tables), np.int32)
+            self.slot_pages: List[List[int]] = [[] for _ in range(slots)]
+
+    # ------------------------------------------------------------------
+    # paged admission
+    # ------------------------------------------------------------------
+
+    def _reserve_pages(self, uid: int, slot: int, prompt: np.ndarray,
+                       max_new: int) -> Optional[np.ndarray]:
+        """Reserve every page the request can touch (prefill bucket +
+        decode budget, capped at max_len); returns the prefill
+        destination-page vector, or None if the free-page budget blocks.
+        Prefix-shared pages are refcounted instead of allocated, and their
+        prefill destinations are redirected to scratch so the shared
+        contents are never rewritten."""
+        ps = self.runner.page_size
+        n = len(prompt)
+        bucket = self.runner.bucket_for(n)
+        rows = min(max(bucket, n + max_new), self.max_len)
+        need = KV.pages_for(rows, ps)
+        shared = self.prefix.match(prompt) if self.prefix is not None else []
+        own = self.allocator.alloc(need - len(shared))
+        if own is None:
+            return None
+        self.allocator.share(shared)
+        pages = shared + own
+        self.slot_pages[slot] = pages
+        self.block_tables[slot] = 0
+        self.block_tables[slot, :need] = pages
+        self.admissions.append((uid, tuple(pages)))
+        n_bucket_pages = KV.pages_for(bucket, ps)
+        return np.asarray(
+            [KV.SCRATCH_PAGE if j < len(shared) else pages[j]
+             for j in range(n_bucket_pages)], np.int32)
+
+    def _release_slot(self, slot: int) -> None:
+        if not self.paged:
+            return
+        freed = self.allocator.release(self.slot_pages[slot])
+        if self.prefix is not None:
+            self.prefix.evict(freed)
+        self.slot_pages[slot] = []
+        self.block_tables[slot] = 0   # idle slots read/write scratch only
 
     # ------------------------------------------------------------------
     # serving loop
@@ -275,48 +367,86 @@ class ServingEngine:
             prefill (a request whose budget is exhausted by the prefill
             token completes immediately and the loop drains the next one —
             iteratively, so a long queue of 1-token requests can't blow the
-            stack)."""
+            stack).  In paged mode a request that doesn't fit the free-page
+            budget stays at the head of the queue (admission blocks until a
+            finishing request frees pages; up-front reservation guarantees
+            it eventually fits)."""
             while queue:
-                req = queue.pop(0)
-                res = Result(uid=req.uid, tokens=[])
+                req = queue[0]
                 # oversized prompts keep their most recent context-window
                 # worth of tokens (leaving room to generate) instead of
                 # aborting the whole run
                 prompt = np.asarray(req.prompt, np.int32).reshape(-1)
                 if prompt.shape[0] >= self.max_len:
                     prompt = prompt[-(self.max_len - 1):]
+                pages = None
+                if self.paged:
+                    pages = self._reserve_pages(req.uid, slot, prompt,
+                                                req.max_new_tokens)
+                    if pages is None:
+                        if not any(a is not None for a in active):
+                            raise RuntimeError(
+                                "page pool exhausted with no request in "
+                                "flight — pool sizing bug")
+                        return
+                queue.pop(0)
+                res = Result(uid=req.uid, tokens=[])
                 t0 = time.perf_counter()
-                first = self.prefill_slot(slot, prompt, req.temperature)
+                first = self.runner.prefill_slot(slot, prompt,
+                                                 req.temperature, pages=pages)
                 res.prefill_ms = (time.perf_counter() - t0) * 1e3
                 res.tokens.append(first)
                 n_prompt = int(prompt.shape[0])
                 if (len(res.tokens) >= req.max_new_tokens
                         or n_prompt >= self.max_len - 1):
+                    self._release_slot(slot)
                     done.append(res)
                     continue
+                if self.paged and self.prefix is not None:
+                    self.prefix.register(prompt, self.slot_pages[slot])
                 cur[slot] = first
                 slot_pos[slot] = n_prompt
                 temps[slot] = req.temperature
                 active[slot] = (req, res)
+                self.max_concurrent = max(
+                    self.max_concurrent,
+                    sum(a is not None for a in active))
                 return
 
         def finish(slot: int) -> None:
             done.append(active[slot][1])
             active[slot] = None
             temps[slot] = 0.0
+            self._release_slot(slot)
             admit(slot)
 
-        for slot in range(self.slots):
-            admit(slot)
+        def admit_idle() -> None:
+            """Retry admission into every idle slot (a finish elsewhere may
+            have freed the pages a blocked head-of-queue request needed).
+            Stops at the first slot that leaves the queue head in place —
+            the head is page-blocked, and further idle slots face the same
+            allocator state."""
+            for s in range(self.slots):
+                if not queue:
+                    return
+                if active[s] is None:
+                    head = queue[0]
+                    admit(s)
+                    if queue and queue[0] is head and active[s] is None:
+                        return
 
-        k = self.decode_block
+        admit_idle()
+
+        k = self.runner.decode_block
         while any(a is not None for a in active):
             # snapshot the attribution denominator BEFORE the loop body
             # mutates ``active`` (finished slots must still pay their share
             # of the step they took part in)
             n_active = sum(a is not None for a in active)
             t0 = time.perf_counter()
-            out = self.decode_chunk(cur, slot_pos, temps)   # (k, slots)
+            out = self.runner.decode_chunk(
+                cur, slot_pos, temps,
+                block_tables=self.block_tables if self.paged else None)
             dt = (time.perf_counter() - t0) * 1e3
             for s in range(self.slots):
                 a = active[s]
@@ -335,7 +465,138 @@ class ServingEngine:
                 else:
                     cur[s] = out[k - 1, s]
                     slot_pos[s] += k
+            admit_idle()
         return done
+
+
+class ServingEngine:
+    """Continuous-batching engine facade: compression + sharding setup, a
+    :class:`ModelRunner` for the jitted hot path, and a :class:`Scheduler`
+    for admission.  ``page_size=...`` turns on the paged KV cache for the
+    attention families (recurrent families fall back to the dense slot
+    cache); ``prefix_cache=True`` additionally shares page-aligned prompt
+    prefixes across concurrent requests."""
+
+    def __init__(self, model: Model, params: Any, *, max_len: int = 512,
+                 batch_slots: int = 8, forms: bool = False,
+                 spec: Optional[FormsSpec] = None,
+                 fragment: int = 8, bits: int = 8, rng_seed: int = 0,
+                 decode_block: int = 4, donate: bool = True,
+                 mesh: Optional[Any] = None,
+                 page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None,
+                 prefix_cache: bool = False):
+        self.model = model
+        self.cfg = model.config
+        self.ctx: Optional[ParallelContext] = (
+            ParallelContext.for_mesh(mesh) if mesh is not None else None)
+        self.spec: Optional[FormsSpec] = None
+        self.compression_report: Optional[CompressReport] = None
+        self.compression_errors: Dict[str, float] = {}
+        if forms or spec is not None:
+            self.spec = spec if spec is not None else FormsSpec(m=fragment,
+                                                                bits=bits)
+            params, self.compression_report = compress_tree(params, self.spec,
+                                                            ctx=self.ctx)
+            self.compression_errors = self.compression_report.errors
+        self.max_len = max_len
+        self.slots = batch_slots
+        self.donate = donate
+
+        self.paged = bool(page_size) and model.supports_paged
+        self.page_size = int(page_size) if self.paged else None
+        allocator = prefix = None
+        if self.paged:
+            per_slot = KV.pages_for(max_len, self.page_size)
+            if num_pages is None:
+                # default budget: every slot can still hold a full max_len
+                # request (+1 scratch page) — no admission regression, the
+                # win comes from shorter requests leaving pages free.  On a
+                # mesh, round up to the data-axis size so the page dim
+                # shards instead of hitting the divisibility fallback.
+                num_pages = batch_slots * per_slot + 1
+                if self.ctx is not None:
+                    d = max(1, self.ctx.axis_size("batch"))
+                    num_pages = -(-num_pages // d) * d
+            allocator = KV.PageAllocator(num_pages)
+            prefix = (KV.PrefixCache(self.page_size) if prefix_cache
+                      else None)
+            cache = model.init_paged_cache(num_pages, self.page_size,
+                                           batch_slots, max_len)
+        else:
+            cache = model.init_cache(batch_slots, max_len)
+
+        self.param_shardings = None
+        self.cache_shardings = None
+        if self.ctx is not None:
+            # weights: tensor-parallel over the model axis, replicated over
+            # data (fsdp=False — a ZeRO all-gather per decode step would sit
+            # on the latency path); caches: slots/pages over data, heads
+            # over model.  The checkpoint path can restore straight into
+            # this layout via checkpoint.restore(...,
+            # shardings=engine.param_shardings).
+            self.param_shardings = params_shardings(params, self.ctx,
+                                                    fsdp=False)
+            params = reshard_state(params, self.param_shardings)
+            self.cache_shardings = cache_shardings(cache, self.ctx)
+            cache = reshard_state(cache, self.cache_shardings)
+
+        self.runner = ModelRunner(model, params, cache, max_len=max_len,
+                                  spec=self.spec,
+                                  ctx=self.ctx, decode_block=decode_block,
+                                  donate=donate, rng_seed=rng_seed,
+                                  cache_shardings=self.cache_shardings)
+        self.scheduler = Scheduler(self.runner, slots=batch_slots,
+                                   max_len=max_len, allocator=allocator,
+                                   prefix=prefix)
+
+    # --- delegation (the engine surface tests/benches/launchers consume) ---
+
+    @property
+    def params(self) -> Any:
+        return self.runner.params
+
+    @property
+    def cache(self) -> Any:
+        return self.runner.cache
+
+    @cache.setter
+    def cache(self, value: Any) -> None:
+        self.runner.cache = value
+
+    @property
+    def decode_block(self) -> int:
+        return self.runner.decode_block
+
+    @property
+    def page_allocator(self) -> Optional[KV.PageAllocator]:
+        return self.scheduler.allocator
+
+    @property
+    def prefix_cache(self) -> Optional[KV.PrefixCache]:
+        return self.scheduler.prefix
+
+    def cache_bytes(self) -> int:
+        """Persistent HBM footprint of the serving cache."""
+        return sum(leaf.nbytes
+                   for leaf in jax.tree_util.tree_leaves(self.runner.cache))
+
+    def prefill_slot(self, slot: int, prompt: np.ndarray,
+                     temperature: float = 0.0,
+                     pages: Optional[np.ndarray] = None) -> int:
+        return self.runner.prefill_slot(slot, prompt, temperature,
+                                        pages=pages)
+
+    def decode_chunk(self, tokens: np.ndarray, positions: np.ndarray,
+                     temps: np.ndarray,
+                     block_tables: Optional[np.ndarray] = None) -> np.ndarray:
+        if self.paged and block_tables is None:
+            block_tables = self.scheduler.block_tables
+        return self.runner.decode_chunk(tokens, positions, temps,
+                                        block_tables=block_tables)
+
+    def run(self, requests: List[Request]) -> List[Result]:
+        return self.scheduler.run(requests)
 
 
 def _sample_on_device(logits: jax.Array, temps: jax.Array,

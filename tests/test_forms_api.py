@@ -4,7 +4,7 @@ Covers the acceptance surface of the redesign: FormsSpec validation,
 compress_tree -> decompress_tree exactness on mixed pytrees (2D/3D/4D +
 non-weight leaves), kernel-path parity of apply() vs dense matmul, serving
 decode directly on a compressed pytree, checkpointing with uint8 magnitudes
-on disk, and DeprecationWarnings from every legacy entry point.
+on disk, and the removal of the PR-1 legacy shims.
 """
 import dataclasses
 import os
@@ -291,51 +291,35 @@ def test_checkpoint_compressed_tree_uint8_on_disk(tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# deprecated entry points
+# removed legacy entry points
 # ---------------------------------------------------------------------------
 
-def test_deprecated_forms_layer_shims_warn_and_match():
-    from repro.core import forms_layer as FL
+def test_legacy_shims_are_removed():
+    """The PR-1 deprecation shims are gone: ``repro.core.forms_layer`` no
+    longer imports and the engine exports no ``forms_compress_params`` —
+    ``repro.forms`` is the only compression surface (DESIGN.md §9)."""
+    with pytest.raises(ImportError):
+        from repro.core import forms_layer  # noqa: F401
+    import repro.serving.engine as engine_mod
+    assert not hasattr(engine_mod, "forms_compress_params")
+
+
+def test_legacy_spec_pair_converts_via_from_legacy():
+    """``FormsSpec.from_legacy`` remains the documented migration path for
+    code still holding a (FragmentSpec, QuantSpec) pair — it must produce
+    bit-identical compression to the natively-constructed spec."""
     from repro.core.fragments import FragmentSpec
     from repro.core.quantization import QuantSpec
+    spec = FormsSpec.from_legacy(FragmentSpec(m=8), QuantSpec(bits=8))
+    assert spec == FormsSpec(m=8, bits=8)
     w = jax.random.normal(jax.random.PRNGKey(4), (24, 6))
-    spec = FormsSpec(m=8, bits=8)
-    fp_new, err_new = forms.from_dense(w, spec)
-    with pytest.warns(DeprecationWarning):
-        fp_old, err_old = FL.from_dense(w, FragmentSpec(m=8), QuantSpec(bits=8))
-    np.testing.assert_array_equal(np.asarray(fp_new.mags), np.asarray(fp_old.mags))
-    np.testing.assert_array_equal(np.asarray(fp_new.signs), np.asarray(fp_old.signs))
-    assert float(err_new) == float(err_old)
-    with pytest.warns(DeprecationWarning):
-        dense_old = FL.to_dense(fp_old)
-    np.testing.assert_array_equal(np.asarray(dense_old),
-                                  np.asarray(forms.to_dense(fp_new)))
-    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(5), (3, 24)))
-    with pytest.warns(DeprecationWarning):
-        y_old = FL.apply(fp_old, x)
-    np.testing.assert_allclose(np.asarray(y_old),
-                               np.asarray(forms.apply(fp_new, x, spec)),
-                               rtol=1e-5, atol=1e-5)
-    with pytest.warns(DeprecationWarning):
-        y_sim_old, _, _ = FL.apply_simulated(fp_old, x, input_bits=16)
-    y_sim_new, _, _ = forms.apply_simulated(fp_new, x, spec)
-    np.testing.assert_allclose(np.asarray(y_sim_old), np.asarray(y_sim_new),
-                               rtol=1e-5, atol=1e-5)
-
-
-def test_deprecated_forms_compress_params_warns_and_matches():
-    from repro.serving.engine import forms_compress_params
-    tree = _mixed_tree()
-    with pytest.warns(DeprecationWarning):
-        fake_quant, errors = forms_compress_params(tree, fragment=8, bits=8)
-    assert errors
-    # the wrapper is exactly decompress(compress) at policy="C"
-    comp, rep = compress_tree(tree, FormsSpec(m=8, bits=8, policy="C"))
-    dec = decompress_tree(comp)
-    for a, b in zip(jax.tree_util.tree_leaves(fake_quant),
-                    jax.tree_util.tree_leaves(dec)):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    assert errors == rep.errors
+    fp_legacy, err_legacy = forms.from_dense(w, spec)
+    fp_native, err_native = forms.from_dense(w, FormsSpec(m=8, bits=8))
+    np.testing.assert_array_equal(np.asarray(fp_legacy.mags),
+                                  np.asarray(fp_native.mags))
+    np.testing.assert_array_equal(np.asarray(fp_legacy.signs),
+                                  np.asarray(fp_native.signs))
+    assert float(err_legacy) == float(err_native)
 
 
 def test_fragment_size_not_dividing_default_bk():

@@ -135,11 +135,34 @@ def test_eic_bounds_and_monotonicity(seed, m):
 @settings(**SET)
 def test_forms_linear_roundtrip_error_bounded(seed):
     """FormsLinear conversion error is bounded by quantization resolution."""
-    from repro.core import forms_layer as FL
+    from repro import forms
+    from repro.forms import FormsSpec
     w = jax.random.normal(jax.random.PRNGKey(seed), (32, 8))
-    params, err = FL.from_dense(w)
+    params, err = forms.from_dense(w, FormsSpec(m=8))
     # untrained gaussian weights: polarization removes the minority-sign mass
     # (~55% rel-L2 worst case); ADMM-trained weights land near 0 (test_system)
     assert float(err) < 0.75
-    dense = FL.to_dense(params)
+    dense = forms.to_dense(params)
     assert dense.shape == w.shape
+
+
+@given(seed=st.integers(0, 2**16),
+       input_bits=st.sampled_from([4, 8, 12, 16]))
+@settings(**SET)
+def test_effective_bits_closed_form_matches_loop(seed, input_bits):
+    """The closed-form (smear + popcount) effective_bits reproduces the
+    per-bit loop semantics, including values with set bits at or above
+    ``input_bits`` (which the loop ignores) and negative int32 codes
+    (two's-complement bit patterns)."""
+    codes = jax.random.randint(jax.random.PRNGKey(seed), (4, 64),
+                               -(2 ** 20), 2 ** 20)
+
+    def loop_reference(c, bits):
+        c = np.asarray(c, np.int32)
+        nbits = np.zeros_like(c)
+        for b in range(bits):
+            nbits = np.where((c >> b) & 1 > 0, b + 1, nbits)
+        return nbits
+
+    got = np.asarray(Z.effective_bits(codes, input_bits))
+    np.testing.assert_array_equal(got, loop_reference(codes, input_bits))

@@ -7,8 +7,9 @@ import numpy as np
 import pytest
 
 from repro.configs import get_reduced
+from repro.forms import FormsSpec, compress_tree, decompress_tree
 from repro.models.registry import build
-from repro.serving.engine import Request, ServingEngine, forms_compress_params
+from repro.serving.engine import Request, ServingEngine
 
 
 def _model():
@@ -45,15 +46,17 @@ def test_greedy_decode_deterministic():
 def test_forms_compression_small_weight_error():
     m = _model()
     params = m.init(jax.random.PRNGKey(0))
-    comp, errors = forms_compress_params(params, fragment=8, bits=8)
+    comp, report = compress_tree(params, FormsSpec(m=8, bits=8))
+    errors = report.errors
     assert errors, "no layers compressed?"
     # untrained weights: polarization costs ~55% rel-L2 (ADMM training is what
     # makes it near-free; see test_system for the trained-path assertion)
     assert all(e < 0.8 for e in errors.values()), errors
-    # matmul weights changed, norms untouched
-    assert not np.allclose(np.asarray(comp["blocks"]["attn"]["wq"]),
+    # matmul weights changed (float projection differs), norms untouched
+    dec = decompress_tree(comp)
+    assert not np.allclose(np.asarray(dec["blocks"]["attn"]["wq"]),
                            np.asarray(params["blocks"]["attn"]["wq"]))
-    np.testing.assert_array_equal(np.asarray(comp["final_norm"]),
+    np.testing.assert_array_equal(np.asarray(dec["final_norm"]),
                                   np.asarray(params["final_norm"]))
 
 
@@ -61,8 +64,9 @@ def test_forms_weights_are_polarized():
     from repro.core import polarization as P
     m = _model()
     params = m.init(jax.random.PRNGKey(0))
-    comp, _ = forms_compress_params(params, fragment=8, bits=8)
-    w = comp["blocks"]["mlp"]["gate"][0]  # one scanned layer's matrix
+    comp, _ = compress_tree(params, FormsSpec(m=8, bits=8))
+    dec = decompress_tree(comp)
+    w = dec["blocks"]["mlp"]["gate"][0]  # one scanned layer's matrix
     from repro.core.fragments import pad_rows
     assert bool(P.is_polarized(pad_rows(w, 8), 8))
 

@@ -1,0 +1,267 @@
+"""Paged KV-cache serving: token parity vs the dense engine, free-page
+admission, page reuse, prefix sharing, and the host-side bookkeeping."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models.registry import build
+from repro.serving import kv_cache as KV
+from repro.serving.engine import Request, ServingEngine
+
+
+def _tiny(arch="yi-9b", **extra):
+    base = dict(num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
+                head_dim=16, d_ff=64, vocab_size=64)
+    if arch != "yi-9b":
+        base = {}
+    return build(dataclasses.replace(get_reduced(arch), dtype="float32",
+                                     **base, **extra))
+
+
+def _reqs(n=4, new=5):
+    return [Request(uid=i, prompt=np.array([1 + i, 2, 3]), max_new_tokens=new)
+            for i in range(n)]
+
+
+def _tokens(results):
+    return {r.uid: r.tokens for r in results}
+
+
+# ---------------------------------------------------------------------------
+# host-side bookkeeping units
+# ---------------------------------------------------------------------------
+
+
+def test_page_allocator_refcounts_and_reuse():
+    a = KV.PageAllocator(5)          # 4 usable + scratch
+    assert a.capacity == 4
+    p1 = a.alloc(2)
+    p2 = a.alloc(2)
+    assert a.alloc(1) is None        # exhausted
+    a.share(p1)                      # second holder on p1
+    assert a.release(p1) == []       # still referenced
+    freed = a.release(p1)
+    assert sorted(freed) == sorted(p1)
+    p3 = a.alloc(2)                  # freed pages come back
+    assert set(p3) == set(p1)
+    assert a.release(p2) and a.free_pages == 2
+
+
+def test_page_allocator_rejects_double_release_and_dead_share():
+    a = KV.PageAllocator(4)
+    pages = a.alloc(1)
+    a.release(pages)
+    with pytest.raises(ValueError):
+        a.release(pages)
+    with pytest.raises(ValueError):
+        a.share(pages)
+
+
+def test_prefix_cache_full_page_matching_and_eviction():
+    pc = KV.PrefixCache(page_size=4)
+    prompt = np.arange(10, dtype=np.int32)
+    pc.register(prompt, [7, 8, 9])       # 2 full pages -> entries for 1 and 2
+    assert pc.match(prompt) == [7, 8]
+    assert pc.match(prompt[:6]) == [7]   # shorter prompt, 1 full page
+    assert pc.match(prompt[:3]) == []    # below one page: nothing to share
+    other = np.arange(100, 110, dtype=np.int32)
+    assert pc.match(other) == []
+    pc.evict([8])
+    assert pc.match(prompt) == [7]       # 2-page entry died with page 8
+
+
+def test_gather_commit_roundtrip():
+    """commit_pages -> gather_views -> commit_token agree with a dense
+    layout under an arbitrary (non-contiguous) block table."""
+    cache = KV.PagedKVCache(
+        pool={"k": jnp.zeros((2, 5, 4, 3), jnp.float32)}, dense={},
+        page_size=4)
+    rows = jnp.arange(2 * 1 * 6 * 3, dtype=jnp.float32).reshape(2, 1, 6, 3)
+    pages = jnp.array([3, 1], jnp.int32)          # out of order on purpose
+    cache = KV.commit_pages(cache, {"k": rows}, pages)
+    table = jnp.array([[3, 1]], jnp.int32)
+    view = KV.gather_views(cache, table)["k"]     # (2, 1, 8, 3)
+    np.testing.assert_array_equal(np.asarray(view[:, :, :6]),
+                                  np.asarray(rows))
+    tok = jnp.full((2, 1, 3), -1.0)
+    cache = KV.commit_token(cache, {"k": tok}, table,
+                            jnp.array([6], jnp.int32))
+    view = KV.gather_views(cache, table)["k"]
+    np.testing.assert_array_equal(np.asarray(view[:, 0, 6]),
+                                  np.asarray(tok[:, 0]))
+    # positions past the table land in scratch, not on a live page
+    before = np.asarray(cache.pool["k"])
+    cache = KV.commit_token(cache, {"k": tok}, table,
+                            jnp.array([8], jnp.int32))
+    after = np.asarray(cache.pool["k"])
+    np.testing.assert_array_equal(after[:, 1:], before[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# engine: parity + admission
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,extra", [
+    ("yi-9b", {}),
+    ("olmoe-1b-7b", {"capacity_factor": 64.0}),
+    ("deepseek-v3-671b", {}),
+    ("whisper-small", {}),
+    ("xlstm-350m", {}),
+    ("zamba2-2.7b", {}),
+])
+def test_paged_greedy_token_identical_to_dense(arch, extra):
+    """Greedy decode on the paged engine reproduces the dense engine token
+    for token on every family; recurrent families (O(1) state) fall back to
+    the dense slot cache."""
+    m = _tiny(arch, **extra)
+    params = m.init(jax.random.PRNGKey(0))
+    dense = ServingEngine(m, params, max_len=32, batch_slots=2)
+    want = _tokens(dense.run(_reqs(3, new=4)))
+    paged = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8)
+    got = _tokens(paged.run(_reqs(3, new=4)))
+    assert got == want
+    assert paged.paged == m.supports_paged
+    assert paged.paged == (m.config.family not in ("xlstm", "zamba"))
+
+
+def test_paged_admits_2x_concurrency_at_same_hbm_budget():
+    """At the same cache-HBM budget the paged engine serves >= 2x the
+    concurrent requests of the dense engine: dense pays max_len rows per
+    slot, paged pays only each request's actual footprint."""
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    dense = ServingEngine(m, params, max_len=32, batch_slots=2)
+    want = _tokens(dense.run(_reqs(4)))
+    # same budget: dense holds 2 slots x 32 rows = 64 rows per leaf; the
+    # pool holds 8 pages x 8 rows = 64 rows (incl. scratch)
+    paged = ServingEngine(m, params, max_len=32, batch_slots=4, page_size=8,
+                          num_pages=8)
+    got = _tokens(paged.run(_reqs(4)))
+    assert got == want
+    assert paged.cache_bytes() <= dense.cache_bytes()
+    assert dense.scheduler.max_concurrent == 2
+    assert paged.scheduler.max_concurrent >= 2 * dense.scheduler.max_concurrent
+
+
+def test_paged_admission_blocks_on_page_budget_not_slots():
+    """With free slots but a page pool sized for two short requests, the
+    scheduler keeps the third queued until pages free up — and every
+    request still completes with dense-identical tokens."""
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    dense = ServingEngine(m, params, max_len=32, batch_slots=4)
+    want = _tokens(dense.run(_reqs(6)))
+    tight = ServingEngine(m, params, max_len=32, batch_slots=4, page_size=8,
+                          num_pages=5)   # 4 usable pages = one max_len req
+    got = _tokens(tight.run(_reqs(6)))
+    assert got == want
+    # 4 slots were available but at most 4 pages: 1-page requests admit 4-wide
+    assert tight.scheduler.max_concurrent <= 4
+    assert tight.page_allocator.free_pages == tight.page_allocator.capacity
+
+
+def test_readmission_reuses_freed_pages():
+    """Re-admitting into a finished slot draws from the freed pages — the
+    admission log shows a physical page serving two different requests."""
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8,
+                        num_pages=5)
+    results = eng.run(_reqs(6))
+    assert len(results) == 6 and all(len(r.tokens) == 5 for r in results)
+    pages_by_uid = dict(eng.scheduler.admissions)
+    assert len(pages_by_uid) == 6
+    allp = [p for t in pages_by_uid.values() for p in t]
+    assert len(set(allp)) < len(allp), "no page was ever reused"
+    assert eng.page_allocator.free_pages == eng.page_allocator.capacity
+
+
+def test_prompt_of_exactly_max_len_minus_one():
+    """A prompt of max_len-1 tokens fills the slot completely: the request
+    completes with exactly the prefill token on both engines, and its pages
+    are released immediately."""
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    prompt = (np.arange(31) % 64).astype(np.int32)
+    req = lambda: [Request(uid=0, prompt=prompt.copy(), max_new_tokens=8)]
+    dense = ServingEngine(m, params, max_len=32, batch_slots=2)
+    want = _tokens(dense.run(req()))
+    assert len(want[0]) == 1
+    paged = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8)
+    got = _tokens(paged.run(req()))
+    assert got == want
+    assert paged.page_allocator.free_pages == paged.page_allocator.capacity
+
+
+def test_prefix_cache_on_off_decode_identically_and_share_pages():
+    """Two requests sharing a prompt prefix decode token-identically with
+    the prefix cache on and off; with it on, the second request maps the
+    first one's full prefix pages into its block table instead of
+    allocating fresh ones."""
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    prefix = (np.arange(16) % 64).astype(np.int32)
+    reqs = lambda: [
+        Request(uid=0, prompt=np.concatenate([prefix, [7]]).astype(np.int32),
+                max_new_tokens=6),
+        Request(uid=1, prompt=np.concatenate([prefix, [9]]).astype(np.int32),
+                max_new_tokens=6),
+    ]
+    off = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8)
+    want = _tokens(off.run(reqs()))
+    on = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8,
+                       prefix_cache=True)
+    got = _tokens(on.run(reqs()))
+    assert got == want
+    assert on.prefix_cache.hits >= 1
+    ad = dict(on.scheduler.admissions)
+    shared = set(ad[0]) & set(ad[1])
+    assert len(shared) == 2, ad   # both full prefix pages (16 tokens / 8)
+    # fewer distinct pages overall than without sharing
+    assert len(set(ad[0]) | set(ad[1])) < len(ad[0]) + len(ad[1])
+    assert on.page_allocator.free_pages == on.page_allocator.capacity
+
+
+def test_paged_pool_is_donated():
+    """The paged decode consumes its pool buffers in place — no full-pool
+    copy per decode block."""
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8)
+    eng.scheduler.block_tables[0, :1] = eng.page_allocator.alloc(1)
+    eng.prefill_slot(0, np.array([5, 6], np.int32),
+                     pages=eng.scheduler.block_tables[0, :1])
+    old = jax.tree_util.tree_leaves(eng.cache)
+    out1 = eng.decode_chunk(np.zeros(2, np.int32), np.array([2, 0], np.int32),
+                            np.zeros(2, np.float32))
+    assert all(leaf.is_deleted() for leaf in old), \
+        "paged decode copied the pool instead of donating it"
+    out2 = eng.decode_chunk(out1[-1], np.array([6, 4], np.int32),
+                            np.zeros(2, np.float32))
+    assert out1.shape == out2.shape == (eng.decode_block, 2)
+
+
+def test_pool_too_small_for_one_max_len_request_rejected():
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="page pool too small"):
+        ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8,
+                      num_pages=3)
+
+
+def test_paged_temperature_sampling_deterministic_per_seed():
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    outs = []
+    for _ in range(2):
+        eng = ServingEngine(m, params, max_len=32, batch_slots=2,
+                            page_size=8, rng_seed=7)
+        res = eng.run([Request(uid=0, prompt=np.array([5, 6]),
+                               max_new_tokens=6, temperature=0.8)])
+        outs.append(res[0].tokens)
+    assert outs[0] == outs[1]

@@ -45,6 +45,14 @@ def test_twelve_heads_on_sixteen_way_replication_fallback():
     assert "fallback ok" in out
 
 
+def test_paged_serving_on_mesh_parity_and_2x_concurrency():
+    """Paged pool sharded over the data axis: token-identical to the
+    single-device dense engine, pool donation intact, and >= 2x concurrent
+    admissions at the same cache-HBM budget."""
+    out = _run_child("paged")
+    assert "paged ok" in out
+
+
 def test_restore_straight_into_sharded_layout():
     """checkpoint.restore(shardings=...) places compressed leaves onto the
     mesh without a replicated intermediate, and the engine serves from it."""
