@@ -68,6 +68,71 @@ def tiny_serving_cfg():
                                d_ff=128, vocab_size=512)
 
 
+def trained_toy_lm(num_layers: int = 6, steps: int = 120, seed: int = 0
+                   ) -> Dict:
+    """Tiny TRAINED LM for the speculative-serving bench.
+
+    A 6-layer dense transformer trained on a deterministic token-cycle
+    stream (x_{t+1} = perm[x_t]).  Speculation's win depends on the model
+    having redundancy a cheaper draft can exploit — random weights have
+    none (a layer-skipped draft of an untrained net agrees ~0%), so this
+    bench trains for a few seconds first, exactly like the CNN benches
+    train their fixture.  Returns {cfg, model, params, perm, prompt_fn}.
+    """
+    key = f"toylm-{num_layers}-{steps}-{seed}"
+    if key in _CACHE:
+        return _CACHE[key]
+    import dataclasses
+
+    import numpy as np
+
+    from repro.configs import get_reduced
+    from repro.models.registry import build
+    from repro.training.optimizer import sgd_init, sgd_update
+
+    cfg = dataclasses.replace(get_reduced("yi-9b"), num_layers=num_layers,
+                              d_model=64, num_heads=4, num_kv_heads=2,
+                              head_dim=16, d_ff=128, vocab_size=64,
+                              dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    v = cfg.vocab_size
+    perm = np.random.RandomState(seed).permutation(v)
+
+    def batch(i: int, b: int = 32, s: int = 33) -> jnp.ndarray:
+        rng = np.random.RandomState(1000 + i)
+        seq = [rng.randint(0, v, size=(b,))]
+        for _ in range(s - 1):
+            seq.append(perm[seq[-1]])
+        return jnp.asarray(np.stack(seq, 1), jnp.int32)
+
+    def loss_fn(p, toks):
+        lg, _ = model.forward(p, {"tokens": toks})
+        ll = jax.nn.log_softmax(lg[:, :-1].astype(jnp.float32))
+        return -jnp.mean(jnp.take_along_axis(ll, toks[:, 1:][..., None], -1))
+
+    opt = sgd_init(params)
+
+    @jax.jit
+    def step(p, o, toks):
+        _, g = jax.value_and_grad(loss_fn)(p, toks)
+        return sgd_update(p, g, o, lr=0.3)
+
+    for i in range(steps):
+        params, opt = step(params, opt, batch(i))
+
+    def prompt_fn(rng: "np.random.RandomState", n: int = 8) -> "np.ndarray":
+        seq = [rng.randint(0, v)]
+        for _ in range(n - 1):
+            seq.append(int(perm[seq[-1]]))
+        return np.asarray(seq, np.int32)
+
+    out = dict(cfg=cfg, model=model, params=params, perm=perm,
+               prompt_fn=prompt_fn)
+    _CACHE[key] = out
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Trained FORMS CNN (shared across accuracy/eic/fps/variation benches)
 # ---------------------------------------------------------------------------

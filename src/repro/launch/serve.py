@@ -1,5 +1,5 @@
 """Serving launcher: paged KV cache + bulk prefill + donated batched decode
-with optional FORMS compression and mesh sharding.
+with optional FORMS compression, mesh sharding and self-speculative decoding.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --requests 8 --forms --decode-block 8
@@ -7,6 +7,11 @@ with optional FORMS compression and mesh sharding.
   # paged KV cache with prompt-prefix sharing (attention families):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --page-size 16 --prefix-cache
+
+  # self-speculative decoding: a 4-bit draft derived from the served weights
+  # drafts 4 tokens per round, the target verifies them in one forward:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --forms --speculate --draft-bits 4 --draft-k 4 --stats-every 16
 
   # tensor/data-parallel decode on the compressed pytree (8 devices):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
@@ -20,11 +25,18 @@ sets how many tokens the jitted decode loop produces per host sync.
 from a paged KV pool — admission is by free-page budget, so short requests
 only hold the pages they need — and ``--prefix-cache`` shares page-aligned
 prompt prefixes across concurrent requests (DESIGN.md §6d).
-``--mesh data=D,model=M`` runs the engine SPMD over a device mesh (see
-launch/mesh.py): compressed leaves co-shard along N, KV caches shard slots
-(or page pools) over the data axes; ``--fake-devices N`` forces N host
-devices (CPU demo/testing — on real fleets the device count comes from the
-runtime).
+``--speculate`` (paged families) serves with self-speculative decoding
+(DESIGN.md §6e): ``--draft-bits``/``--draft-mode``/``--draft-fragment``
+control the low-bit draft derived from the target's own weights,
+``--draft-layer-step n`` keeps every n-th layer (early-exit drafts for
+trained models), ``--draft-k`` bounds the drafts verified per round, and
+per-slot adaptive K shrinks a slot's draft length when its acceptance
+drops.  ``--stats-every N`` prints a page-pool/acceptance stat line every N
+decode rounds.  ``--mesh data=D,model=M`` runs the engine SPMD over a
+device mesh (see launch/mesh.py): compressed leaves co-shard along N, KV
+caches shard slots (or page pools) over the data axes; ``--fake-devices N``
+forces N host devices (CPU demo/testing — on real fleets the device count
+comes from the runtime).
 """
 from __future__ import annotations
 
@@ -68,6 +80,27 @@ def main() -> None:
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share page-aligned prompt prefixes across "
                          "concurrent requests (paged serving only)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="self-speculative decoding: low-bit draft + "
+                         "one-forward verification (paged families only)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="max draft tokens verified per speculative round")
+    ap.add_argument("--draft-bits", type=int, default=4,
+                    help="draft magnitude bits")
+    ap.add_argument("--draft-mode", default="forms",
+                    choices=("forms", "int"),
+                    help="draft weights: FORMS low-bit compression or the "
+                         "symmetric int serving grid")
+    ap.add_argument("--draft-fragment", type=int, default=None,
+                    help="forms-mode draft fragment size m (default: the "
+                         "target's geometry)")
+    ap.add_argument("--draft-layer-step", type=int, default=1,
+                    help="keep every n-th layer in the draft (early-exit "
+                         "draft; 1 = full depth)")
+    ap.add_argument("--no-adaptive-k", action="store_true",
+                    help="disable per-slot adaptive draft length")
+    ap.add_argument("--stats-every", type=int, default=0, metavar="ROUNDS",
+                    help="print pool/acceptance stats every N decode rounds")
     ap.add_argument("--mesh", default=None, metavar="AXES",
                     help='device mesh as "data=D,model=M" (sharded serving); '
                          "omit for single-device")
@@ -106,7 +139,14 @@ def main() -> None:
                            donate=not args.no_donate, mesh=mesh,
                            page_size=args.page_size or None,
                            num_pages=args.num_pages,
-                           prefix_cache=args.prefix_cache)
+                           prefix_cache=args.prefix_cache,
+                           speculate=args.speculate,
+                           draft_k=args.draft_k, draft_bits=args.draft_bits,
+                           draft_mode=args.draft_mode,
+                           draft_fragment=args.draft_fragment,
+                           draft_layer_step=args.draft_layer_step,
+                           adaptive_k=not args.no_adaptive_k,
+                           stats_every=args.stats_every)
     if engine.compression_report is not None:
         print(f"forms: {engine.compression_report.summary()}")
     if engine.paged:
@@ -117,6 +157,15 @@ def main() -> None:
     elif args.page_size:
         print(f"paged cache: unsupported for family {cfg.family!r} "
               "(O(1) recurrent state) — dense slot cache")
+    if engine.speculative:
+        detail = ("int grid" if args.draft_mode == "int"
+                  else engine.draft_report.summary())
+        print(f"speculate: k={args.draft_k}, {args.draft_bits}-bit "
+              f"{args.draft_mode} draft, layer_step={args.draft_layer_step} "
+              f"({detail})")
+    elif args.speculate:
+        print(f"speculate: unsupported for family {cfg.family!r} or dense "
+              "cache — plain decode")
     if mesh is not None:
         n_sharded = sum(
             1 for s in jax.tree_util.tree_leaves(engine.param_shardings)
@@ -142,6 +191,20 @@ def main() -> None:
           f"({toks/dt:.1f} tok/s, forms={args.forms}, "
           f"block={args.decode_block}); "
           f"mean prefill {pf:.1f}ms, mean decode share {dm:.1f}ms")
+    stats = engine.stats()
+    parts = [f"rounds {stats['rounds']}",
+             f"max_concurrent {stats['max_concurrent']}"]
+    if "pages" in stats:
+        pg = stats["pages"]
+        parts.append(f"pages hw {pg['high_water']}/{pg['capacity']} "
+                     f"(shared {pg['shared']})")
+    if "prefix_hits" in stats:
+        parts.append(f"prefix_hits {stats['prefix_hits']}")
+    if "speculate" in stats:
+        sp = stats["speculate"]
+        parts.append(f"acceptance {sp['acceptance']:.2f} "
+                     f"tok/round {sp['tokens_per_round']:.2f}")
+    print("stats: " + ", ".join(parts))
 
 
 if __name__ == "__main__":

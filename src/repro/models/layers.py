@@ -234,40 +234,68 @@ def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(b, s, h, hdv)
 
 
+def position_grid(pos: jax.Array, b: int, t: int) -> jax.Array:
+    """Normalize decode positions to a (B, T) int32 grid.
+
+    Accepts a scalar, a (B,) per-row vector (every query in a row shares it —
+    the single-token decode case), or an explicit (B, T) grid (the bounded
+    multi-token decode of speculative verification, where query ``t`` of row
+    ``b`` lives at ``pos[b] + t``).
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim <= 1:
+        pos = jnp.reshape(pos, (-1, 1))
+    return jnp.broadcast_to(pos, (b, t))
+
+
+def position_span(pos: jax.Array, t: int) -> jax.Array:
+    """(B,) first-token positions -> the (B, T) contiguous decode grid
+    (token t of row b at ``pos[b] + t``) — the grid every family's
+    multi-token decode and cache commit share."""
+    pos = jnp.asarray(pos, jnp.int32)
+    return pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+
+
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      pos: jax.Array, window: Optional[int] = None) -> jax.Array:
-    """Single-token GQA against a cache.
+    """Bounded-token GQA against a cache.
 
-    q: (B, 1, H, hd); caches: (B, Smax, KV, hd); pos: scalar int32 or (B,)
-    per-row positions (the index of each row's current token).  Each row
-    attends to its own cache positions <= pos — independent slot timelines.
+    q: (B, T, H, hd) — T is 1 on the steady-state decode path and K+1 when a
+    speculative verify scores a whole draft in one call; caches:
+    (B, Smax, KV, hd); pos: scalar, (B,) per-row positions, or a (B, T)
+    position grid (see :func:`position_grid`).  Query ``(b, t)`` attends to
+    its own cache positions <= pos[b, t] — independent slot timelines, and
+    causality between the T new tokens falls out of the same mask (token t
+    sits at position pos[b, t] in the transient view written below).
 
     The cache operands may be persistent dense leaves OR the per-slot
     block-table gathers of a paged pool (serving/kv_cache.gather_views):
     both present the same logically-contiguous (B, Smax, KV, hd) layout,
     and the ``kpos <= pos`` per-slot length mask is what keeps stale rows
-    (dense) and scratch-page rows (paged) out of the softmax.
+    (dense), scratch-page rows (paged) and rejected-draft rows (speculative
+    rollback) out of the softmax.
     """
-    b, _, h, hd = q.shape
+    b, t, h, hd = q.shape
     smax, kv = k_cache.shape[1], k_cache.shape[2]
     g = h // kv
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
-    qr = q.reshape(b, kv, g, hd)
+    qr = q.reshape(b, t, kv, g, hd)
+    pos2 = position_grid(pos, b, t)
     # keep the cache operands in their storage dtype and accumulate in f32:
     # .astype(f32) on the cache materializes a full-cache f32 copy inside the
     # decode loop (2x HBM traffic + 2x transient memory)
-    scores = jnp.einsum("bkgh,bskh->bkgs", qr.astype(k_cache.dtype), k_cache,
+    scores = jnp.einsum("btkgh,bskh->bkgts", qr.astype(k_cache.dtype), k_cache,
                         preferred_element_type=jnp.float32) * scale
     kpos = jnp.arange(smax, dtype=jnp.int32)
-    pos2 = jnp.reshape(pos, (-1, 1))                   # (B, 1) or (1, 1)
-    mask = kpos[None, :] <= pos2
+    mask = kpos[None, None, :] <= pos2[:, :, None]          # (B, T, S)
     if window is not None:
-        mask = jnp.logical_and(mask, kpos[None, :] > pos2 - window)
-    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+        mask = jnp.logical_and(mask,
+                               kpos[None, None, :] > pos2[:, :, None] - window)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bkgs,bskh->bkgh", probs.astype(v_cache.dtype), v_cache,
+    out = jnp.einsum("bkgts,bskh->btkgh", probs.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
-    return out.reshape(b, 1, h, hd).astype(v_cache.dtype)
+    return out.reshape(b, t, h, hd).astype(v_cache.dtype)
 
 
 def attention_block(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
@@ -286,11 +314,12 @@ def attention_block(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
     (B, S, KV, hd) so bulk prefill can commit them to a cache in one write.
     Decode: ``cache=(k, v)`` of shape (B, Smax, KV, hd) — dense cache
     leaves or paged block-table gathers, see :func:`decode_attention` —
-    x is (B, 1, d), ``cache_pos`` scalar or (B,) per-row positions — writes
-    the new K/V at each row's cache_pos and attends.  The write targets a
-    local TRANSIENT view either way; the caller commits the returned
-    new-token K/V to the persistent cache (slot scatter or page scatter)
-    after the layer scan.
+    x is (B, T, d) (T = 1 steady state, K+1 for a speculative verify),
+    ``cache_pos`` scalar, (B,) per-row positions, or a (B, T) position
+    grid — writes the T new K/V rows at their positions and attends.  The
+    write targets a local TRANSIENT view either way; the caller commits
+    the returned new-token K/V to the persistent cache (slot scatter or
+    page scatter) after the layer scan.
     """
     b, s, d = x.shape
     # Megatron-SP: gather the seq-sharded residual before the projections;
@@ -318,17 +347,17 @@ def attention_block(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
                                positions=positions, causal=causal)
         new_cache = (k, v) if return_kv else None
     else:
-        # write the token into a local (transient) view for attention, but
+        # write the tokens into a local (transient) view for attention, but
         # return only the new-token K/V — the caller commits them with ONE
         # token-column write after the layer scan, keeping the persistent
         # cache update in-place instead of restacking full caches (scan ys).
         k_cache, v_cache = cache
         k_t, v_t = k.astype(k_cache.dtype), v.astype(v_cache.dtype)
-        cache_pos = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))
-        bidx = jnp.arange(b, dtype=jnp.int32)
-        k_cache = k_cache.at[bidx, cache_pos].set(k_t[:, 0])
-        v_cache = v_cache.at[bidx, cache_pos].set(v_t[:, 0])
-        out = decode_attention(q, k_cache, v_cache, cache_pos, window=window)
+        posgrid = position_grid(cache_pos, b, s)
+        bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+        k_cache = k_cache.at[bidx, posgrid].set(k_t)
+        v_cache = v_cache.at[bidx, posgrid].set(v_t)
+        out = decode_attention(q, k_cache, v_cache, posgrid, window=window)
         new_cache = (k_t, v_t)
     out = out.reshape(b, s, n_heads * hd)
     out = linear(p, "wo", out, dtype)

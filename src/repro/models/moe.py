@@ -189,52 +189,52 @@ def mla_decode(p: Params, x, cfg: ModelConfig, cache: Dict[str, jax.Array],
                pos, dtype) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Absorbed-form decode: attention in the compressed latent space.
 
-    cache: {"c_kv": (B, Smax, r), "k_rope": (B, Smax, qk_rope)}; pos is a
-    (B,) vector of per-row positions (scalar callers are normalized by
-    ``decode_step``).
+    cache: {"c_kv": (B, Smax, r), "k_rope": (B, Smax, qk_rope)}; x is
+    (B, T, d) (T = 1 steady state, K+1 for a speculative verify); pos is a
+    (B,) vector of per-row first-token positions or an explicit (B, T)
+    position grid (scalar callers are normalized by ``decode_step``).
     """
     m: MLAConfig = cfg.mla
-    b, s, _ = x.shape  # s == 1
+    b, s, _ = x.shape
     h = cfg.num_heads
     qk_rope, qk_nope, dv, r = (m.qk_rope_head_dim, m.qk_nope_head_dim,
                                m.v_head_dim, m.kv_lora_rank)
-    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
-    positions = pos[:, None]                              # (B, 1)
+    positions = L.position_grid(pos, b, s)                # (B, T)
 
     cq = L.rmsnorm(L.linear(p, "q_down", x, dtype), p["q_norm"], cfg.norm_eps)
-    q = L.linear(p, "q_up", cq, dtype).reshape(b, h, qk_nope + qk_rope)
+    q = L.linear(p, "q_up", cq, dtype).reshape(b, s, h, qk_nope + qk_rope)
     q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
-    # apply_rope wants (B, S, H, hd): lift the single decode position to S=1
-    q_rope = L.apply_rope(q_rope[:, None], positions, cfg.rope_theta)[:, 0]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
     kv = L.linear(p, "kv_down", x, dtype)
     c_new = L.rmsnorm(kv[..., :r], p["kv_norm"], cfg.norm_eps)
     k_rope_new = L.apply_rope(kv[..., r:], positions, cfg.rope_theta)
 
     # transient updated views for attention; only the new-token latents are
-    # returned (the caller commits one token column after the layer scan)
-    bidx = jnp.arange(b, dtype=jnp.int32)
-    c_cache = cache["c_kv"].at[bidx, pos].set(
-        c_new[:, 0].astype(cache["c_kv"].dtype))
-    r_cache = cache["k_rope"].at[bidx, pos].set(
-        k_rope_new[:, 0].astype(cache["k_rope"].dtype))
+    # returned (the caller commits the token columns after the layer scan)
+    bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+    c_cache = cache["c_kv"].at[bidx, positions].set(
+        c_new.astype(cache["c_kv"].dtype))
+    r_cache = cache["k_rope"].at[bidx, positions].set(
+        k_rope_new.astype(cache["k_rope"].dtype))
 
-    # absorb: q_lat[b,h,r] = q_nope @ W_uk(h)^T
+    # absorb: q_lat[b,t,h,r] = q_nope @ W_uk(h)^T
     kv_up = L.wload(p, "kv_up", dtype)
     w_uk = kv_up.reshape(r, h, qk_nope + dv)[..., :qk_nope]
     w_uv = kv_up.reshape(r, h, qk_nope + dv)[..., qk_nope:]
-    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)
+    q_lat = jnp.einsum("bthn,rhn->bthr", q_nope, w_uk)
     scale = 1.0 / jnp.sqrt(qk_nope + qk_rope).astype(jnp.float32)
-    scores = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(c_cache.dtype), c_cache,
-                         preferred_element_type=jnp.float32)
-              + jnp.einsum("bhp,bsp->bhs", q_rope.astype(r_cache.dtype),
+    scores = (jnp.einsum("bthr,bsr->bhts", q_lat.astype(c_cache.dtype),
+                         c_cache, preferred_element_type=jnp.float32)
+              + jnp.einsum("bthp,bsp->bhts", q_rope.astype(r_cache.dtype),
                            r_cache, preferred_element_type=jnp.float32)) * scale
     kpos = jnp.arange(c_cache.shape[1], dtype=jnp.int32)
-    scores = jnp.where(kpos[None, None, :] <= pos[:, None, None], scores, -1e30)
+    mask = kpos[None, None, :] <= positions[:, :, None]    # (B, T, S)
+    scores = jnp.where(mask[:, None, :, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
-    o_lat = jnp.einsum("bhs,bsr->bhr", probs.astype(c_cache.dtype), c_cache,
+    o_lat = jnp.einsum("bhts,bsr->bthr", probs.astype(c_cache.dtype), c_cache,
                        preferred_element_type=jnp.float32).astype(dtype)
-    o = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv)
-    out = L.linear(p, "wo", o.reshape(b, 1, h * dv), dtype)
+    o = jnp.einsum("bthr,rhv->bthv", o_lat, w_uv)
+    out = L.linear(p, "wo", o.reshape(b, s, h * dv), dtype)
     return out, {"c_kv": c_new.astype(cache["c_kv"].dtype),
                  "k_rope": k_rope_new.astype(cache["k_rope"].dtype)}
 
@@ -433,16 +433,24 @@ def prefill_paged(cfg: ModelConfig, params: Params, tokens: jax.Array,
 def _decode_core(cfg: ModelConfig, params: Params, tokens: jax.Array,
                  views: Dict[str, jax.Array], pos: jax.Array):
     """Shared decode compute against (L, B, S, ...) cache views (persistent
-    dense leaves or block-table gathers).  Returns (logits, per-leaf
-    new-token rows (L, B, 1, ...))."""
+    dense leaves or block-table gathers).  tokens: (B, T) with token t of
+    row b at position ``pos[b] + t``.  Returns (logits (B, T, V), per-leaf
+    new-token rows (L, B, T, ...)).
+
+    Note multi-token verification (T > 1) routes B*T tokens through the
+    capacity-based expert dispatch per step instead of B — like prefill vs
+    decode, capacity drops can differ between T=1 and T>1 at tight
+    ``capacity_factor`` (inherent to dropping MoE)."""
     dtype = jnp.dtype(cfg.dtype)
+    b, t = tokens.shape
     x = L.embed_lookup(params["embed"], tokens, dtype)
-    positions = pos[:, None]
+    positions = L.position_span(pos, t)
 
     def body(x, xs):
         bp, layer_cache = xs
         out, _aux, new_cache = _block_apply(cfg, bp, x, positions, layer_cache,
-                                            pos, dtype, L.DEFAULT_Q_CHUNK)
+                                            positions, dtype,
+                                            L.DEFAULT_Q_CHUNK)
         return out, new_cache
 
     x, tok_cache = jax.lax.scan(body, x, (params["blocks"], views))
@@ -454,17 +462,20 @@ def _decode_core(cfg: ModelConfig, params: Params, tokens: jax.Array,
 def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                 cache: Dict[str, jax.Array], pos: jax.Array
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """tokens: (B, 1); pos: scalar int32 or (B,) per-slot positions."""
-    b = tokens.shape[0]
+    """tokens: (B, T) (T = 1 steady state); pos: scalar int32 or (B,)
+    per-slot positions of the first token."""
+    b, t = tokens.shape
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     logits, tok_cache = _decode_core(cfg, params, tokens, cache, pos)
-    # commit the new-token column into every cache leaf: one per-row scatter
-    # each (in-place when the cache is donated into the jitted step)
-    bidx = jnp.arange(b, dtype=jnp.int32)
+    # commit the new-token columns into every cache leaf: one per-row scatter
+    # each (in-place when the cache is donated into the jitted step; rows
+    # past max_len are dropped, not clamped)
+    posgrid = L.position_span(pos, t)
+    bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
     new_cache = {}
     for name, full in cache.items():
-        tok = tok_cache[name]                   # (L, B, 1, ...)
-        new_cache[name] = full.at[:, bidx, pos].set(tok[:, :, 0])
+        tok = tok_cache[name]                   # (L, B, T, ...)
+        new_cache[name] = full.at[:, bidx, posgrid].set(tok, mode="drop")
     return logits, new_cache
 
 
@@ -478,7 +489,5 @@ def decode_paged(cfg: ModelConfig, params: Params, tokens: jax.Array,
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     views = KV.gather_views(cache, block_tables)
     logits, tok_cache = _decode_core(cfg, params, tokens, views, pos)
-    cache = KV.commit_token(cache,
-                            {n: t[:, :, 0] for n, t in tok_cache.items()},
-                            block_tables, pos)
+    cache = KV.commit_tokens(cache, tok_cache, block_tables, pos)
     return logits, cache

@@ -25,6 +25,11 @@ class Model:
     init: Callable[[jax.Array], Params]
     forward: Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]
     init_cache: Callable[..., Any]
+    # decode_step(params, tokens (B, T), cache, pos) -> (logits (B, T, V),
+    # cache).  T is 1 on the steady-state serving path; the bounded
+    # multi-token form (token t of row b at position pos[b] + t) is the
+    # speculative-verification step (serving/speculate.py) — all K+1 draft
+    # positions scored in ONE forward.
     decode_step: Callable[..., Tuple[jax.Array, Any]]
     # prefill(params, tokens (1, S), cache, slot, length) -> (logits (1, V)
     # at position length-1, cache with slot's rows written in one shot).
@@ -45,7 +50,9 @@ class Model:
     init_paged_cache: Optional[Callable[..., Any]] = None
     # prefill_paged(params, tokens (1, S), cache, pages, slot, length)
     prefill_paged: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
-    # decode_paged(params, tokens (B, 1), cache, pos (B,), block_tables)
+    # decode_paged(params, tokens (B, T), cache, pos (B,), block_tables) —
+    # T = 1 steady state, K+1 for a speculative verify (multi-token rows
+    # commit via kv_cache.commit_tokens; past-table positions -> scratch)
     decode_paged: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
 
     @property

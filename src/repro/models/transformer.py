@@ -182,18 +182,20 @@ def _decode_core(cfg: ModelConfig, params: Params, tokens: jax.Array,
                  k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array):
     """Shared decode compute against ``(L, B, S, kv, hd)`` cache views
     (persistent dense leaves or block-table gathers — the per-slot
-    ``kpos <= pos`` masks are identical).  Returns (logits, new-token K/V
-    of shape (L, B, 1, kv, hd)); committing them is the caller's job."""
+    ``kpos <= pos`` masks are identical).  tokens: (B, T) with token t of
+    row b living at position ``pos[b] + t`` (T = 1 steady state, K+1 for a
+    speculative verify).  Returns (logits (B, T, V), new-token K/V of shape
+    (L, B, T, kv, hd)); committing them is the caller's job."""
     dtype = jnp.dtype(cfg.dtype)
-    b = tokens.shape[0]
+    b, t = tokens.shape
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     x = L.embed_lookup(params["embed"], tokens, dtype)
-    positions = pos[:, None]
+    positions = L.position_span(pos, t)
 
     def body(x, xs):
         bp, kc, vc = xs
-        out, new_cache = _block_apply(cfg, bp, x, positions, (kc, vc), pos,
-                                      dtype, L.DEFAULT_Q_CHUNK)
+        out, new_cache = _block_apply(cfg, bp, x, positions, (kc, vc),
+                                      positions, dtype, L.DEFAULT_Q_CHUNK)
         return out, new_cache
 
     x, (k_tok, v_tok) = jax.lax.scan(body, x, (params["blocks"], k_cache,
@@ -206,17 +208,20 @@ def _decode_core(cfg: ModelConfig, params: Params, tokens: jax.Array,
 def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                 cache: Dict[str, jax.Array], pos: jax.Array,
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 or (B,)
-    per-slot positions (each batch row lives on its own cache timeline)."""
-    b = tokens.shape[0]
+    """One decode step.  tokens: (B, T) int32 (T = 1 on the steady-state
+    path); pos: scalar int32 or (B,) per-slot positions of the FIRST token
+    (each batch row lives on its own cache timeline; token t commits at
+    ``pos + t``, rows past max_len are dropped, not clamped)."""
+    b, t = tokens.shape
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     logits, k_tok, v_tok = _decode_core(cfg, params, tokens, cache["k"],
                                         cache["v"], pos)
     # per-row token-column write into the persistent caches (in-place when
     # the cache is donated into the jitted step)
-    bidx = jnp.arange(b, dtype=jnp.int32)
-    k_new = cache["k"].at[:, bidx, pos].set(k_tok[:, :, 0])
-    v_new = cache["v"].at[:, bidx, pos].set(v_tok[:, :, 0])
+    posgrid = L.position_span(pos, t)
+    bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+    k_new = cache["k"].at[:, bidx, posgrid].set(k_tok, mode="drop")
+    v_new = cache["v"].at[:, bidx, posgrid].set(v_tok, mode="drop")
     return logits, {"k": k_new, "v": v_new}
 
 
@@ -225,13 +230,13 @@ def decode_paged(cfg: ModelConfig, params: Params, tokens: jax.Array,
                  block_tables: jax.Array
                  ) -> Tuple[jax.Array, KV.PagedKVCache]:
     """Paged decode step: gather per-slot K/V views via the block tables,
-    attend exactly like :func:`decode_step`, commit the new token into its
-    page."""
+    attend exactly like :func:`decode_step`, commit the new tokens into
+    their pages (positions past the block table land in scratch)."""
     b = tokens.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     views = KV.gather_views(cache, block_tables)
     logits, k_tok, v_tok = _decode_core(cfg, params, tokens, views["k"],
                                         views["v"], pos)
-    cache = KV.commit_token(cache, {"k": k_tok[:, :, 0], "v": v_tok[:, :, 0]},
-                            block_tables, pos)
+    cache = KV.commit_tokens(cache, {"k": k_tok, "v": v_tok},
+                             block_tables, pos)
     return logits, cache

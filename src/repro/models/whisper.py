@@ -240,17 +240,20 @@ def prefill_paged(cfg: ModelConfig, params: Params, tokens: jax.Array,
 def _decode_core(cfg: ModelConfig, params: Params, tokens: jax.Array,
                  k_cache: jax.Array, v_cache: jax.Array, enc_out: jax.Array,
                  pos: jax.Array):
-    """Shared decode compute against (L, B, S, KV, hd) self-attn views."""
+    """Shared decode compute against (L, B, S, KV, hd) self-attn views.
+    tokens: (B, T) with token t of row b at position ``pos[b] + t``."""
     dtype = jnp.dtype(cfg.dtype)
+    b, t = tokens.shape
     x = L.embed_lookup(params["embed"], tokens, dtype)
-    positions = pos[:, None]
-    x = x + sinusoidal_embed(pos, cfg.d_model).astype(dtype)[:, None, :]
+    positions = L.position_span(pos, t)
+    x = x + sinusoidal_embed(positions.reshape(-1), cfg.d_model).reshape(
+        b, t, cfg.d_model).astype(dtype)
     enc_out = enc_out.astype(dtype)
 
     def body(x, xs):
         bp, kc, vc = xs
         out, new_kv = _dec_block_apply(cfg, bp, x, enc_out, positions,
-                                       (kc, vc), pos, dtype, 512)
+                                       (kc, vc), positions, dtype, 512)
         return out, new_kv
 
     x, (k_tok, v_tok) = jax.lax.scan(body, x, (params["dec_blocks"],
@@ -263,14 +266,16 @@ def _decode_core(cfg: ModelConfig, params: Params, tokens: jax.Array,
 def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                 cache: Dict[str, jax.Array], pos: jax.Array
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """tokens: (B, 1); pos: scalar int32 or (B,) per-slot positions."""
-    b = tokens.shape[0]
+    """tokens: (B, T) (T = 1 steady state); pos: scalar int32 or (B,)
+    per-slot positions of the first token."""
+    b, t = tokens.shape
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     logits, k_tok, v_tok = _decode_core(cfg, params, tokens, cache["k"],
                                         cache["v"], cache["enc_out"], pos)
-    bidx = jnp.arange(b, dtype=jnp.int32)
-    k_new = cache["k"].at[:, bidx, pos].set(k_tok[:, :, 0])
-    v_new = cache["v"].at[:, bidx, pos].set(v_tok[:, :, 0])
+    posgrid = L.position_span(pos, t)
+    bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+    k_new = cache["k"].at[:, bidx, posgrid].set(k_tok, mode="drop")
+    v_new = cache["v"].at[:, bidx, posgrid].set(v_tok, mode="drop")
     return logits, {"k": k_new, "v": v_new, "enc_out": cache["enc_out"]}
 
 
@@ -286,6 +291,6 @@ def decode_paged(cfg: ModelConfig, params: Params, tokens: jax.Array,
     logits, k_tok, v_tok = _decode_core(cfg, params, tokens, views["k"],
                                         views["v"], cache.dense["enc_out"],
                                         pos)
-    cache = KV.commit_token(cache, {"k": k_tok[:, :, 0], "v": v_tok[:, :, 0]},
-                            block_tables, pos)
+    cache = KV.commit_tokens(cache, {"k": k_tok, "v": v_tok},
+                             block_tables, pos)
     return logits, cache

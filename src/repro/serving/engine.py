@@ -42,6 +42,13 @@ With ``forms=True``/``spec=...`` the engine compresses the weights once
 (``repro.forms.compress_tree``) and decodes directly on the compressed
 pytree: uint8 magnitudes + int8 fragment signs through the polarized-matmul
 kernel, no float fake-quant copy.
+
+With ``speculate=True`` (paged families) the scheduler's decode round is
+self-speculative (serving/speculate.py, DESIGN.md §6e): a low-bit draft
+derived from the target's own weights drafts up to ``draft_k`` tokens and
+the target verifies them all in ONE bounded multi-token forward, so a round
+yields a VARIABLE 1..draft_k+1 tokens per slot — the per-slot timelines
+advance by the runner-reported counts, never by an assumed fixed block.
 """
 from __future__ import annotations
 
@@ -85,10 +92,12 @@ class ModelRunner:
     """The jitted side of the engine: params + compiled prefill/decode.
 
     Owns nothing about admission or page bookkeeping — it executes one
-    bulk prefill or one ``decode_block``-token chunk on whatever cache
-    (dense slot cache or :class:`~repro.serving.kv_cache.PagedKVCache`)
-    it was built with, keeping donation, on-device sampling, the inner
-    decode scan and the mesh path.
+    bulk prefill or one decode ROUND (here a ``decode_block``-token chunk;
+    on the speculative subclass a draft+verify round with variable yield)
+    on whatever cache (dense slot cache or
+    :class:`~repro.serving.kv_cache.PagedKVCache`) it was built with,
+    keeping donation, on-device sampling, the inner decode scan and the
+    mesh path.
     """
 
     def __init__(self, model: Model, params: Any, cache: Any, *,
@@ -209,6 +218,20 @@ class ModelRunner:
             self._prefill_fns[bucket] = fn
         return fn
 
+    def padded_prompt(self, prompt: np.ndarray) -> Tuple[np.ndarray, int]:
+        """Normalize + bucket-pad a prompt to its (1, bucket) token buffer;
+        returns ``(toks, n)``.  The ONE prompt-shaping rule — the
+        speculative runner reuses it so the draft prefill always sees
+        exactly the buffer the target prefill consumed."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        n = int(prompt.shape[0])
+        if not 1 <= n < self.max_len:
+            raise ValueError(
+                f"prompt length {n} must be in [1, max_len={self.max_len})")
+        toks = np.zeros((1, self.bucket_for(n)), np.int32)
+        toks[0, :n] = prompt
+        return toks, n
+
     def prefill_slot(self, slot: int, prompt: np.ndarray,
                      temperature: float = 0.0,
                      pages: Optional[np.ndarray] = None) -> int:
@@ -217,16 +240,9 @@ class ModelRunner:
         next decode write position is ``len(prompt)``.  On a paged cache,
         ``pages`` is the int32 destination-page vector covering the bucket
         (scratch-0 entries skip prefix-shared pages)."""
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
-        n = int(prompt.shape[0])
-        if not 1 <= n < self.max_len:
-            raise ValueError(
-                f"prompt length {n} must be in [1, max_len={self.max_len})")
-        bucket = self.bucket_for(n)
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :n] = prompt
+        toks, n = self.padded_prompt(prompt)
         self._key, sub = jax.random.split(self._key)
-        fn = self._get_prefill(bucket)
+        fn = self._get_prefill(toks.shape[1])
         args = [self.params, jnp.asarray(toks), self.cache]
         if self.paged:
             if pages is None:
@@ -271,6 +287,30 @@ class ModelRunner:
             toks_out, self.cache = self._decode(*args)
         return np.asarray(toks_out)
 
+    def decode_round(self, tokens: np.ndarray, positions: np.ndarray,
+                     temps: np.ndarray,
+                     block_tables: Optional[np.ndarray] = None,
+                     active: Optional[List[bool]] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """One scheduler round: ``(grid, counts)`` where ``grid`` is a
+        (tokens_per_round, slots) token grid and ``counts[s]`` how many of
+        slot ``s``'s rows are valid this round.
+
+        The scheduler accounts per-slot timelines from ``counts`` — a round
+        produces a FIXED ``decode_block`` tokens per slot here, but a
+        variable 1..K+1 on the speculative runner (accepted drafts + the
+        correction/bonus token), so nothing downstream may assume one token
+        per step or a constant tokens-per-round.
+        """
+        del active   # every slot decodes the full block on the plain runner
+        out = self.decode_chunk(tokens, positions, temps,
+                                block_tables=block_tables)
+        return out, np.full(out.shape[1], out.shape[0], np.int32)
+
+    def reset_slot(self, slot: int) -> None:
+        """Per-slot runner state reset on (re)admission — a no-op here; the
+        speculative runner clears its adaptive-K state."""
+
 
 class Scheduler:
     """The host side of the engine: admission, slot/page bookkeeping, and
@@ -288,13 +328,16 @@ class Scheduler:
 
     def __init__(self, runner: ModelRunner, *, slots: int, max_len: int,
                  allocator: Optional[KV.PageAllocator] = None,
-                 prefix: Optional[KV.PrefixCache] = None):
+                 prefix: Optional[KV.PrefixCache] = None,
+                 log_every: int = 0):
         self.runner = runner
         self.slots = slots
         self.max_len = max_len
         self.allocator = allocator
         self.prefix = prefix
         self.paged = allocator is not None
+        self.log_every = int(log_every)  # decode rounds between stat lines
+        self.rounds = 0
         self.max_concurrent = 0          # peak simultaneously-active slots
         self.admissions: List[Tuple[int, Tuple[int, ...]]] = []
         if self.paged:
@@ -408,6 +451,7 @@ class Scheduler:
                 slot_pos[slot] = n_prompt
                 temps[slot] = req.temperature
                 active[slot] = (req, res)
+                self.runner.reset_slot(slot)
                 self.max_concurrent = max(
                     self.max_concurrent,
                     sum(a is not None for a in active))
@@ -437,17 +481,21 @@ class Scheduler:
 
         admit_idle()
 
-        k = self.runner.decode_block
         while any(a is not None for a in active):
             # snapshot the attribution denominator BEFORE the loop body
             # mutates ``active`` (finished slots must still pay their share
-            # of the step they took part in)
+            # of the round they took part in)
             n_active = sum(a is not None for a in active)
             t0 = time.perf_counter()
-            out = self.runner.decode_chunk(
+            # a round yields a VARIABLE number of tokens per slot: a fixed
+            # decode_block on the plain runner, 1 + accepted drafts on the
+            # speculative runner — counts[s] is the only source of truth
+            out, counts = self.runner.decode_round(
                 cur, slot_pos, temps,
-                block_tables=self.block_tables if self.paged else None)
+                block_tables=self.block_tables if self.paged else None,
+                active=[a is not None for a in active])
             dt = (time.perf_counter() - t0) * 1e3
+            self.rounds += 1
             for s in range(self.slots):
                 a = active[s]
                 if a is None:
@@ -458,15 +506,36 @@ class Scheduler:
                 # slot's remaining cache length
                 budget = min(req.max_new_tokens - len(res.tokens),
                              self.max_len - 1 - int(slot_pos[s]))
-                take = min(k, budget)
+                take = min(int(counts[s]), budget)
                 res.tokens.extend(int(t) for t in out[:take, s])
                 if take >= budget:
                     finish(s)      # may re-admit into this slot
                 else:
-                    cur[s] = out[k - 1, s]
-                    slot_pos[s] += k
+                    # the write cursor advances by the tokens actually kept
+                    # (a speculative round already rolled back past
+                    # counts[s]; rows beyond it are dead by the masks)
+                    cur[s] = out[counts[s] - 1, s]
+                    slot_pos[s] += int(counts[s])
+            self._log_round(sum(a is not None for a in active))
             admit_idle()
         return done
+
+    def _log_round(self, n_active: int) -> None:
+        """The serve CLI's periodic stat line (``log_every`` rounds)."""
+        if not self.log_every or self.rounds % self.log_every:
+            return
+        parts = [f"round {self.rounds}", f"active {n_active}/{self.slots}"]
+        if self.allocator is not None:
+            st = self.allocator.stats()
+            parts.append(f"pages {st['used']}/{st['capacity']} "
+                         f"(hw {st['high_water']}, shared {st['shared']})")
+        if self.prefix is not None:
+            parts.append(f"prefix_hits {self.prefix.hits}")
+        if hasattr(self.runner, "spec_stats"):
+            sp = self.runner.spec_stats()
+            parts.append(f"accept {sp['acceptance']:.2f} "
+                         f"tok/round {sp['tokens_per_round']:.2f}")
+        print("[serve] " + ", ".join(parts), flush=True)
 
 
 class ServingEngine:
@@ -475,7 +544,14 @@ class ServingEngine:
     for admission.  ``page_size=...`` turns on the paged KV cache for the
     attention families (recurrent families fall back to the dense slot
     cache); ``prefix_cache=True`` additionally shares page-aligned prompt
-    prefixes across concurrent requests."""
+    prefixes across concurrent requests; ``speculate=True`` serves with
+    self-speculative decoding — a low-bit draft derived from the target's
+    own weights drafts ``draft_k`` tokens per round and the target verifies
+    them in one bounded multi-token forward (paged families only;
+    DESIGN.md §6e).  Greedy speculative output is token-identical to plain
+    decoding; dropping-MoE families share bulk prefill's caveat — the
+    verify routes B*(K+1) tokens per step, so identity needs a capacity
+    that drops neither path's tokens."""
 
     def __init__(self, model: Model, params: Any, *, max_len: int = 512,
                  batch_slots: int = 8, forms: bool = False,
@@ -485,7 +561,14 @@ class ServingEngine:
                  mesh: Optional[Any] = None,
                  page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 speculate: bool = False,
+                 draft_k: int = 4, draft_bits: int = 4,
+                 draft_mode: str = "forms",
+                 draft_fragment: Optional[int] = None,
+                 draft_layer_step: int = 1,
+                 adaptive_k: bool = True,
+                 stats_every: int = 0):
         self.model = model
         self.cfg = model.config
         self.ctx: Optional[ParallelContext] = (
@@ -505,6 +588,10 @@ class ServingEngine:
 
         self.paged = bool(page_size) and model.supports_paged
         self.page_size = int(page_size) if self.paged else None
+        # speculation needs the bounded multi-token paged verify; recurrent
+        # families (and page_size=0) fall back to the plain engine, like the
+        # paged-cache fallback itself
+        self.speculative = bool(speculate) and self.paged
         allocator = prefix = None
         if self.paged:
             per_slot = KV.pages_for(max_len, self.page_size)
@@ -541,14 +628,47 @@ class ServingEngine:
             self.cache_shardings = cache_shardings(cache, self.ctx)
             cache = reshard_state(cache, self.cache_shardings)
 
-        self.runner = ModelRunner(model, params, cache, max_len=max_len,
-                                  spec=self.spec,
-                                  ctx=self.ctx, decode_block=decode_block,
-                                  donate=donate, rng_seed=rng_seed,
-                                  cache_shardings=self.cache_shardings)
+        self.draft_report: Optional[CompressReport] = None
+        self.draft_cache_shardings = None
+        if self.speculative:
+            from repro.serving import speculate as SP
+            spec_cfg = SP.SpeculateConfig(
+                k=draft_k, bits=draft_bits, mode=draft_mode,
+                fragment=(draft_fragment if draft_fragment is not None
+                          else (self.spec.m if self.spec is not None
+                                else None)),
+                layer_step=draft_layer_step, adaptive=adaptive_k)
+            # the draft derives from what the target actually serves (the
+            # float projection of the compressed tree when forms is on)
+            draft_model, draft_params, self.draft_report = SP.make_draft(
+                model, params, spec_cfg,
+                ctx=self.ctx if draft_mode == "forms" else None)
+            draft_cache = draft_model.init_paged_cache(
+                num_pages, self.page_size, batch_slots, max_len)
+            if self.ctx is not None:
+                dsh = params_shardings(draft_params, self.ctx, fsdp=False)
+                draft_params = reshard_state(draft_params, dsh)
+                self.draft_cache_shardings = cache_shardings(draft_cache,
+                                                             self.ctx)
+                draft_cache = reshard_state(draft_cache,
+                                            self.draft_cache_shardings)
+            self.runner: ModelRunner = SP.SpeculativeRunner(
+                model, params, cache,
+                draft_model=draft_model, draft_params=draft_params,
+                draft_cache=draft_cache, spec_cfg=spec_cfg,
+                draft_cache_shardings=self.draft_cache_shardings,
+                max_len=max_len, spec=self.spec, ctx=self.ctx,
+                decode_block=decode_block, donate=donate, rng_seed=rng_seed,
+                cache_shardings=self.cache_shardings)
+        else:
+            self.runner = ModelRunner(model, params, cache, max_len=max_len,
+                                      spec=self.spec,
+                                      ctx=self.ctx, decode_block=decode_block,
+                                      donate=donate, rng_seed=rng_seed,
+                                      cache_shardings=self.cache_shardings)
         self.scheduler = Scheduler(self.runner, slots=batch_slots,
                                    max_len=max_len, allocator=allocator,
-                                   prefix=prefix)
+                                   prefix=prefix, log_every=stats_every)
 
     # --- delegation (the engine surface tests/benches/launchers consume) ---
 
@@ -577,9 +697,28 @@ class ServingEngine:
         return self.scheduler.prefix
 
     def cache_bytes(self) -> int:
-        """Persistent HBM footprint of the serving cache."""
-        return sum(leaf.nbytes
-                   for leaf in jax.tree_util.tree_leaves(self.runner.cache))
+        """Persistent HBM footprint of the serving cache(s) — the draft
+        pool included when speculation is on (it is real HBM)."""
+        leaves = jax.tree_util.tree_leaves(self.runner.cache)
+        if self.speculative:
+            leaves += jax.tree_util.tree_leaves(self.runner.draft_cache)
+        return sum(leaf.nbytes for leaf in leaves)
+
+    def stats(self) -> Dict[str, Any]:
+        """Serving counters: scheduler occupancy, page-pool occupancy
+        (free/used/shared/high-water), prefix-cache hits, and — with
+        speculation on — acceptance-rate/tokens-per-round."""
+        out: Dict[str, Any] = {
+            "max_concurrent": self.scheduler.max_concurrent,
+            "rounds": self.scheduler.rounds,
+        }
+        if self.page_allocator is not None:
+            out["pages"] = self.page_allocator.stats()
+        if self.prefix_cache is not None:
+            out["prefix_hits"] = self.prefix_cache.hits
+        if hasattr(self.runner, "spec_stats"):
+            out["speculate"] = self.runner.spec_stats()
+        return out
 
     def prefill_slot(self, slot: int, prompt: np.ndarray,
                      temperature: float = 0.0,

@@ -34,7 +34,7 @@ Host side (plain Python, drives the scheduler):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -95,27 +95,88 @@ def gather_views(cache: PagedKVCache, block_tables: jax.Array
     return out
 
 
-def commit_token(cache: PagedKVCache, toks: Dict[str, jax.Array],
-                 block_tables: jax.Array, pos: jax.Array) -> PagedKVCache:
-    """Scatter each slot's new-token row into its current page.
+def resolve_pages(block_tables: jax.Array, grid: jax.Array, page_size: int,
+                  select: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Resolve a (slots, T) position grid to (page, offset) scatter grids.
 
-    ``toks``: per-leaf ``(layers, slots, ...)`` new-token rows; ``pos``:
-    (slots,) write positions.  Positions past the block table (a slot that
-    exhausted its budget mid decode-block) are redirected to the scratch
-    page instead of being clamped onto a live page.
+    The ONE place the page-addressing rule lives: positions past the block
+    table — a slot that exhausted its budget mid decode-block, rejected
+    speculative drafts at the edge of a slot's reservation — are redirected
+    to the scratch page instead of being clamped onto a live page.
+    ``select`` (bool, same shape as ``grid``) additionally scratch-redirects
+    de-selected positions (the rollback scrub's "touch only rejected rows").
     """
-    ps = cache.page_size
-    b = pos.shape[0]
     n_tables = block_tables.shape[1]
-    bidx = jnp.arange(b, dtype=jnp.int32)
-    pidx = pos // ps
-    page = jnp.where(pidx < n_tables,
+    bidx = jnp.arange(grid.shape[0], dtype=jnp.int32)[:, None]
+    pidx = grid // page_size
+    live = pidx < n_tables
+    if select is not None:
+        live = jnp.logical_and(live, select)
+    page = jnp.where(live,
                      block_tables[bidx, jnp.minimum(pidx, n_tables - 1)],
                      SCRATCH_PAGE)
-    off = pos % ps
+    return page, grid % page_size
+
+
+def commit_tokens(cache: PagedKVCache, toks: Dict[str, jax.Array],
+                  block_tables: jax.Array, pos: jax.Array) -> PagedKVCache:
+    """Scatter each slot's T new-token rows into their pages (one scatter
+    per leaf).
+
+    ``toks``: per-leaf ``(layers, slots, T, ...)`` new-token rows; ``pos``:
+    (slots,) start positions (row t lands at ``pos + t``) or an explicit
+    (slots, T) position grid.  Out-of-table positions land in scratch
+    (:func:`resolve_pages`).
+    """
+    t = next(iter(toks.values())).shape[2]
+    pos = jnp.asarray(pos, jnp.int32)
+    grid = (pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+            if pos.ndim == 1 else pos)
+    page, off = resolve_pages(block_tables, grid, cache.page_size)
     pool = {name: cache.pool[name].at[:, page, off].set(
         tok.astype(cache.pool[name].dtype))
         for name, tok in toks.items()}
+    return dataclasses.replace(cache, pool=pool)
+
+
+def commit_token(cache: PagedKVCache, toks: Dict[str, jax.Array],
+                 block_tables: jax.Array, pos: jax.Array) -> PagedKVCache:
+    """Scatter each slot's single new-token row into its current page.
+
+    ``toks``: per-leaf ``(layers, slots, ...)`` new-token rows; ``pos``:
+    (slots,) write positions.  The T=1 view of :func:`commit_tokens`.
+    """
+    return commit_tokens(cache, {n: v[:, :, None] for n, v in toks.items()},
+                         block_tables, jnp.asarray(pos, jnp.int32)[:, None])
+
+
+def rollback_tokens(cache: PagedKVCache, block_tables: jax.Array,
+                    pos: jax.Array, keep: jax.Array, t: int) -> PagedKVCache:
+    """Scrub a tentative multi-token commit back to ``keep`` rows per slot.
+
+    After a speculative round commits ``t`` rows at ``pos .. pos+t-1``
+    (commit_tokens) and verification accepts only ``keep[b]`` of them, the
+    rejected rows ``pos+keep .. pos+t-1`` release their page slots: they
+    are zeroed here so the page rows hold no stale draft K/V.  This is the
+    belt-and-braces form of the rollback protocol — the positional
+    rollback alone (the scheduler rewinding its write cursor to
+    ``pos + keep``) is already sound, because every decode mask admits only
+    ``kpos <= pos`` rows and every row is rewritten before its position can
+    enter a mask (DESIGN.md §6e).  Kept rows (and, via the scratch
+    redirect, rows of other slots) are untouched: the zero-write for a
+    kept position is redirected to the scratch page.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    keep = jnp.asarray(keep, jnp.int32)
+    offs = jnp.arange(t, dtype=jnp.int32)[None, :]
+    page, off = resolve_pages(block_tables, pos[:, None] + offs,
+                              cache.page_size, select=offs >= keep[:, None])
+    pool = {}
+    for name, arr in cache.pool.items():
+        zeros = jnp.zeros(arr.shape[:1] + page.shape + arr.shape[3:],
+                          arr.dtype)
+        pool[name] = arr.at[:, page, off].set(zeros)
     return dataclasses.replace(cache, pool=pool)
 
 
@@ -169,6 +230,7 @@ class PageAllocator:
         self._refs[SCRATCH_PAGE] = 1
         # pop() hands out low page ids first (stable tests/debugging)
         self._free: List[int] = list(range(num_pages - 1, SCRATCH_PAGE, -1))
+        self.high_water = 0          # peak pages simultaneously in use
 
     @property
     def capacity(self) -> int:
@@ -178,6 +240,23 @@ class PageAllocator:
     def free_pages(self) -> int:
         return len(self._free)
 
+    @property
+    def used_pages(self) -> int:
+        return self.capacity - len(self._free)
+
+    def stats(self) -> Dict[str, int]:
+        """Pool occupancy snapshot: capacity, free/used pages, pages held by
+        more than one request (prefix sharing), and the high-water mark of
+        simultaneous use (surfaced through ``ServingEngine.stats()`` and the
+        serve CLI's periodic log line)."""
+        return {
+            "capacity": self.capacity,
+            "free": self.free_pages,
+            "used": self.used_pages,
+            "shared": int((self._refs[SCRATCH_PAGE + 1:] > 1).sum()),
+            "high_water": self.high_water,
+        }
+
     def alloc(self, n: int) -> Optional[List[int]]:
         """Allocate ``n`` pages (refcount 1 each), or None if short."""
         if n > len(self._free):
@@ -185,6 +264,7 @@ class PageAllocator:
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             self._refs[p] = 1
+        self.high_water = max(self.high_water, self.used_pages)
         return pages
 
     def share(self, pages: Iterable[int]) -> None:

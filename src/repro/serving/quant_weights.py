@@ -1,4 +1,4 @@
-"""int8 weight storage for serving — FORMS quantization on the LM hot path.
+"""Low-bit weight storage for serving — FORMS quantization on the LM hot path.
 
 An ADMM-polarized, 8-bit-quantized FORMS weight is exactly representable as
 signed int8 x per-column scale (the per-fragment sign is constant, so folding
@@ -8,26 +8,65 @@ block weights as {"q": int8, "s": f32} halves serving HBM weight traffic vs
 bf16; the dequant multiply fuses into the consuming matmul's operand load on
 TPU.
 
-``quantize_tree`` converts the scan-stacked attention/MLP weights of the
-dense family; ``layers.wload`` transparently dequantizes on read.
+``quantize_leaf``/``quantize_tree`` take a ``bits`` argument (symmetric
+int8/int4/... grids in an int8 container), so the int8 serving weights and
+the low-bit speculative DRAFT weights (serving/speculate.py) share one code
+path; ``layers.wload`` transparently dequantizes on read either way.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 QUANT_SUFFIXES = ("attn/wq", "attn/wk", "attn/wv", "attn/wo",
-                  "mlp/gate", "mlp/up", "mlp/down")
+                  "mlp/gate", "mlp/up", "mlp/down",
+                  # MLA projections (deepseek) — scan-stacked (L, in, out)
+                  "mla/q_down", "mla/q_up", "mla/kv_down", "mla/kv_up",
+                  "mla/wo",
+                  # shared experts — scan-stacked (L, in, out)
+                  "moe/shared_gate", "moe/shared_up", "moe/shared_down")
+
+# stacked per-expert weights (L, E, in, out): quantized with batch_dims=2 —
+# one scale row per (layer, expert) column.  The router stays full precision
+# (routing decisions are the one place low-bit noise changes WHICH experts
+# run, not just how well).
+EXPERT_SUFFIXES = ("moe/w_gate", "moe/w_up", "moe/w_down")
 
 
-def quantize_leaf(w: jax.Array) -> dict:
-    """Per-output-column symmetric int8 (last dim = out features)."""
+def quantize_leaf(w: jax.Array, bits: int = 8,
+                  batch_dims: Optional[int] = None) -> dict:
+    """Per-output-column symmetric signed quantization at ``bits``.
+
+    The grid is ``[-(2^(bits-1)-1), 2^(bits-1)-1]`` (int8 container for
+    every width — int4 uses [-7, 7]; the container byte count is what the
+    storage accounting reports).  The last axis is the output-column axis.
+
+    ``batch_dims`` counts the leading axes that index INDEPENDENT matrices
+    (scan-stacked layers, stacked experts): the amax reduction runs over
+    every axis between them and the column axis.  The default infers it —
+    0 for a plain (K, N) matrix, 1 for a scan-stacked (L, K, N) leaf, and
+    ``ndim - 4`` for conv-shaped ``(..., kh, kw, cin, cout)`` kernels, whose
+    kh/kw/cin axes are all rows of the im2col matrix and must reduce
+    together (the old code reduced only ``cin``, leaving per-(kh, kw)
+    scales on conv and scan-stacked conv leaves — not a per-column scale).
+    Stacked-expert ``(L, E, din, dout)`` leaves need an explicit
+    ``batch_dims=2``.
+    """
+    if not 2 <= bits <= 8:
+        raise ValueError(f"bits must be in [2, 8], got {bits}")
+    if batch_dims is None:
+        batch_dims = 1 if w.ndim == 3 else max(0, w.ndim - 4)
+    if not 0 <= batch_dims <= w.ndim - 2:
+        raise ValueError(f"batch_dims={batch_dims} out of range for a "
+                         f"rank-{w.ndim} leaf")
+    qmax = float(2 ** (bits - 1) - 1)
     wf = w.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(wf), axis=-2, keepdims=True)
-    scale = jnp.maximum(amax, 1e-12) / 127.0
-    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    axes = tuple(range(batch_dims, w.ndim - 1))
+    amax = jnp.max(jnp.abs(wf), axis=axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(wf / scale), -qmax, qmax).astype(jnp.int8)
     return {"q": q, "s": scale.astype(jnp.float32)}
 
 
@@ -35,19 +74,31 @@ def dequantize_leaf(v: dict, dtype) -> jax.Array:
     return (v["q"].astype(dtype) * v["s"].astype(dtype))
 
 
-def quantize_tree(params: Any) -> Tuple[Any, int, int]:
-    """Quantize matching weights; returns (tree, bytes_before, bytes_after)."""
+def quantize_tree(params: Any, bits: int = 8) -> Tuple[Any, int, int]:
+    """Quantize matching weights; returns (tree, bytes_before, bytes_after).
+
+    ``bytes_after`` counts the int8 container honestly — a 4-bit grid does
+    not halve host bytes here (packing is the accelerator layout's job), it
+    halves the information content the draft model has to agree with.
+    """
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out, before, after = [], 0, 0
     for path, leaf in flat:
         pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                         for p in path)
-        if (hasattr(leaf, "ndim") and leaf.ndim >= 2
-                and any(pstr.endswith(sfx) for sfx in QUANT_SUFFIXES)):
-            v = quantize_leaf(leaf)
-            before += leaf.size * leaf.dtype.itemsize
-            after += v["q"].size + v["s"].size * 4
-            out.append(v)
-        else:
+        batch_dims = None
+        if any(pstr.endswith(sfx) for sfx in EXPERT_SUFFIXES):
+            # (L, E, in, out) scan-stacked, (E, in, out) in the unstacked
+            # MTP block: every leading axis indexes an independent matrix
+            batch_dims = max(0, leaf.ndim - 2) if hasattr(leaf, "ndim") else 0
+        elif not any(pstr.endswith(sfx) for sfx in QUANT_SUFFIXES):
             out.append(leaf)
+            continue
+        if not (hasattr(leaf, "ndim") and leaf.ndim >= 2):
+            out.append(leaf)
+            continue
+        v = quantize_leaf(leaf, bits=bits, batch_dims=batch_dims)
+        before += leaf.size * leaf.dtype.itemsize
+        after += v["q"].size + v["s"].size * 4
+        out.append(v)
     return jax.tree_util.tree_unflatten(treedef, out), before, after

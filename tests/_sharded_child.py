@@ -158,6 +158,45 @@ def check_paged():
     print("paged ok:", eng.scheduler.max_concurrent, "concurrent")
 
 
+def check_speculative():
+    """Speculative decoding on the mesh: greedy tokens identical to the
+    single-device NON-speculative paged engine, draft params co-sharded by
+    the PR-3 rules, the draft page pool sharded over the data axis, and
+    both pools donated across rounds."""
+    m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    ref = ServingEngine(m, params, max_len=32, batch_slots=4, page_size=8,
+                        forms=True)
+    want = {r.uid: r.tokens for r in ref.run(_requests())}
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    eng = ServingEngine(m, params, max_len=32, batch_slots=4, page_size=8,
+                        forms=True, mesh=mesh, speculate=True, draft_k=4,
+                        draft_bits=4)
+    # draft compressed leaves follow the same co-sharding rules as the target
+    dwq = eng.runner.draft_params["blocks"]["attn"]["wq"]
+    assert _spec_entries(dwq.mags)[-1] == "model", dwq.mags.sharding
+    assert _spec_entries(dwq.signs)[-1] == "model", dwq.signs.sharding
+    # the draft page pool shards its page dim over the data axis
+    assert _spec_entries(eng.runner.draft_cache.pool["k"])[1] == "data", \
+        eng.runner.draft_cache.pool["k"].sharding
+    got = {r.uid: r.tokens for r in eng.run(_requests())}
+    assert got == want, (got, want)
+    st = eng.stats()["speculate"]
+    assert st["rounds"] > 0 and st["acceptance"] > 0.0, st
+    # both pools stay donated across speculative rounds
+    eng.scheduler.block_tables[:] = 0
+    eng.scheduler.block_tables[0, 0] = eng.page_allocator.alloc(1)[0]
+    old = (jax.tree_util.tree_leaves(eng.cache)
+           + jax.tree_util.tree_leaves(eng.runner.draft_cache))
+    eng.runner.decode_round(np.zeros(4, np.int32), np.zeros(4, np.int32),
+                            np.zeros(4, np.float32),
+                            block_tables=eng.scheduler.block_tables)
+    assert all(leaf.is_deleted() for leaf in old), \
+        "sharded speculative round copied a pool instead of donating"
+    print("speculative ok:", f"acceptance={st['acceptance']:.2f}")
+
+
 def check_restore():
     """checkpoint.restore(shardings=...) loads a compressed tree straight
     into the mesh layout the engine serves from."""

@@ -4,6 +4,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_reduced
 from repro.models.registry import build
@@ -19,6 +20,86 @@ def test_quantize_leaf_roundtrip():
     err = np.abs(np.asarray(back - w))
     bound = np.asarray(v["s"]) * 0.51
     assert (err <= bound + 1e-7).all()
+
+
+def test_quantize_leaf_low_bit_grids():
+    """bits= selects the symmetric grid (int8 container throughout): the
+    int4 path the speculative draft shares with the int8 serving weights."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    v4 = quantize_leaf(w, bits=4)
+    assert v4["q"].dtype == jnp.int8
+    assert int(np.abs(np.asarray(v4["q"])).max()) <= 7
+    back = dequantize_leaf(v4, jnp.float32)
+    err = np.abs(np.asarray(back - w))
+    assert (err <= np.asarray(v4["s"]) * 0.51 + 1e-7).all()
+    # coarser grid, strictly larger scales than int8
+    assert (np.asarray(v4["s"]) > np.asarray(quantize_leaf(w)["s"])).all()
+    with pytest.raises(ValueError, match="bits"):
+        quantize_leaf(w, bits=1)
+
+
+def test_quantize_leaf_amax_axes_for_conv_shaped_leaves():
+    """Per-output-column scales: a conv kernel reduces kh/kw/cin together
+    (they are all rows of the im2col matrix — the old axis=-2 reduction
+    left per-(kh, kw) scales), a scan-stacked conv keeps its layer axis,
+    and stacked experts keep (L, E) via an explicit batch_dims."""
+    conv = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 16))
+    v = quantize_leaf(conv)
+    assert v["s"].shape == (1, 1, 1, 16)
+    got = np.asarray(v["s"])[0, 0, 0] * 127.0
+    np.testing.assert_allclose(
+        got, np.abs(np.asarray(conv)).reshape(-1, 16).max(0), rtol=1e-6)
+
+    stacked_conv = jax.random.normal(jax.random.PRNGKey(2), (2, 3, 3, 8, 16))
+    v = quantize_leaf(stacked_conv)
+    assert v["s"].shape == (2, 1, 1, 1, 16)
+
+    experts = jax.random.normal(jax.random.PRNGKey(3), (2, 4, 8, 16))
+    v = quantize_leaf(experts, batch_dims=2)
+    assert v["s"].shape == (2, 4, 1, 16)
+
+    mat = jax.random.normal(jax.random.PRNGKey(4), (8, 16))
+    assert quantize_leaf(mat)["s"].shape == (1, 16)
+    stacked = jax.random.normal(jax.random.PRNGKey(5), (3, 8, 16))
+    assert quantize_leaf(stacked)["s"].shape == (3, 1, 16)
+
+
+def test_quantize_tree_bits_threads_through():
+    cfg = get_reduced("yi-9b")
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    qtree, before, after = quantize_tree(params, bits=4)
+    assert before > 0 and after < before / 3
+    assert int(np.abs(np.asarray(qtree["blocks"]["attn"]["wq"]["q"])).max()) <= 7
+
+
+def test_quantize_tree_covers_mla_and_expert_weights():
+    """MoE/MLA families really quantize (a speculative int draft of
+    deepseek must be cheap): MLA projections, stacked experts (per-
+    (layer, expert)-column scales) and shared experts all convert; the
+    router stays full precision; the quantized tree still decodes."""
+    cfg = dataclasses.replace(get_reduced("deepseek-v3-671b"),
+                              dtype="float32")
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    qtree, before, after = quantize_tree(params)
+    assert after < before / 3
+    blocks = qtree["blocks"]
+    for name in ("q_down", "q_up", "kv_down", "kv_up", "wo"):
+        assert isinstance(blocks["mla"][name], dict), name
+    for name in ("w_gate", "w_up", "w_down"):
+        v = blocks["moe"][name]
+        assert isinstance(v, dict), name
+        le = params["blocks"]["moe"][name].shape[:2]
+        assert v["s"].shape == (*le, 1, params["blocks"]["moe"][name].shape[-1])
+    for name in ("shared_gate", "shared_up", "shared_down"):
+        assert isinstance(blocks["moe"][name], dict), name
+    # routing precision is load-bearing: the router stays dense
+    assert not isinstance(blocks["moe"]["router"], dict)
+    cache = m.init_cache(2, 8, dtype=jnp.float32)
+    lg, _ = m.decode_step(qtree, jnp.ones((2, 1), jnp.int32), cache,
+                          jnp.zeros((2,), jnp.int32))
+    assert bool(jnp.all(jnp.isfinite(lg.astype(jnp.float32))))
 
 
 def test_quantize_tree_compresses_blocks_only():

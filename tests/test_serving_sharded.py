@@ -53,6 +53,14 @@ def test_paged_serving_on_mesh_parity_and_2x_concurrency():
     assert "paged ok" in out
 
 
+def test_speculative_decode_on_mesh_parity():
+    """Speculative decoding under data=2,model=4: token-identical to the
+    single-device non-speculative paged engine, draft weights/pool sharded
+    by the same rules as the target, pools donated."""
+    out = _run_child("speculative")
+    assert "speculative ok" in out
+
+
 def test_restore_straight_into_sharded_layout():
     """checkpoint.restore(shardings=...) places compressed leaves onto the
     mesh without a replicated intermediate, and the engine serves from it."""

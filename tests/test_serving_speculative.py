@@ -1,0 +1,378 @@
+"""Self-speculative decoding: greedy token parity vs the plain paged engine,
+rejection-sampling correctness, draft derivation, rollback, adaptive K."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.forms import FormsLinearParams, FormsSpec, compress_tree
+from repro.models.registry import build
+from repro.serving import kv_cache as KV
+from repro.serving import speculate as SP
+from repro.serving.engine import Request, ServingEngine
+
+
+def _tiny(arch="yi-9b", **extra):
+    base = dict(num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
+                head_dim=16, d_ff=64, vocab_size=64)
+    if arch != "yi-9b":
+        base = {}
+    return build(dataclasses.replace(get_reduced(arch), dtype="float32",
+                                     **base, **extra))
+
+
+def _reqs(n=3, new=6):
+    return [Request(uid=i, prompt=np.array([1 + i, 2, 3]), max_new_tokens=new)
+            for i in range(n)]
+
+
+def _tokens(results):
+    return {r.uid: r.tokens for r in results}
+
+
+# ---------------------------------------------------------------------------
+# greedy parity: speculative == plain paged engine, token for token
+# ---------------------------------------------------------------------------
+
+
+# MoE archs pin capacity high: the verify step routes B*(K+1) tokens per
+# dispatch instead of B, so capacity-based drops would otherwise differ
+# between the speculative and sequential paths (inherent to dropping MoE)
+@pytest.mark.parametrize("arch,extra", [
+    ("yi-9b", {}),
+    ("olmoe-1b-7b", {"capacity_factor": 64.0}),
+    ("deepseek-v3-671b", {"capacity_factor": 64.0}),
+    ("whisper-small", {}),
+])
+def test_speculative_greedy_token_identical(arch, extra):
+    """Greedy speculative decode reproduces the non-speculative paged engine
+    token for token: acceptance is exact (draft == target argmax) and the
+    correction token IS the target argmax, so the emitted sequence is the
+    target's greedy rollout regardless of draft quality."""
+    m = _tiny(arch, **extra)
+    params = m.init(jax.random.PRNGKey(0))
+    plain = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8)
+    want = _tokens(plain.run(_reqs()))
+    spec = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8,
+                         speculate=True, draft_k=4, draft_bits=4)
+    got = _tokens(spec.run(_reqs()))
+    assert got == want
+    assert spec.speculative
+    st = spec.stats()["speculate"]
+    assert st["rounds"] > 0 and st["drafted"] > 0
+
+
+def test_speculative_parity_on_compressed_target_and_acceptance():
+    """A forms-served target with a same-geometry 4-bit draft: parity holds
+    AND acceptance is material (the 4-bit re-quantization keeps the 8-bit
+    projection's sign elections, so argmaxes mostly agree)."""
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    plain = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8,
+                          forms=True)
+    want = _tokens(plain.run(_reqs()))
+    spec = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8,
+                         forms=True, speculate=True, draft_k=4, draft_bits=4)
+    got = _tokens(spec.run(_reqs()))
+    assert got == want
+    assert spec.stats()["speculate"]["acceptance"] > 0.25
+
+
+def test_speculative_int_draft_and_layer_skip_parity():
+    """The int-grid draft path (shared quantize_leaf code path) and a
+    layer-skipped draft both keep greedy parity — draft quality affects
+    only the acceptance rate, never the emitted tokens."""
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    plain = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8,
+                          forms=True)
+    want = _tokens(plain.run(_reqs()))
+    spec = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8,
+                         forms=True, speculate=True, draft_k=3,
+                         draft_bits=8, draft_mode="int", draft_layer_step=2)
+    got = _tokens(spec.run(_reqs()))
+    assert got == want
+    # the draft really is shallower: one scan layer in its block stack
+    assert spec.runner.draft_model.config.num_layers == 1
+
+
+def test_speculative_prefix_cache_parity_and_shared_pages():
+    """Prefix sharing composes with speculation: both pools map the shared
+    pages (the draft prefill redirects them to scratch identically), and
+    decode stays token-identical to the non-shared run."""
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    prefix = (np.arange(16) % 64).astype(np.int32)
+    reqs = lambda: [
+        Request(uid=0, prompt=np.concatenate([prefix, [7]]).astype(np.int32),
+                max_new_tokens=6),
+        Request(uid=1, prompt=np.concatenate([prefix, [9]]).astype(np.int32),
+                max_new_tokens=6),
+    ]
+    off = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8,
+                        speculate=True)
+    want = _tokens(off.run(reqs()))
+    on = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8,
+                       speculate=True, prefix_cache=True)
+    got = _tokens(on.run(reqs()))
+    assert got == want
+    assert on.prefix_cache.hits >= 1
+    ad = dict(on.scheduler.admissions)
+    assert len(set(ad[0]) & set(ad[1])) == 2
+
+
+def test_speculative_falls_back_for_recurrent_families():
+    m = _tiny("xlstm-350m")
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8,
+                        speculate=True)
+    assert not eng.speculative
+    res = eng.run(_reqs(2))
+    assert all(len(r.tokens) == 6 for r in res)
+
+
+def test_speculative_caches_are_donated():
+    """Both the target pool and the draft pool consume in place across a
+    speculative round — no full-pool copies on the hot path."""
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8,
+                        speculate=True, draft_k=3)
+    eng.scheduler.block_tables[0, :1] = eng.page_allocator.alloc(1)
+    eng.prefill_slot(0, np.array([5, 6], np.int32),
+                     pages=eng.scheduler.block_tables[0, :1])
+    old = (jax.tree_util.tree_leaves(eng.cache)
+           + jax.tree_util.tree_leaves(eng.runner.draft_cache))
+    out, counts = eng.runner.decode_round(
+        np.zeros(2, np.int32), np.array([2, 0], np.int32),
+        np.zeros(2, np.float32), block_tables=eng.scheduler.block_tables,
+        active=[True, False])
+    assert all(leaf.is_deleted() for leaf in old), \
+        "speculative round copied a pool instead of donating it"
+    assert out.shape == (4, 2) and counts.shape == (2,)
+    assert 1 <= counts[0] <= 4
+
+
+# ---------------------------------------------------------------------------
+# rejection sampling — property + empirical distribution match
+# ---------------------------------------------------------------------------
+
+
+def test_rejection_outcome_identity_property():
+    """Hypothesis property: for ANY draft/target logit pair the closed-form
+    outcome distribution of the accept/resample step (the same helpers the
+    runner samples through) equals the target distribution exactly."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.floats(-8, 8), min_size=2, max_size=12),
+           st.lists(st.floats(-8, 8), min_size=2, max_size=12),
+           st.floats(0.2, 3.0))
+    def prop(lt, ld, temp):
+        n = min(len(lt), len(ld))
+        p = jax.nn.softmax(jnp.asarray(lt[:n]) / temp)
+        q = jax.nn.softmax(jnp.asarray(ld[:n]) / temp)
+        out = SP.rejection_outcome_probs(p, q)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(p),
+                                   atol=1e-5)
+
+    prop()
+
+
+def test_speculative_sampling_matches_target_distribution():
+    """Empirical: on a toy 2-layer model, the marginal of the FIRST token a
+    speculative round emits (draft sampled from the real 4-bit draft's
+    logits, accept/correct through ``speculate._accept``) matches the
+    target's next-token distribution."""
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    temp = 1.0
+    tgt, _ = compress_tree(params, FormsSpec(m=8, bits=8))
+    draft, _ = SP.make_draft_tree(tgt, FormsSpec(m=8, bits=4))
+
+    # logits at one decode state (cache seeded with a 2-token prompt)
+    cache = m.init_cache(1, 16, dtype=jnp.float32)
+    for t, tok in enumerate([5, 9]):
+        lt, cache = m.decode_step(tgt, jnp.asarray([[tok]], jnp.int32), cache,
+                                  jnp.asarray([t], jnp.int32))
+    dcache = m.init_cache(1, 16, dtype=jnp.float32)
+    for t, tok in enumerate([5, 9]):
+        ld, dcache = m.decode_step(draft, jnp.asarray([[tok]], jnp.int32),
+                                   dcache, jnp.asarray([t], jnp.int32))
+    lg_t = lt[:, 0].astype(jnp.float32)          # (1, V) target logits
+    lg_d = ld[:, 0].astype(jnp.float32)          # (1, V) draft logits
+    p = np.asarray(jax.nn.softmax(lg_t / temp))[0]
+
+    kk = 3
+    temps = jnp.asarray([temp], jnp.float32)
+    k_el = jnp.asarray([kk], jnp.int32)
+    # later draft positions carry the same logits — they cannot influence
+    # the first emitted token's marginal (acceptance of d_1 only involves
+    # position 0), so this stays a faithful one-step distribution test
+    logits_t = jnp.broadcast_to(lg_t[:, None], (1, kk + 1, lg_t.shape[-1]))
+    draft_lgs = jnp.broadcast_to(lg_d[None], (kk, 1, lg_d.shape[-1]))
+
+    def one(key):
+        k1, k2 = jax.random.split(key)
+        d = jax.random.categorical(k1, jnp.broadcast_to(lg_d / temp,
+                                                        (kk, lg_d.shape[-1])))
+        out, _, _ = SP._accept(logits_t, draft_lgs, d[:, None].astype(
+            jnp.int32), k_el, temps, k2)
+        return out[0, 0]
+
+    n = 4000
+    toks = np.asarray(jax.jit(jax.vmap(one))(
+        jax.random.split(jax.random.PRNGKey(42), n)))
+    emp = np.bincount(toks, minlength=p.shape[0]) / n
+    tv = 0.5 * np.abs(emp - p).sum()
+    assert tv < 0.06, (tv, "speculative marginal diverges from target")
+
+
+def test_temperature_speculative_deterministic_per_seed():
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    outs = []
+    for _ in range(2):
+        eng = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8,
+                            speculate=True, draft_k=3, rng_seed=7)
+        res = eng.run([Request(uid=0, prompt=np.array([5, 6]),
+                               max_new_tokens=6, temperature=0.8)])
+        outs.append(res[0].tokens)
+    assert outs[0] == outs[1] and len(outs[0]) == 6
+
+
+# ---------------------------------------------------------------------------
+# draft derivation
+# ---------------------------------------------------------------------------
+
+
+def test_make_draft_tree_requantizes_compressed_targets():
+    """make_draft_tree on an ALREADY compressed tree reconstructs first:
+    the 4-bit draft's codes live on the 4-bit grid (<= 7), not aliases of
+    the target's 8-bit leaves."""
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    tgt, _ = compress_tree(params, FormsSpec(m=8, bits=8))
+    draft, report = SP.make_draft_tree(tgt, FormsSpec(m=8, bits=4))
+    wq_t = tgt["blocks"]["attn"]["wq"]
+    wq_d = draft["blocks"]["attn"]["wq"]
+    assert isinstance(wq_d, FormsLinearParams)
+    assert wq_d.mags is not wq_t.mags
+    # unsigned magnitude codes (the fragment plane carries the signs):
+    # 4-bit grid tops out at 15, the target's 8-bit grid at 255
+    assert int(jnp.max(wq_d.mags)) <= 15 < int(jnp.max(wq_t.mags))
+    assert report.num_compressed > 0
+
+
+def test_skip_layers_slices_stacked_blocks():
+    m = build(dataclasses.replace(get_reduced("yi-9b"), dtype="float32",
+                                  num_layers=4, d_model=32, num_heads=2,
+                                  num_kv_heads=2, head_dim=16, d_ff=64,
+                                  vocab_size=64))
+    params = m.init(jax.random.PRNGKey(0))
+    dm, dp = SP.skip_layers(m, params, 2)
+    assert dm.config.num_layers == 2
+    np.testing.assert_array_equal(
+        np.asarray(dp["blocks"]["attn"]["wq"]),
+        np.asarray(params["blocks"]["attn"]["wq"][jnp.asarray([0, 2])]))
+    # non-stacked leaves shared untouched
+    assert dp["embed"] is params["embed"]
+
+
+# ---------------------------------------------------------------------------
+# rollback + adaptive K + stats
+# ---------------------------------------------------------------------------
+
+
+def test_commit_tokens_and_rollback_scrub():
+    """commit_tokens writes T rows per slot in one scatter; rollback_tokens
+    zeroes exactly the rejected suffix (kept rows and other pages stay)."""
+    cache = KV.PagedKVCache(
+        pool={"k": jnp.zeros((1, 4, 4, 2), jnp.float32)}, dense={},
+        page_size=4)
+    tables = jnp.asarray([[1, 2], [3, 0]], jnp.int32)
+    rows = jnp.arange(1 * 2 * 4 * 2, dtype=jnp.float32).reshape(1, 2, 4, 2) + 1
+    pos = jnp.asarray([2, 0], jnp.int32)
+    cache = KV.commit_tokens(cache, {"k": rows}, tables, pos)
+    view = KV.gather_views(cache, tables)["k"]
+    np.testing.assert_array_equal(np.asarray(view[0, 0, 2:6]),
+                                  np.asarray(rows[0, 0]))
+    np.testing.assert_array_equal(np.asarray(view[0, 1, 0:4]),
+                                  np.asarray(rows[0, 1]))
+    # slot 0 keeps 1 row, slot 1 keeps 3
+    cache = KV.rollback_tokens(cache, tables, pos, jnp.asarray([1, 3]), 4)
+    view = KV.gather_views(cache, tables)["k"]
+    np.testing.assert_array_equal(np.asarray(view[0, 0, 2:3]),
+                                  np.asarray(rows[0, 0, :1]))
+    assert float(jnp.abs(view[0, 0, 3:6]).sum()) == 0.0
+    np.testing.assert_array_equal(np.asarray(view[0, 1, 0:3]),
+                                  np.asarray(rows[0, 1, :3]))
+    assert float(jnp.abs(view[0, 1, 3:4]).sum()) == 0.0
+
+
+def test_commit_token_is_the_t1_view_of_commit_tokens():
+    cache = KV.PagedKVCache(
+        pool={"k": jnp.zeros((2, 3, 4, 3), jnp.float32)}, dense={},
+        page_size=4)
+    tables = jnp.asarray([[1], [2]], jnp.int32)
+    tok = jnp.ones((2, 2, 3), jnp.float32)
+    a = KV.commit_token(cache, {"k": tok}, tables,
+                        jnp.asarray([1, 3], jnp.int32))
+    b = KV.commit_tokens(cache, {"k": tok[:, :, None]}, tables,
+                         jnp.asarray([1, 3], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(a.pool["k"]),
+                                  np.asarray(b.pool["k"]))
+
+
+def test_adaptive_k_tracks_acceptance():
+    """A hopeless draft (forms 4-bit of an UNTRAINED dense target) shrinks
+    every active slot's K to the floor; a perfect draft (int8 of the
+    compressed target — exactly representable) keeps K at the ceiling."""
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    bad = ServingEngine(m, params, max_len=64, batch_slots=2, page_size=8,
+                        speculate=True, draft_k=4, draft_bits=4)
+    bad.run(_reqs(2, new=20))
+    st = bad.stats()["speculate"]
+    assert st["acceptance"] < 0.3
+    assert all(k == 1 for k in st["slot_k"].values()), st
+
+    good = ServingEngine(m, params, max_len=64, batch_slots=2, page_size=8,
+                         forms=True, speculate=True, draft_k=4, draft_bits=8,
+                         draft_mode="int")
+    good.run(_reqs(2, new=20))
+    st = good.stats()["speculate"]
+    assert st["acceptance"] > 0.9
+    assert all(k == 4 for k in st["slot_k"].values()), st
+
+
+def test_engine_stats_surface():
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8,
+                        speculate=True)
+    eng.run(_reqs(2))
+    st = eng.stats()
+    assert st["max_concurrent"] == 2 and st["rounds"] > 0
+    pg = st["pages"]
+    assert pg["used"] == 0 and pg["high_water"] >= 2
+    assert pg["free"] == pg["capacity"]
+    sp = st["speculate"]
+    assert sp["drafted"] >= sp["accepted"] >= 0
+    assert 0.0 <= sp["acceptance"] <= 1.0
+
+
+def test_speculate_config_validation():
+    with pytest.raises(ValueError, match="draft mode"):
+        SP.SpeculateConfig(mode="nope")
+    with pytest.raises(ValueError, match="k must be"):
+        SP.SpeculateConfig(k=0)
+    with pytest.raises(ValueError, match="k_min"):
+        SP.SpeculateConfig(k=2, k_min=3)
+    with pytest.raises(ValueError, match="layer_step"):
+        SP.SpeculateConfig(layer_step=0)
