@@ -36,6 +36,35 @@ def write_json(path: str) -> None:
     print(f"# wrote {len(_ROWS)} rows to {path}", flush=True)
 
 
+def append_trajectory(path: str, rows: List[Tuple[str, float, str]],
+                      label: str = "") -> None:
+    """Append one run's rows to a JSON trajectory file (a list of runs).
+
+    Unlike :func:`write_json` (one CI artifact per run), a trajectory file
+    lives at the repo root and accumulates one record per benchmark run /
+    PR — the cross-PR perf history.  Existing records are kept; corrupt or
+    legacy single-run files are wrapped rather than clobbered.
+    """
+    data: List[Dict] = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            data = prev if isinstance(prev, list) else [prev]
+        except (OSError, ValueError):
+            data = []
+    data.append({
+        "date": time.strftime("%Y-%m-%d"),
+        "label": label,
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+    })
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    print(f"# appended {len(rows)} rows to {path} "
+          f"({len(data)} runs tracked)", flush=True)
+
+
 def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
     """Median wall-time per call in microseconds (blocks on jax results)."""
     for _ in range(warmup):

@@ -13,6 +13,12 @@ Sections:
   table VI     -> bench_variation      (device-variation robustness)
   kernels      -> bench_kernels        (wall-times, oracle + interpret sanity)
   system       -> bench_train_serve    (train/decode step micro-bench)
+  reliability  -> bench_reliability    (fault injection: accuracy/tok-s vs
+                                        sigma, plain vs vecom, self-healing)
+
+Cross-PR trajectories (repo root, appended per run): bench_reliability
+writes ``BENCH_reliability.json``; ``--smoke`` additionally appends the
+``serving.*`` rows of bench_fps to ``BENCH_serving.json``.
 """
 from __future__ import annotations
 
@@ -35,12 +41,14 @@ def main() -> None:
 
     from benchmarks import (bench_accuracy, bench_eic, bench_fps,
                             bench_fragment_size, bench_hw_model,
-                            bench_kernels, bench_train_serve, bench_variation)
+                            bench_kernels, bench_reliability,
+                            bench_train_serve, bench_variation)
     header()
     if args.smoke:
         sections = [
             ("figs13_14", lambda: bench_fps.run(smoke=True)),
             ("kernels", lambda: bench_kernels.run(smoke=True)),
+            ("reliability", lambda: bench_reliability.run(smoke=True)),
         ]
     else:
         sections = [
@@ -52,6 +60,7 @@ def main() -> None:
             ("tableVI", bench_variation.run),
             ("kernels", bench_kernels.run),
             ("system", bench_train_serve.run),
+            ("reliability", bench_reliability.run),
         ]
     failures = []
     for name, fn in sections:
@@ -65,6 +74,16 @@ def main() -> None:
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
     if args.json:
         common.write_json(args.json)
+    if args.smoke:
+        # serving perf trajectory across PRs (repo root), from the rows the
+        # bench_fps serving sections already emit
+        import os
+        serving = [r for r in common.rows() if r[0].startswith("serving.")]
+        if serving:
+            common.append_trajectory(
+                os.path.join(os.path.dirname(os.path.dirname(
+                    os.path.abspath(__file__))), "BENCH_serving.json"),
+                serving, label="smoke")
     if failures:
         print(f"# FAILED sections: {failures}", flush=True)
         sys.exit(1)

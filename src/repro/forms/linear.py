@@ -56,6 +56,7 @@ class FormsLinearParams:
     orig_shape: Optional[Tuple[int, ...]] = None  # conv (kh, kw, cin, cout)
     policy: str = "W"                             # conv row-ordering policy
     out_dtype: str = "float32"                    # dense dtype on decompress
+    encoding: str = "binary"                      # cell encoding (spec field)
 
     @property
     def n(self) -> int:
@@ -64,7 +65,7 @@ class FormsLinearParams:
 
 jax.tree_util.register_dataclass(
     FormsLinearParams, data_fields=["mags", "signs", "scale"],
-    meta_fields=["k", "m", "orig_shape", "policy", "out_dtype"])
+    meta_fields=["k", "m", "orig_shape", "policy", "out_dtype", "encoding"])
 
 
 # Ambient spec for call sites that cannot thread one explicitly (the model
@@ -131,7 +132,8 @@ def from_dense(w: jax.Array, spec: FormsSpec = FormsSpec()
         jnp.linalg.norm(w), 1e-12)
     params = FormsLinearParams(mags=mags, signs=signs.astype(jnp.int8),
                                scale=scale.reshape(1, -1).astype(jnp.float32),
-                               k=int(w.shape[0]), m=spec.m, policy=spec.policy)
+                               k=int(w.shape[0]), m=spec.m, policy=spec.policy,
+                               encoding=spec.encoding)
     return params, err
 
 

@@ -25,6 +25,15 @@ from repro.core.quantization import QuantSpec
 
 VALID_RULES = ("sum", "energy")
 
+# Cell-level encodings of the magnitude codes (reliability/encoding.py):
+# "binary" is the plain radix-2^cell_bits bit-slice of §III-C; "vecom" adds
+# VECOM-style reference columns + offset compensation (arXiv:2312.11042) so
+# the readout cancels column-correlated conductance variation and retention
+# drift.  The stored uint8 codes are identical for both — the encoding
+# changes only how the simulated array periphery reads them back under
+# injected faults (repro.reliability.faults).
+VALID_ENCODINGS = ("binary", "vecom")
+
 
 @dataclasses.dataclass(frozen=True)
 class FormsSpec:
@@ -48,6 +57,10 @@ class FormsSpec:
       input_bits: DAC input stream width (paper: 16).
       adc_bits: ADC resolution; None = ideal (no clipping).
 
+    Reliability (repro.reliability, DESIGN.md §6f):
+      encoding: cell-level encoding — "binary" (plain bit-slice) or "vecom"
+        (reference-column offset compensation, VECOM arXiv:2312.11042).
+
     Backend / tiling hints (kernels/ops.py dispatch):
       prefer_ref: route to the jnp oracle instead of the Pallas kernel;
         None = automatic (oracle off-TPU).
@@ -68,6 +81,8 @@ class FormsSpec:
     input_bits: int = 16
     adc_bits: Optional[int] = None
 
+    encoding: str = "binary"
+
     prefer_ref: Optional[bool] = None
     bm: int = 128
     bn: int = 128
@@ -83,6 +98,10 @@ class FormsSpec:
         if self.rule not in VALID_RULES:
             raise ValueError(
                 f"sign rule must be one of {VALID_RULES}, got {self.rule!r}")
+        if self.encoding not in VALID_ENCODINGS:
+            raise ValueError(
+                f"cell encoding must be one of {VALID_ENCODINGS}, "
+                f"got {self.encoding!r}")
         if self.bits < 1:
             raise ValueError(f"bits must be >= 1, got {self.bits}")
         if self.input_bits < 1:

@@ -17,6 +17,12 @@ with optional FORMS compression, mesh sharding and self-speculative decoding.
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --forms --mesh data=2,model=4 --fake-devices 8
 
+  # fault-tolerant serving: inject ReRAM faults into the live compressed
+  # weights, probe for logit drift every 8 rounds, auto-repair:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --forms --fault-sigma 0.1 --fault-stuck 0.001 --fault-repair \
+      --probe-every 8
+
 With ``--forms`` the weights are compressed via ``repro.forms.compress_tree``
 and the engine decodes directly on the compressed pytree (uint8 magnitudes +
 int8 fragment signs through the polarized-matmul kernel).  ``--decode-block``
@@ -37,6 +43,17 @@ device mesh (see launch/mesh.py): compressed leaves co-shard along N, KV
 caches shard slots (or page pools) over the data axes; ``--fake-devices N``
 forces N host devices (CPU demo/testing — on real fleets the device count
 comes from the runtime).
+
+Reliability (``--forms`` only; DESIGN.md §6f): ``--fault-sigma`` /
+``--fault-stuck`` / ``--fault-drift`` corrupt the live compressed weights
+with the seeded ReRAM fault model (lognormal conductance variation,
+stuck-at cells, retention drift) before serving; ``--encoding vecom``
+compresses with VECOM-style reference-column offset compensation so the
+read-back cancels column-correlated variation.  ``--fault-repair`` arms
+the health monitor: golden-prompt drift probes every ``--probe-every``
+decode rounds, per-leaf scoreboards in ``engine.stats()``, and automatic
+re-encoding of flagged leaves from the clean reference copy without
+dropping in-flight requests.
 """
 from __future__ import annotations
 
@@ -101,6 +118,31 @@ def main() -> None:
                     help="disable per-slot adaptive draft length")
     ap.add_argument("--stats-every", type=int, default=0, metavar="ROUNDS",
                     help="print pool/acceptance stats every N decode rounds")
+    ap.add_argument("--encoding", default="binary",
+                    choices=("binary", "vecom"),
+                    help="cell-level encoding of the compressed weights: "
+                         "plain bit-slice or VECOM-style reference-column "
+                         "offset compensation (reliability)")
+    ap.add_argument("--fault-sigma", type=float, default=None,
+                    help="inject lognormal conductance variation of this "
+                         "scale into the live compressed weights")
+    ap.add_argument("--fault-stuck", type=float, default=None,
+                    help="per-cell stuck-at fault probability (split evenly "
+                         "between stuck-SET and stuck-RESET)")
+    ap.add_argument("--fault-drift", type=float, default=None, metavar="T",
+                    help="retention time for drift injection "
+                         "((1+T)^-nu conductance decay)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="fault-injection RNG seed")
+    ap.add_argument("--fault-repair", action="store_true",
+                    help="arm the health monitor: probe for logit drift and "
+                         "auto-repair corrupted leaves from the reference "
+                         "copy (forms serving only)")
+    ap.add_argument("--probe-every", type=int, default=16, metavar="ROUNDS",
+                    help="decode rounds between health probes "
+                         "(with --fault-repair)")
+    ap.add_argument("--drift-threshold", type=float, default=1e-3,
+                    help="max-abs logit drift that triggers scan/repair")
     ap.add_argument("--mesh", default=None, metavar="AXES",
                     help='device mesh as "data=D,model=M" (sharded serving); '
                          "omit for single-device")
@@ -116,12 +158,19 @@ def main() -> None:
 
     from repro.forms import FormsSpec
     from repro.models.registry import build
+    from repro.reliability import FaultModel, HealthConfig
     from repro.serving.engine import Request, ServingEngine
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    spec = (FormsSpec(m=args.fragment, bits=args.bits, rule=args.sign_rule)
+    fault_args = (args.fault_sigma, args.fault_stuck, args.fault_drift)
+    wants_faults = any(v is not None for v in fault_args)
+    if (wants_faults or args.fault_repair) and not args.forms:
+        raise SystemExit("--fault-*/--encoding model ReRAM cells, which only "
+                         "exist for compressed weights: add --forms")
+    spec = (FormsSpec(m=args.fragment, bits=args.bits, rule=args.sign_rule,
+                      encoding=args.encoding)
             if args.forms else None)
     mesh = None
     if args.mesh:
@@ -146,9 +195,21 @@ def main() -> None:
                            draft_fragment=args.draft_fragment,
                            draft_layer_step=args.draft_layer_step,
                            adaptive_k=not args.no_adaptive_k,
+                           health=(HealthConfig(
+                               probe_every=args.probe_every,
+                               drift_threshold=args.drift_threshold)
+                               if args.fault_repair else None),
                            stats_every=args.stats_every)
     if engine.compression_report is not None:
-        print(f"forms: {engine.compression_report.summary()}")
+        print(f"forms: {engine.compression_report.summary()} "
+              f"(encoding={args.encoding})")
+    if wants_faults:
+        stuck = (args.fault_stuck or 0.0) / 2
+        report = engine.inject_faults(FaultModel(
+            sigma=args.fault_sigma or 0.0, p_stuck_on=stuck,
+            p_stuck_off=stuck, t=args.fault_drift or 0.0,
+            seed=args.fault_seed))
+        print(f"faults: {report.summary()}")
     if engine.paged:
         alloc = engine.page_allocator
         print(f"paged cache: {alloc.capacity} pages x {engine.page_size} "
@@ -204,7 +265,16 @@ def main() -> None:
         sp = stats["speculate"]
         parts.append(f"acceptance {sp['acceptance']:.2f} "
                      f"tok/round {sp['tokens_per_round']:.2f}")
+    if "health" in stats:
+        h = stats["health"]
+        parts.append(f"probes {h['probes']} repairs {h['repairs']} "
+                     f"drift {h['last_drift']:.2e}")
     print("stats: " + ", ".join(parts))
+    if "health" in stats:
+        for ev in stats["health"]["events"]:
+            print(f"health[{ev['round']}]: "
+                  + ", ".join(f"{k}={v}" for k, v in ev.items()
+                              if k != "round"))
 
 
 if __name__ == "__main__":

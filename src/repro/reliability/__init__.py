@@ -1,0 +1,21 @@
+"""Reliability subsystem: ReRAM fault injection, variation-resilient
+encoding, and self-healing serving (DESIGN.md §6f).
+
+* :mod:`repro.reliability.faults` — deterministic, seeded corruption of
+  compressed ``FormsLinearParams`` trees in their native uint8/int8 domain
+  (lognormal conductance variation, stuck-at cells, retention drift).
+* :mod:`repro.reliability.encoding` — the cell-level readout disciplines:
+  plain ``binary`` bit-slice vs VECOM-style ``vecom`` reference-column
+  offset compensation (selected by ``FormsSpec.encoding``).
+* :mod:`repro.reliability.health` — golden-probe drift detection,
+  per-leaf/per-shard fault scoreboards and automatic re-encoding from the
+  reference copy, hooked into the serving ``Scheduler``.
+"""
+from repro.reliability.encoding import N_REF, VALID_ENCODINGS
+from repro.reliability.faults import (FaultModel, FaultReport, LeafFaults,
+                                      inject_leaf, inject_tree)
+from repro.reliability.health import HealthConfig, HealthMonitor
+
+__all__ = ["N_REF", "VALID_ENCODINGS", "FaultModel", "FaultReport",
+           "HealthConfig", "HealthMonitor", "LeafFaults", "inject_leaf",
+           "inject_tree"]

@@ -1,0 +1,100 @@
+"""Cell-level encodings of the FORMS magnitude codes (DESIGN.md §6f).
+
+A ``bits``-bit magnitude code occupies ``bits / cell_bits`` ReRAM cells —
+one per bit-slice plane, each programmed to a conductance level in
+``[0, 2^cell_bits)`` (core/quantization.slice_to_cells).  This module is the
+host-side (numpy) twin of that slicing plus the two *readout* disciplines
+the fault injector (reliability/faults.py) simulates:
+
+* ``binary`` — the plain radix-``2^cell_bits`` readout of paper §III-C: the
+  periphery reads each cell's conductance, subtracts the nominal HRS floor
+  and reassembles the code.  Conductance variation and retention drift land
+  directly in the read levels.
+
+* ``vecom`` — VECOM-style offset compensation (Jang et al.,
+  arXiv:2312.11042): every physical bitline carries :data:`N_REF` extra
+  *reference cells* programmed to the full-scale level.  The readout
+  estimates the bitline's common multiplicative error (driver/IR-drop
+  variation shared by every cell on the line, plus the deterministic part
+  of retention drift — both column-correlated by construction, see
+  ``FaultModel.rho``) from the reference cells and divides it out before
+  reassembling codes.  At zero noise the estimate is exactly 1, so the
+  round-trip is bit-exact; under correlated variation or drift the
+  compensated readout has strictly lower error than the binary one.
+
+The stored uint8 codes are IDENTICAL under both encodings — ``encoding`` is
+metadata on :class:`~repro.forms.linear.FormsLinearParams` (set from
+``FormsSpec.encoding``) that selects the periphery model, so serving, the
+checkpoint format and the mesh sharding rules are untouched.  A note on the
+obvious alternative, VECOM's frequency-aware *level remapping*: under the
+multiplicative (lognormal) variation model the zero-conductance level is the
+only noise-free one, and the linear bit-slice already maps the most frequent
+digit (0) onto it — for magnitude-polarized codes the identity map is
+level-optimal, so the measurable wins here come from offset compensation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.forms.spec import VALID_ENCODINGS, FormsSpec
+
+__all__ = ["N_REF", "VALID_ENCODINGS", "assemble_codes", "column_gain",
+           "max_level", "num_planes", "slice_codes"]
+
+# Reference cells per physical bitline (vecom encoding).  More references
+# average down the estimate's own cell noise (var ~ 1/N_REF); four cells per
+# column is ~m/2 extra rows per fragment column — noise floor, not area cost.
+N_REF = 4
+
+
+def num_planes(spec: FormsSpec) -> int:
+    """Cells per weight — one bit-slice plane per cell (paper §III-C)."""
+    return spec.cells_per_weight
+
+
+def max_level(spec: FormsSpec) -> int:
+    """Largest programmable conductance level of one cell."""
+    return (1 << spec.cell_bits) - 1
+
+
+def slice_codes(codes: np.ndarray, spec: FormsSpec) -> np.ndarray:
+    """Magnitude codes ``(..., Kp, N)`` -> cell levels ``(C, ..., Kp, N)``.
+
+    The numpy twin of ``core.quantization.slice_to_cells`` (LSB plane
+    first); the injector corrupts these levels as conductances.
+    """
+    codes = np.asarray(codes).astype(np.int64)
+    mask = max_level(spec)
+    return np.stack([(codes >> (c * spec.cell_bits)) & mask
+                     for c in range(num_planes(spec))], axis=0)
+
+
+def assemble_codes(levels: np.ndarray, spec: FormsSpec) -> np.ndarray:
+    """Read (possibly analog) cell levels back into clipped integer codes.
+
+    ``levels``: ``(C, ..., Kp, N)`` float read-back levels.  Each plane is
+    clipped to its programmable range (the sense amplifier saturates), the
+    radix sum reassembles the magnitude and the ADC rounds onto the
+    ``spec.bits`` code grid.  Exact inverse of :func:`slice_codes` for
+    integer levels in range.
+    """
+    lmax = max_level(spec)
+    clipped = np.clip(levels, 0.0, float(lmax))
+    weights = (1 << (spec.cell_bits
+                     * np.arange(num_planes(spec), dtype=np.int64)))
+    mag = np.tensordot(weights.astype(np.float64), clipped, axes=1)
+    code = np.clip(np.rint(mag), 0, spec.levels)
+    return code.astype(np.uint8 if spec.bits <= 8 else np.int32)
+
+
+def column_gain(g_ref: np.ndarray, g_nominal: float) -> np.ndarray:
+    """VECOM offset-compensation estimate of a bitline's common gain error.
+
+    ``g_ref``: ``(N_REF, C, ..., 1, N)`` corrupted reference conductances;
+    ``g_nominal`` their common programmed value.  The estimate is the
+    geometric mean of the per-reference ratios — multiplicative errors are
+    lognormal, so the geometric mean is the unbiased log-domain average and
+    is exactly 1 when the references are uncorrupted.
+    """
+    ratio = np.maximum(np.asarray(g_ref, np.float64) / g_nominal, 1e-9)
+    return np.exp(np.mean(np.log(ratio), axis=0))

@@ -1,0 +1,315 @@
+"""Deterministic, seeded ReRAM fault injection on compressed FORMS pytrees.
+
+Production ReRAM serving must survive what analog arrays actually do
+(DESIGN.md §6f): per-cell conductance variation (lognormal, the source
+paper's Table VI model), cells stuck at G_on/G_off, retention drift over
+time, and stuck sign-indicator (1R) cells.  This module simulates one
+*write -> array physics -> read* pass over the serving artifact itself —
+the uint8 magnitude codes and int8 fragment signs of every
+:class:`~repro.forms.linear.FormsLinearParams` leaf — and hands back a tree
+of the same structure/shapes/dtypes/shardings whose codes are what the
+corrupted array would serve.
+
+Physical model, per cell (levels from reliability/encoding.py):
+
+* nominal conductance  ``g = g_min + level``  (units of one level step;
+  ``g_min`` is the HRS floor — real off-cells conduct a little);
+* variation            ``g *= exp(sigma * (rho * z_col + sqrt(1-rho^2) * z_cell))``
+  — a column-common component ``z_col`` shared by every cell on a physical
+  bitline (driver/ADC gain, IR drop) plus an i.i.d. per-cell component;
+* retention drift      ``g *= (1 + t)^(-nu_cell)``,
+  ``nu_cell = nu * exp(nu_sigma * z)`` with the same column/cell split —
+  at ``nu_sigma = 0`` drift is deterministic and fully column-common;
+* stuck-at faults      override the result with ``g_min + level_max``
+  (stuck SET) or ``g_min`` (stuck RESET), reference cells included.
+
+Read-back follows the leaf's ``encoding``: ``binary`` reassembles the raw
+levels; ``vecom`` first divides out the bitline gain estimated from the
+reference cells (encoding.column_gain).  With ``sigma = 0``, ``t = 0`` and
+no stuck cells, both read-backs reproduce the stored codes bit-exactly —
+injection at zero noise is the identity, which is what makes greedy serving
+parity under ``--fault-sigma 0`` a meaningful invariant.
+
+Everything is host-side numpy, seeded per leaf from ``(seed, crc32(path))``
+— bit-deterministic regardless of device count or mesh shape — and the
+corrupted arrays are placed back with each leaf's own sharding, so the
+transform composes with the PR-3 mesh placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.fragments import is_crossbar_weight
+from repro.core.paths import path_str as _path_str
+from repro.forms.linear import FormsLinearParams
+from repro.forms.spec import FormsSpec
+from repro.reliability import encoding as ENC
+
+__all__ = ["FaultModel", "FaultReport", "LeafFaults", "inject_leaf",
+           "inject_tree"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """One corrupted-array scenario (all knobs off by default = identity).
+
+    sigma: lognormal conductance-variation scale (source paper Table VI
+      uses 0.1 at the weight level).
+    rho: column-common fraction of the variation/drift randomness in
+      [0, 1] — the part VECOM's reference columns can cancel.
+    p_stuck_on / p_stuck_off: per-cell probability of sticking at
+      G_on (level_max) / G_off.
+    p_sign_stuck: per-fragment probability of the 1R sign indicator
+      sticking SET (sign forced to +1).
+    t: retention time since programming (units of the drift reference
+      time); 0 = freshly programmed.
+    nu: mean drift coefficient of ``(1 + t)^(-nu)``.
+    nu_sigma: lognormal spread of per-cell drift coefficients (0 = fully
+      deterministic drift).
+    g_min: HRS conductance floor in level-step units (~1/on-off-ratio).
+    seed: base RNG seed; per-leaf streams fold in crc32(path).
+    """
+
+    sigma: float = 0.0
+    rho: float = 0.6
+    p_stuck_on: float = 0.0
+    p_stuck_off: float = 0.0
+    p_sign_stuck: float = 0.0
+    t: float = 0.0
+    nu: float = 0.02
+    nu_sigma: float = 0.0
+    g_min: float = 0.015
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.rho <= 1.0:
+            raise ValueError(f"rho must be in [0, 1], got {self.rho}")
+        for name in ("sigma", "p_stuck_on", "p_stuck_off", "p_sign_stuck",
+                     "t", "nu", "nu_sigma", "g_min"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be >= 0, "
+                                 f"got {getattr(self, name)}")
+        if self.p_stuck_on + self.p_stuck_off > 1.0:
+            raise ValueError("p_stuck_on + p_stuck_off must be <= 1")
+
+    @property
+    def is_identity(self) -> bool:
+        """True when injection provably changes nothing (the zero-noise
+        round-trip invariant)."""
+        return (self.sigma == 0.0 and self.t == 0.0
+                and self.p_stuck_on == 0.0 and self.p_stuck_off == 0.0
+                and self.p_sign_stuck == 0.0)
+
+
+@dataclasses.dataclass
+class LeafFaults:
+    """Per-leaf injection accounting."""
+
+    cells: int = 0             # magnitude cells simulated
+    stuck_on: int = 0
+    stuck_off: int = 0
+    sign_flips: int = 0        # fragment signs changed by stuck indicators
+    codes_changed: int = 0     # magnitude codes that read back differently
+    mean_abs_dcode: float = 0.0
+    max_abs_dcode: int = 0
+
+
+@dataclasses.dataclass
+class FaultReport:
+    """What :func:`inject_tree` did, per leaf and in aggregate."""
+
+    model: FaultModel
+    leaves: Dict[str, LeafFaults] = dataclasses.field(default_factory=dict)
+
+    @property
+    def codes_changed(self) -> int:
+        return sum(lf.codes_changed for lf in self.leaves.values())
+
+    @property
+    def stuck_cells(self) -> int:
+        return sum(lf.stuck_on + lf.stuck_off for lf in self.leaves.values())
+
+    @property
+    def sign_flips(self) -> int:
+        return sum(lf.sign_flips for lf in self.leaves.values())
+
+    def summary(self) -> str:
+        cells = sum(lf.cells for lf in self.leaves.values())
+        return (f"{len(self.leaves)} leaves, {cells} cells: "
+                f"{self.codes_changed} codes changed, "
+                f"{self.stuck_cells} stuck cells, "
+                f"{self.sign_flips} sign flips "
+                f"(sigma={self.model.sigma:g}, rho={self.model.rho:g}, "
+                f"t={self.model.t:g})")
+
+
+def _leaf_rng(seed: int, pstr: str) -> np.random.Generator:
+    # crc32, not hash(): per-process salting would break cross-run
+    # determinism, which the repair tests (and any triage) rely on
+    return np.random.default_rng([seed, zlib.crc32(pstr.encode())])
+
+
+def _split_noise(rng: np.random.Generator, rho: float,
+                 col_shape: Tuple[int, ...], full_shape: Tuple[int, ...],
+                 n_ref: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Column-common + i.i.d. standard-normal split.
+
+    Returns ``(z_cells, z_refs)`` — the weight cells' combined draw of shape
+    ``full_shape`` and the reference cells' of shape ``(n_ref,) + col_shape``
+    — sharing ONE ``z_col`` per physical bitline (that correlation is
+    exactly what the vecom readout exploits).
+    """
+    z_col = rng.standard_normal(col_shape)
+    mix = np.sqrt(max(0.0, 1.0 - rho * rho))
+    z_cells = rho * z_col + mix * rng.standard_normal(full_shape)
+    z_refs = rho * z_col + mix * rng.standard_normal((n_ref,) + col_shape)
+    return z_cells, z_refs
+
+
+def inject_leaf(fp: FormsLinearParams, fault: FaultModel, pstr: str,
+                spec: Optional[FormsSpec] = None
+                ) -> Tuple[FormsLinearParams, LeafFaults]:
+    """Simulate one write/corrupt/read pass over a compressed leaf.
+
+    Operates in the leaf's native domain — uint8 magnitude codes and int8
+    fragment signs — and returns a leaf of identical structure (shapes,
+    dtypes, shardings, metadata) whose codes are the corrupted read-back.
+    ``spec`` supplies the quantization-grid geometry (bits / cell_bits);
+    the readout discipline comes from ``fp.encoding``.
+    """
+    spec = dataclasses.replace(spec, m=fp.m) if spec is not None \
+        else FormsSpec(m=fp.m)
+    rng = _leaf_rng(fault.seed, pstr)
+    mags = np.asarray(jax.device_get(fp.mags))
+    signs = np.asarray(jax.device_get(fp.signs))
+    stats = LeafFaults()
+
+    levels = ENC.slice_codes(mags, spec).astype(np.float64)
+    lmax = float(ENC.max_level(spec))
+    stats.cells = levels.size
+    # one physical bitline per (plane, ..., output column): broadcasts over
+    # the Kp axis, distinct per plane / stacked layer / expert
+    col_shape = levels.shape[:-2] + (1, levels.shape[-1])
+
+    g = fault.g_min + levels
+    g_ref = np.full((ENC.N_REF,) + col_shape, fault.g_min + lmax)
+    if fault.sigma > 0.0:
+        z_cells, z_refs = _split_noise(rng, fault.rho, col_shape,
+                                       levels.shape, ENC.N_REF)
+        g = g * np.exp(fault.sigma * z_cells)
+        g_ref = g_ref * np.exp(fault.sigma * z_refs)
+    if fault.t > 0.0 and fault.nu > 0.0:
+        nu_c, nu_r = fault.nu, fault.nu
+        if fault.nu_sigma > 0.0:
+            z_cells, z_refs = _split_noise(rng, fault.rho, col_shape,
+                                           levels.shape, ENC.N_REF)
+            nu_c = fault.nu * np.exp(fault.nu_sigma * z_cells)
+            nu_r = fault.nu * np.exp(fault.nu_sigma * z_refs)
+        g = g * (1.0 + fault.t) ** -nu_c
+        g_ref = g_ref * (1.0 + fault.t) ** -nu_r
+    if fault.p_stuck_on > 0.0 or fault.p_stuck_off > 0.0:
+        u = rng.uniform(size=levels.shape)
+        on = u < fault.p_stuck_on
+        off = (~on) & (u < fault.p_stuck_on + fault.p_stuck_off)
+        g = np.where(on, fault.g_min + lmax, np.where(off, fault.g_min, g))
+        stats.stuck_on = int(on.sum())
+        stats.stuck_off = int(off.sum())
+        # reference cells are cells too — a stuck reference breaks its
+        # column's compensation, which is the health monitor's problem
+        u_ref = rng.uniform(size=g_ref.shape)
+        g_ref = np.where(u_ref < fault.p_stuck_on, fault.g_min + lmax, g_ref)
+        g_ref = np.where(
+            (u_ref >= fault.p_stuck_on)
+            & (u_ref < fault.p_stuck_on + fault.p_stuck_off),
+            fault.g_min, g_ref)
+
+    if fp.encoding == "vecom":
+        gain = ENC.column_gain(g_ref, fault.g_min + lmax)
+        read = g / gain - fault.g_min
+    else:
+        read = g - fault.g_min
+    new_mags = ENC.assemble_codes(read, spec)
+
+    new_signs = signs
+    if fault.p_sign_stuck > 0.0:
+        stuck = rng.uniform(size=signs.shape) < fault.p_sign_stuck
+        new_signs = np.where(stuck, np.int8(1), signs)
+        stats.sign_flips = int((new_signs != signs).sum())
+
+    dcode = np.abs(new_mags.astype(np.int64) - mags.astype(np.int64))
+    stats.codes_changed = int((dcode > 0).sum())
+    stats.mean_abs_dcode = float(dcode.mean()) if dcode.size else 0.0
+    stats.max_abs_dcode = int(dcode.max()) if dcode.size else 0
+    out = dataclasses.replace(
+        fp, mags=_put_like(new_mags.astype(mags.dtype), fp.mags),
+        signs=_put_like(new_signs.astype(signs.dtype), fp.signs))
+    return out, stats
+
+
+def _put_like(arr: np.ndarray, like: jax.Array) -> jax.Array:
+    """Place a host array back onto its predecessor's devices/sharding."""
+    sh = getattr(like, "sharding", None)
+    if sh is not None and hasattr(sh, "spec"):   # mesh-committed leaf
+        return jax.device_put(arr, sh)
+    return jax.device_put(arr)
+
+
+def inject_tree(
+    params: Any,
+    fault: FaultModel,
+    spec: Optional[FormsSpec] = None,
+    paths: Optional[Iterable[str]] = None,
+    predicate: Callable[[str, Tuple[int, ...]], bool] = is_crossbar_weight,
+    allow_dense: bool = False,
+) -> Tuple[Any, FaultReport]:
+    """Corrupt every compressed leaf of a params pytree; returns
+    ``(corrupted, report)``.
+
+    ``paths`` (optional) restricts injection to the named leaves — the
+    single-leaf repair tests and targeted chaos experiments use it; every
+    other leaf passes through untouched (but still by reference, so the
+    output tree shares uncorrupted buffers with the input).
+
+    Fault injection models ReRAM cells, and cells only exist for compressed
+    leaves: a crossbar-mappable leaf that is still dense (``predicate``
+    matches but the leaf is a plain array) means the tree was never
+    compressed, and silently skipping it would report a resilience the
+    deployment does not have.  That is an error unless ``allow_dense=True``.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, FormsLinearParams))
+    wanted = set(paths) if paths is not None else None
+    report = FaultReport(model=fault)
+    new_leaves = []
+    matched = set()
+    for path, leaf in flat:
+        pstr = _path_str(path)
+        if isinstance(leaf, FormsLinearParams):
+            if wanted is not None and pstr not in wanted:
+                new_leaves.append(leaf)
+                continue
+            matched.add(pstr)
+            new_leaf, stats = inject_leaf(leaf, fault, pstr, spec=spec)
+            report.leaves[pstr] = stats
+            new_leaves.append(new_leaf)
+            continue
+        if (not allow_dense and hasattr(leaf, "ndim")
+                and predicate(pstr, tuple(leaf.shape))):
+            raise ValueError(
+                f"fault injection on a tree with a DENSE crossbar leaf "
+                f"{pstr!r} (shape {tuple(leaf.shape)}): ReRAM faults only "
+                f"exist for compressed leaves — run "
+                f"repro.forms.compress_tree first (serve with forms=True / "
+                f"--forms), or pass allow_dense=True to knowingly leave "
+                f"dense leaves un-faulted")
+        new_leaves.append(leaf)
+    if wanted is not None and wanted - matched:
+        raise ValueError(
+            f"paths not found as compressed leaves: {sorted(wanted - matched)}"
+            f" — see repro.forms.compressed_paths() for the valid names")
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), report

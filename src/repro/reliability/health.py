@@ -1,0 +1,297 @@
+"""Serving-time health monitoring and self-healing for corrupted arrays.
+
+ReRAM faults (reliability/faults.py) corrupt the *weights the engine is
+serving*, silently: requests keep completing, the logits are just wrong.
+This module gives the serving engine the missing feedback loop
+(DESIGN.md §6f):
+
+* **Golden probes** — at engine build, a :class:`HealthMonitor` captures
+  the last-token logits of a few fixed probe prompts from the clean params
+  (the jitted probe reuses the engine's ambient spec + mesh context, so a
+  probe is one tiny forward, not a new serving path).  At run start and
+  every ``probe_every`` decode rounds the scheduler re-runs the probes; the
+  max-abs logit drift against the golden copy is the health signal.
+* **Scoreboard** — on drift past ``drift_threshold`` the monitor scans the
+  compressed leaves against its host-side reference copy (the "reference
+  checkpoint": the clean uint8/int8 planes device_get at build time) and
+  scores each leaf — and, on a mesh, each per-device shard of each leaf —
+  by mismatched codes/signs.  Everything lands in ``engine.stats()``.
+* **Repair** — with ``auto_repair`` the monitor re-encodes every flagged
+  leaf: the reference planes are ``device_put`` back with the live leaf's
+  own sharding and the runner's params are rebound.  Params are NOT donated
+  by the jitted steps (only the cache is), and the repaired tree has
+  identical shapes/dtypes/shardings — so repair never retraces, never
+  touches the KV cache, and in-flight requests continue on the repaired
+  weights at their existing positions.  Re-encoding one leaf moves only
+  that leaf's planes — the paper's fine-grained fragments are why this is
+  cheap (a fragment column is the natural repair unit; §6f).
+
+The whole-leaf granularity here is deliberately the coarse end: the
+scoreboard already localizes per shard, and the reference copy is indexed
+by path, so finer repair units (per fragment column) drop in without
+changing the scheduler contract.
+
+Replica note: in single-controller SPMD there is no per-replica params copy
+to evict — every device holds a shard of THE params tree.  "Evict the
+replica" therefore reduces to re-encoding the flagged shards in place,
+which is what repair does; the per-shard scoreboard is what names the bad
+device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.paths import path_str
+from repro.distributed.sharding import parallel_context
+from repro.forms.linear import FormsLinearParams, default_spec
+from repro.forms.tree import compressed_paths
+from repro.reliability.faults import FaultModel, FaultReport, inject_tree
+
+__all__ = ["HealthConfig", "HealthMonitor"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Knobs of the serving-time health loop.
+
+    probe_every: decode rounds between probe passes (0 = probe only at
+      run start).
+    drift_threshold: max-abs logit drift that flags the params as
+      corrupted (greedy serving tolerates tiny numeric drift; stuck cells
+      produce drifts orders of magnitude past any threshold like this).
+    auto_repair: re-encode flagged leaves from the reference copy as soon
+      as the scan localizes them (False = detect and score only).
+    probe_tokens: length of each synthetic probe prompt.
+    n_probes: number of probe prompts.
+    probe_seed: RNG seed for the synthetic probe prompts.
+    """
+
+    probe_every: int = 16
+    drift_threshold: float = 1e-3
+    auto_repair: bool = True
+    probe_tokens: int = 8
+    n_probes: int = 2
+    probe_seed: int = 1234
+
+    def __post_init__(self):
+        if self.probe_every < 0:
+            raise ValueError(f"probe_every must be >= 0, "
+                             f"got {self.probe_every}")
+        if self.drift_threshold <= 0:
+            raise ValueError(f"drift_threshold must be > 0, "
+                             f"got {self.drift_threshold}")
+        if self.probe_tokens < 1 or self.n_probes < 1:
+            raise ValueError("need at least one probe prompt of length >= 1")
+
+
+class HealthMonitor:
+    """Golden-probe drift detection + reference-copy repair for one engine.
+
+    Built by :class:`~repro.serving.engine.ServingEngine` AFTER compression
+    and mesh placement, so ``params`` here is exactly the tree the runner
+    serves — the golden logits and the reference planes describe the real
+    serving artifact, not a pre-sharding staging copy.
+    """
+
+    def __init__(self, model: Any, params: Any, config: HealthConfig, *,
+                 spec: Any = None, ctx: Any = None):
+        if tuple(model.input_fields) != ("tokens",):
+            raise ValueError(
+                f"health monitoring probes token prompts, but family "
+                f"{model.config.family!r} consumes inputs "
+                f"{model.input_fields} — serve it without health=..., or "
+                f"extend HealthMonitor with a probe-batch builder for it")
+        self.config = config
+        self.model = model
+        self.spec = spec
+        self.ctx = ctx
+        self.probes = 0
+        self.repairs = 0
+        self.last_drift = 0.0
+        self.flagged: Dict[str, Dict[str, Any]] = {}   # last scan's scoreboard
+        self.events: List[Dict[str, Any]] = []
+        self._chaos: List[Tuple[int, FaultModel, Optional[Sequence[str]]]] = []
+        self.fault_reports: List[FaultReport] = []
+
+        rng = np.random.default_rng(config.probe_seed)
+        vocab = int(model.config.vocab_size)
+        self._prompts = [
+            rng.integers(0, vocab, size=(1, config.probe_tokens),
+                         dtype=np.int64).astype(np.int32)
+            for _ in range(config.n_probes)]
+
+        def _last_logits(p, toks):
+            with default_spec(self.spec):
+                logits, _ = model.forward(p, {"tokens": toks})
+            return logits[:, -1].astype(np.float32)
+
+        self._probe_fn = jax.jit(_last_logits)
+        # reference checkpoint: host copies of the clean integer planes.
+        # scale/float metadata is NOT corruptible by the fault model, so the
+        # reference stays a few uint8/int8 planes, not a full params copy.
+        self._reference: Dict[str, Dict[str, np.ndarray]] = {}
+        for path, leaf in self._compressed_items(params):
+            self._reference[path] = {
+                "mags": np.asarray(jax.device_get(leaf.mags)),
+                "signs": np.asarray(jax.device_get(leaf.signs))}
+        if not self._reference:
+            raise ValueError(
+                "health monitoring needs a compressed params tree (no "
+                "FormsLinearParams leaves found) — build the engine with "
+                "forms=True / spec=..., or drop health=...")
+        self._golden = [np.asarray(self._run_probe(params, t))
+                        for t in self._prompts]
+
+    # ------------------------------------------------------------------
+    # probes
+    # ------------------------------------------------------------------
+
+    def _run_probe(self, params: Any, toks: np.ndarray) -> np.ndarray:
+        with parallel_context(self.ctx):
+            return np.asarray(self._probe_fn(params, toks))
+
+    def probe(self, params: Any) -> float:
+        """Max-abs last-token logit drift across the probe prompts."""
+        self.probes += 1
+        drift = 0.0
+        for toks, golden in zip(self._prompts, self._golden):
+            cur = self._run_probe(params, toks)
+            drift = max(drift, float(np.max(np.abs(cur - golden))))
+        self.last_drift = drift
+        return drift
+
+    # ------------------------------------------------------------------
+    # scan / scoreboard
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _compressed_items(params: Any):
+        return compressed_paths(params).items()
+
+    def scan(self, params: Any) -> Dict[str, Dict[str, Any]]:
+        """Compare every compressed leaf (and each of its per-device
+        shards) against the reference copy; returns and records the
+        scoreboard of corrupted leaves."""
+        board: Dict[str, Dict[str, Any]] = {}
+        for path, leaf in self._compressed_items(params):
+            ref = self._reference[path]
+            mags = np.asarray(jax.device_get(leaf.mags))
+            signs = np.asarray(jax.device_get(leaf.signs))
+            bad_codes = int((mags != ref["mags"]).sum())
+            bad_signs = int((signs != ref["signs"]).sum())
+            if not bad_codes and not bad_signs:
+                continue
+            entry: Dict[str, Any] = {
+                "bad_codes": bad_codes, "bad_signs": bad_signs,
+                "frac_codes": bad_codes / max(1, mags.size)}
+            # per-replica view: score each device's addressable shard
+            # against the same index window of the reference plane — on a
+            # mesh this names WHICH device serves corrupted rows/columns
+            replicas: Dict[str, int] = {}
+            for shard in leaf.mags.addressable_shards:
+                n_bad = int((np.asarray(shard.data)
+                             != ref["mags"][shard.index]).sum())
+                if n_bad:
+                    replicas[str(shard.device)] = n_bad
+            entry["replicas"] = replicas
+            board[path] = entry
+        self.flagged = board
+        return board
+
+    # ------------------------------------------------------------------
+    # repair
+    # ------------------------------------------------------------------
+
+    def repair(self, params: Any, paths: Sequence[str]) -> Any:
+        """Re-encode ``paths`` from the reference copy; returns the
+        repaired tree (shared structure, only flagged leaves replaced —
+        shapes/dtypes/shardings identical, so rebinding it into a live
+        runner never retraces)."""
+        wanted = set(paths)
+        missing = wanted - set(self._reference)
+        if missing:
+            raise ValueError(f"no reference copy for {sorted(missing)} — "
+                             f"known leaves: {sorted(self._reference)}")
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            params, is_leaf=lambda x: isinstance(x, FormsLinearParams))
+        leaves = []
+        for path, leaf in flat:
+            p = path_str(path)
+            if p in wanted:
+                ref = self._reference[p]
+                leaf = dataclasses.replace(
+                    leaf,
+                    mags=_put_like(ref["mags"], leaf.mags),
+                    signs=_put_like(ref["signs"], leaf.signs))
+            leaves.append(leaf)
+        self.repairs += len(wanted)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    # ------------------------------------------------------------------
+    # chaos scheduling (tests / demos: faults that strike mid-run)
+    # ------------------------------------------------------------------
+
+    def schedule_fault(self, round_: int, fault: FaultModel,
+                       paths: Optional[Sequence[str]] = None) -> None:
+        """Arrange for ``fault`` to strike at decode round ``round_`` of the
+        next :meth:`tick`-driven run — chaos injection while requests are
+        in flight."""
+        self._chaos.append((int(round_), fault, paths))
+
+    def _fire_chaos(self, runner: Any, round_: int) -> None:
+        due = [c for c in self._chaos if c[0] <= round_]
+        self._chaos = [c for c in self._chaos if c[0] > round_]
+        for _, fault, paths in due:
+            runner.params, report = inject_tree(runner.params, fault,
+                                                spec=self.spec, paths=paths)
+            self.fault_reports.append(report)
+            self.events.append({"round": round_, "event": "chaos",
+                                "detail": report.summary()})
+
+    # ------------------------------------------------------------------
+    # the scheduler hook
+    # ------------------------------------------------------------------
+
+    def tick(self, runner: Any, round_: int) -> None:
+        """One health pass: fire due chaos faults, probe, and — past the
+        drift threshold — scan, score, and (``auto_repair``) re-encode the
+        flagged leaves into the live runner."""
+        self._fire_chaos(runner, round_)
+        drift = self.probe(runner.params)
+        if drift <= self.config.drift_threshold:
+            return
+        t0 = time.perf_counter()
+        board = self.scan(runner.params)
+        self.events.append({
+            "round": round_, "event": "drift", "drift": drift,
+            "leaves": sorted(board)})
+        if not self.config.auto_repair or not board:
+            return
+        runner.params = self.repair(runner.params, sorted(board))
+        drift_after = self.probe(runner.params)
+        self.events.append({
+            "round": round_, "event": "repair", "leaves": sorted(board),
+            "drift_after": drift_after,
+            "ms": (time.perf_counter() - t0) * 1e3})
+
+    def stats(self) -> Dict[str, Any]:
+        """The ``engine.stats()["health"]`` payload."""
+        return {
+            "probes": self.probes,
+            "repairs": self.repairs,
+            "last_drift": self.last_drift,
+            "flagged": self.flagged,
+            "events": list(self.events),
+        }
+
+
+def _put_like(arr: np.ndarray, like: jax.Array) -> jax.Array:
+    sh = getattr(like, "sharding", None)
+    if sh is not None and hasattr(sh, "spec"):
+        return jax.device_put(arr, sh)
+    return jax.device_put(arr)

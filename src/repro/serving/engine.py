@@ -329,12 +329,14 @@ class Scheduler:
     def __init__(self, runner: ModelRunner, *, slots: int, max_len: int,
                  allocator: Optional[KV.PageAllocator] = None,
                  prefix: Optional[KV.PrefixCache] = None,
+                 health: Optional[Any] = None,
                  log_every: int = 0):
         self.runner = runner
         self.slots = slots
         self.max_len = max_len
         self.allocator = allocator
         self.prefix = prefix
+        self.health = health    # reliability.health.HealthMonitor (or None)
         self.paged = allocator is not None
         self.log_every = int(log_every)  # decode rounds between stat lines
         self.rounds = 0
@@ -479,6 +481,11 @@ class Scheduler:
                     if queue and queue[0] is head and active[s] is None:
                         return
 
+        # health pass BEFORE any prefill: faults injected while the engine
+        # sat idle are repaired before they can poison KV pages, so a
+        # repaired run is greedy-identical to a clean one end to end
+        if self.health is not None:
+            self.health.tick(self.runner, self.rounds)
         admit_idle()
 
         while any(a is not None for a in active):
@@ -516,6 +523,13 @@ class Scheduler:
                     # counts[s]; rows beyond it are dead by the masks)
                     cur[s] = out[counts[s] - 1, s]
                     slot_pos[s] += int(counts[s])
+            # periodic health pass between rounds: in-flight requests keep
+            # their slots, pages and positions across a repair — only the
+            # runner's params binding changes (same shapes/shardings, no
+            # retrace), so nothing is dropped
+            if (self.health is not None and self.health.config.probe_every
+                    and self.rounds % self.health.config.probe_every == 0):
+                self.health.tick(self.runner, self.rounds)
             self._log_round(sum(a is not None for a in active))
             admit_idle()
         return done
@@ -535,6 +549,9 @@ class Scheduler:
             sp = self.runner.spec_stats()
             parts.append(f"accept {sp['acceptance']:.2f} "
                          f"tok/round {sp['tokens_per_round']:.2f}")
+        if self.health is not None:
+            parts.append(f"drift {self.health.last_drift:.2e} "
+                         f"repairs {self.health.repairs}")
         print("[serve] " + ", ".join(parts), flush=True)
 
 
@@ -551,7 +568,15 @@ class ServingEngine:
     DESIGN.md §6e).  Greedy speculative output is token-identical to plain
     decoding; dropping-MoE families share bulk prefill's caveat — the
     verify routes B*(K+1) tokens per step, so identity needs a capacity
-    that drops neither path's tokens."""
+    that drops neither path's tokens.
+
+    ``health=HealthConfig(...)`` (compressed trees only) arms the
+    reliability loop of DESIGN.md §6f: golden-probe drift detection every
+    ``probe_every`` rounds plus automatic re-encoding of corrupted leaves
+    from the build-time reference copy — fault-tolerant serving that never
+    drops in-flight requests.  ``engine.inject_faults(FaultModel(...))``
+    corrupts the live params for experiments; ``stats()["health"]`` is the
+    scoreboard."""
 
     def __init__(self, model: Model, params: Any, *, max_len: int = 512,
                  batch_slots: int = 8, forms: bool = False,
@@ -568,6 +593,7 @@ class ServingEngine:
                  draft_fragment: Optional[int] = None,
                  draft_layer_step: int = 1,
                  adaptive_k: bool = True,
+                 health: Optional[Any] = None,
                  stats_every: int = 0):
         self.model = model
         self.cfg = model.config
@@ -666,9 +692,18 @@ class ServingEngine:
                                       ctx=self.ctx, decode_block=decode_block,
                                       donate=donate, rng_seed=rng_seed,
                                       cache_shardings=self.cache_shardings)
+        # the health monitor is built LAST, over the exact tree the runner
+        # serves (post-compression, post-mesh-placement) — its golden
+        # logits and reference planes describe the real serving artifact
+        self.health = None
+        if health is not None:
+            from repro.reliability.health import HealthMonitor
+            self.health = HealthMonitor(model, self.runner.params, health,
+                                        spec=self.spec, ctx=self.ctx)
         self.scheduler = Scheduler(self.runner, slots=batch_slots,
                                    max_len=max_len, allocator=allocator,
-                                   prefix=prefix, log_every=stats_every)
+                                   prefix=prefix, health=self.health,
+                                   log_every=stats_every)
 
     # --- delegation (the engine surface tests/benches/launchers consume) ---
 
@@ -718,7 +753,25 @@ class ServingEngine:
             out["prefix_hits"] = self.prefix_cache.hits
         if hasattr(self.runner, "spec_stats"):
             out["speculate"] = self.runner.spec_stats()
+        if self.health is not None:
+            out["health"] = self.health.stats()
         return out
+
+    def inject_faults(self, fault: Any, paths: Optional[List[str]] = None
+                      ) -> Any:
+        """Corrupt the LIVE serving params with ``fault`` (a
+        ``reliability.faults.FaultModel``); returns the ``FaultReport``.
+
+        The health monitor's golden/reference copies were captured at
+        build, before any injection — so a subsequent probe sees exactly
+        the drift this corruption causes, and repair restores the clean
+        tree.  Rebinding ``runner.params`` never retraces (same shapes,
+        dtypes and shardings; params are not donated).
+        """
+        from repro.reliability.faults import inject_tree
+        self.runner.params, report = inject_tree(
+            self.runner.params, fault, spec=self.spec, paths=paths)
+        return report
 
     def prefill_slot(self, slot: int, prompt: np.ndarray,
                      temperature: float = 0.0,

@@ -1,0 +1,262 @@
+"""Reliability subsystem: fault injection exactness/determinism, the vecom
+encoding's variation resilience, and self-healing serving (DESIGN.md §6f).
+
+The mesh variant of the repair test runs in a subprocess with 8 fake host
+devices (tests/_sharded_child.py check_repair), like the sharded serving
+suite.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.forms import FormsSpec, compress_tree, compressed_paths, \
+    from_dense, to_dense
+from repro.models.registry import build
+from repro.reliability import (FaultModel, HealthConfig, HealthMonitor,
+                               inject_leaf, inject_tree)
+from repro.serving.engine import Request, ServingEngine
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _tiny_model():
+    cfg = dataclasses.replace(get_reduced("yi-9b"), num_layers=2, d_model=32,
+                              num_heads=2, num_kv_heads=2, head_dim=16,
+                              d_ff=64, vocab_size=64, dtype="float32")
+    return build(cfg)
+
+
+def _requests(n=3, new=8):
+    return [Request(uid=i, prompt=np.array([1 + i, 2, 3]), max_new_tokens=new)
+            for i in range(n)]
+
+
+def _tokens(results):
+    return {r.uid: r.tokens for r in results}
+
+
+@pytest.fixture(scope="module")
+def leaf_and_dense():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    fp, _ = from_dense(w, FormsSpec(m=8))
+    return fp, w
+
+
+# ---------------------------------------------------------------------------
+# injector: exactness, determinism, error surface
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("encoding", ["binary", "vecom"])
+def test_zero_noise_injection_is_identity(leaf_and_dense, encoding):
+    _, w = leaf_and_dense
+    fp, _ = from_dense(w, FormsSpec(m=8, encoding=encoding))
+    out, rep = inject_leaf(fp, FaultModel(), "w")
+    assert rep.codes_changed == 0 and rep.stuck_on == rep.stuck_off == 0
+    np.testing.assert_array_equal(np.asarray(out.mags), np.asarray(fp.mags))
+    np.testing.assert_array_equal(np.asarray(out.signs),
+                                  np.asarray(fp.signs))
+
+
+def test_injection_is_deterministic_per_seed_and_path(leaf_and_dense):
+    fp, _ = leaf_and_dense
+    fm = FaultModel(sigma=0.1, p_stuck_on=0.01, seed=7)
+    a, _ = inject_leaf(fp, fm, "blocks/attn/wq")
+    b, _ = inject_leaf(fp, fm, "blocks/attn/wq")
+    np.testing.assert_array_equal(np.asarray(a.mags), np.asarray(b.mags))
+    # a different leaf path (or seed) draws an independent stream
+    c, _ = inject_leaf(fp, fm, "blocks/attn/wk")
+    d, _ = inject_leaf(fp, dataclasses.replace(fm, seed=8), "blocks/attn/wq")
+    assert not np.array_equal(np.asarray(a.mags), np.asarray(c.mags))
+    assert not np.array_equal(np.asarray(a.mags), np.asarray(d.mags))
+
+
+def test_vecom_cancels_deterministic_drift_exactly(leaf_and_dense):
+    _, w = leaf_and_dense
+    fm = FaultModel(t=1000.0, nu=0.05)     # nu_sigma=0: fully column-common
+    fpb, _ = from_dense(w, FormsSpec(m=8))
+    fpv, _ = from_dense(w, FormsSpec(m=8, encoding="vecom"))
+    _, rep_b = inject_leaf(fpb, fm, "w")
+    _, rep_v = inject_leaf(fpv, fm, "w")
+    assert rep_b.codes_changed > 0          # binary read-back drifts
+    assert rep_v.codes_changed == 0         # reference columns cancel it
+
+
+def test_vecom_beats_binary_under_correlated_variation(leaf_and_dense):
+    _, w = leaf_and_dense
+    fm = FaultModel(sigma=0.15, rho=0.9, seed=3)
+    fpb, _ = from_dense(w, FormsSpec(m=8))
+    fpv, _ = from_dense(w, FormsSpec(m=8, encoding="vecom"))
+    ob, rb = inject_leaf(fpb, fm, "w")
+    ov, rv = inject_leaf(fpv, fm, "w")
+    err = lambda o: float(np.abs(np.asarray(to_dense(o))
+                                 - np.asarray(w)).mean())
+    assert rv.mean_abs_dcode < rb.mean_abs_dcode
+    assert err(ov) < err(ob)
+
+
+def test_stuck_cells_are_counted_and_corrupt_codes(leaf_and_dense):
+    fp, _ = leaf_and_dense
+    out, rep = inject_leaf(fp, FaultModel(p_stuck_on=0.05, p_stuck_off=0.05,
+                                          p_sign_stuck=0.5, seed=1), "w")
+    assert rep.stuck_on > 0 and rep.stuck_off > 0
+    assert rep.codes_changed > 0 and rep.max_abs_dcode > 0
+    assert rep.sign_flips > 0
+    assert np.all(np.asarray(out.signs)[np.asarray(fp.signs) == 1] == 1)
+
+
+def test_inject_tree_restricts_to_paths_and_rejects_unknown():
+    m = _tiny_model()
+    params, _ = compress_tree(m.init(jax.random.PRNGKey(0)), FormsSpec(m=8))
+    target = sorted(compressed_paths(params))[0]
+    out, rep = inject_tree(params, FaultModel(p_stuck_on=0.1, seed=2),
+                           paths=[target])
+    assert list(rep.leaves) == [target]
+    for path, leaf in compressed_paths(out).items():
+        same = np.array_equal(np.asarray(leaf.mags),
+                              np.asarray(compressed_paths(params)[path].mags))
+        assert same == (path != target)
+    with pytest.raises(ValueError, match="compressed_paths"):
+        inject_tree(params, FaultModel(), paths=["blocks/attn/nope"])
+
+
+def test_inject_tree_raises_on_dense_crossbar_leaves():
+    m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="DENSE crossbar leaf"):
+        inject_tree(params, FaultModel(sigma=0.1))
+    # the explicit opt-out documents the skip instead of silently passing
+    out, rep = inject_tree(params, FaultModel(sigma=0.1), allow_dense=True)
+    assert not rep.leaves
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fault_model_and_spec_validation():
+    with pytest.raises(ValueError, match="rho"):
+        FaultModel(rho=1.5)
+    with pytest.raises(ValueError, match="sigma"):
+        FaultModel(sigma=-0.1)
+    with pytest.raises(ValueError, match="p_stuck_on"):
+        FaultModel(p_stuck_on=0.8, p_stuck_off=0.8)
+    with pytest.raises(ValueError, match="encoding"):
+        FormsSpec(encoding="gray")
+    # the encoding rides the compressed leaf as metadata
+    fp, _ = from_dense(jax.random.normal(jax.random.PRNGKey(1), (16, 8)),
+                       FormsSpec(m=8, encoding="vecom"))
+    assert fp.encoding == "vecom"
+    assert FaultModel().is_identity and not FaultModel(sigma=0.1).is_identity
+
+
+# ---------------------------------------------------------------------------
+# serving: zero-noise parity, detect + repair, chaos mid-run
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served_baseline():
+    m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, max_len=64, batch_slots=4, forms=True,
+                        page_size=8)
+    return m, params, _tokens(eng.run(_requests()))
+
+
+def test_sigma_zero_serving_token_identical(served_baseline):
+    m, params, want = served_baseline
+    eng = ServingEngine(m, params, max_len=64, batch_slots=4, forms=True,
+                        page_size=8,
+                        health=HealthConfig(probe_every=1))
+    rep = eng.inject_faults(FaultModel(sigma=0.0, seed=1))
+    assert rep.codes_changed == 0
+    assert _tokens(eng.run(_requests())) == want
+    h = eng.stats()["health"]
+    assert h["probes"] > 0 and h["repairs"] == 0 and h["last_drift"] == 0.0
+
+
+def test_stuck_faults_flagged_and_repaired_within_one_probe(served_baseline):
+    m, params, want = served_baseline
+    eng = ServingEngine(m, params, max_len=64, batch_slots=4, forms=True,
+                        page_size=8,
+                        health=HealthConfig(probe_every=1,
+                                            drift_threshold=1e-3))
+    leaf = sorted(compressed_paths(eng.params))[1]
+    rep = eng.inject_faults(FaultModel(p_stuck_on=0.05, seed=2),
+                            paths=[leaf])
+    assert rep.codes_changed > 0
+    assert _tokens(eng.run(_requests())) == want
+    h = eng.stats()["health"]
+    # the run-start probe (round 0) flags the leaf before any prefill...
+    drift_events = [e for e in h["events"] if e["event"] == "drift"]
+    assert drift_events and drift_events[0]["round"] == 0
+    assert drift_events[0]["leaves"] == [leaf]
+    assert h["flagged"][leaf]["bad_codes"] > 0
+    # ...and repair restores a drift-free serving tree
+    assert h["repairs"] == 1 and h["last_drift"] <= 1e-3
+
+
+def test_chaos_fault_mid_run_completes_all_requests(served_baseline):
+    m, params, _ = served_baseline
+    eng = ServingEngine(m, params, max_len=64, batch_slots=2, forms=True,
+                        page_size=8,
+                        health=HealthConfig(probe_every=1,
+                                            drift_threshold=1e-3))
+    leaf = sorted(compressed_paths(eng.params))[0]
+    # the fault strikes between decode rounds, with requests in flight
+    eng.health.schedule_fault(2, FaultModel(p_stuck_on=0.1, seed=4),
+                              paths=[leaf])
+    reqs = _requests(n=4, new=16)
+    out = _tokens(eng.run(reqs))
+    # nothing is dropped: every request completes its full budget
+    assert sorted(out) == [0, 1, 2, 3]
+    assert all(len(toks) == 16 for toks in out.values())
+    h = eng.stats()["health"]
+    assert [e["event"] for e in h["events"]].count("chaos") == 1
+    assert h["repairs"] >= 1 and h["last_drift"] <= 1e-3
+
+
+def test_health_requires_compressed_tree_and_surfaces_stats():
+    m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="compressed params tree"):
+        HealthMonitor(m, params, HealthConfig())
+    with pytest.raises(ValueError, match="probe_every"):
+        HealthConfig(probe_every=-1)
+    eng = ServingEngine(m, params, max_len=64, batch_slots=2, forms=True,
+                        page_size=8, health=HealthConfig())
+    st = eng.stats()["health"]
+    assert set(st) == {"probes", "repairs", "last_drift", "flagged",
+                       "events"}
+    # engines without health keep their stats surface unchanged
+    plain = ServingEngine(m, params, max_len=64, batch_slots=2, forms=True)
+    assert "health" not in plain.stats()
+
+
+def test_monitor_repair_rejects_unknown_leaf():
+    m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, max_len=64, batch_slots=2, forms=True,
+                        health=HealthConfig())
+    with pytest.raises(ValueError, match="no reference copy"):
+        eng.health.repair(eng.params, ["blocks/attn/nope"])
+
+
+def test_mesh_repair_on_eight_fake_devices():
+    """Stuck-at faults on a mesh-sharded leaf: scoreboard names devices,
+    repair preserves NamedShardings, serving returns to parity (subprocess
+    with XLA-forced fake devices, like the sharded serving suite)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "_sharded_child.py"),
+         "repair", "8"],
+        capture_output=True, text=True, timeout=560, env=env, cwd=ROOT)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "repair ok" in proc.stdout

@@ -315,3 +315,57 @@ def test_engine_stats_report_pool_occupancy():
     assert pg["capacity"] == 8 and pg["free"] == 8 and pg["used"] == 0
     assert pg["high_water"] >= 2     # two 1-page requests in flight
     assert "speculate" not in st
+
+
+def test_prefix_refcounts_under_forced_page_release():
+    """The repair/teardown path releases a slot's pages while a sharer may
+    still hold refcounts on the prefix pages: the entry must survive the
+    first holder's release and die only with its last holder."""
+    a = KV.PageAllocator(9)              # 8 usable + scratch
+    pc = KV.PrefixCache(4)
+    prompt = np.arange(8, dtype=np.int32)    # exactly 2 full 4-row pages
+    owner = a.alloc(3)                   # prefix pages + a decode tail page
+    pc.register(prompt, owner)
+    shared = pc.match(prompt)            # a second request shares the prefix
+    assert shared == owner[:2] and pc.hits == 1
+    a.share(shared)
+    assert a.stats()["shared"] == 2
+    # forced teardown of the ORIGINAL holder: only the unshared tail page
+    # frees; the refcounted prefix pages stay live, so the entry survives
+    freed = a.release(owner)
+    pc.evict(freed)
+    assert freed == [owner[2]]
+    assert pc.match(prompt) == owner[:2]
+    assert a.stats()["shared"] == 0 and a.stats()["used"] == 2
+    # the sharer's teardown frees the prefix pages and kills the entry
+    freed = a.release(shared)
+    pc.evict(freed)
+    assert sorted(freed) == sorted(owner[:2])
+    assert pc.match(prompt) == []
+    st = a.stats()
+    assert st["used"] == 0 and st["free"] == st["capacity"] == 8
+    assert st["high_water"] == 3
+
+
+def test_scheduler_forced_release_resets_tables_and_readmits():
+    """Forced slot teardown (the primitive health-driven eviction reuses):
+    pages return to the pool, the block table zeroes to scratch, and the
+    engine serves a full request load afterwards from a clean pool."""
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8,
+                        prefix_cache=True)
+    sched = eng.scheduler
+    pages = sched._reserve_pages(99, 0, np.array([1, 2, 3], np.int32), 8)
+    assert pages is not None and sched.slot_pages[0]
+    used = eng.page_allocator.stats()["used"]
+    assert used > 0 and sched.block_tables[0].any()
+    sched._release_slot(0)
+    assert sched.slot_pages[0] == []
+    assert not sched.block_tables[0].any()   # idle slots point at scratch
+    assert eng.page_allocator.stats()["used"] == 0
+    out = _tokens(eng.run(_reqs(4)))
+    assert sorted(out) == [0, 1, 2, 3]
+    assert all(len(t) == 5 for t in out.values())
+    st = eng.page_allocator.stats()
+    assert st["used"] == 0 and st["high_water"] >= used
