@@ -97,18 +97,21 @@ def tiny_serving_cfg():
                                d_ff=128, vocab_size=512)
 
 
-def trained_toy_lm(num_layers: int = 6, steps: int = 120, seed: int = 0
-                   ) -> Dict:
-    """Tiny TRAINED LM for the speculative-serving bench.
+def trained_toy_lm(num_layers: int = 6, steps: int = 120, seed: int = 0,
+                   **cfg_overrides) -> Dict:
+    """Tiny TRAINED LM for the speculative/zero-skip serving benches.
 
     A 6-layer dense transformer trained on a deterministic token-cycle
     stream (x_{t+1} = perm[x_t]).  Speculation's win depends on the model
     having redundancy a cheaper draft can exploit — random weights have
     none (a layer-skipped draft of an untrained net agrees ~0%), so this
     bench trains for a few seconds first, exactly like the CNN benches
-    train their fixture.  Returns {cfg, model, params, perm, prompt_fn}.
+    train their fixture.  ``cfg_overrides`` replace ModelConfig fields
+    (the zero-skip bench needs wider layers + activation sparsity).
+    Returns {cfg, model, params, perm, prompt_fn}.
     """
-    key = f"toylm-{num_layers}-{steps}-{seed}"
+    key = f"toylm-{num_layers}-{steps}-{seed}-" + "-".join(
+        f"{k}={v}" for k, v in sorted(cfg_overrides.items()))
     if key in _CACHE:
         return _CACHE[key]
     import dataclasses
@@ -119,10 +122,10 @@ def trained_toy_lm(num_layers: int = 6, steps: int = 120, seed: int = 0
     from repro.models.registry import build
     from repro.training.optimizer import sgd_init, sgd_update
 
-    cfg = dataclasses.replace(get_reduced("yi-9b"), num_layers=num_layers,
-                              d_model=64, num_heads=4, num_kv_heads=2,
-                              head_dim=16, d_ff=128, vocab_size=64,
-                              dtype="float32")
+    toy = dict(num_layers=num_layers, d_model=64, num_heads=4, num_kv_heads=2,
+               head_dim=16, d_ff=128, vocab_size=64, dtype="float32")
+    toy.update(cfg_overrides)
+    cfg = dataclasses.replace(get_reduced("yi-9b"), **toy)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     v = cfg.vocab_size

@@ -65,6 +65,12 @@ class ModelConfig:
     forms_fragment: int = 8
     forms_bits: int = 8
 
+    # --- activation sparsity (zero-skipping, DESIGN.md §6g) ---
+    mlp_act: str = "silu"           # swiglu gate nonlinearity (silu/gelu/relu)
+    act_sparsity: float = 0.0       # fragment drop fraction (0 = dense)
+    act_fragment: int = 8           # sparsification granularity; align with
+                                    # the serving FormsSpec.m to skip work
+
     def hd(self) -> int:
         return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads
 

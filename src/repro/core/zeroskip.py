@@ -96,17 +96,22 @@ def eic_stats(codes: jax.Array, m: int, input_bits: int) -> EICStats:
 
 
 def layer_cycles(codes: jax.Array, m: int, input_bits: int,
-                 zero_skip: bool = True) -> jax.Array:
+                 zero_skip: bool = True) -> np.int64:
     """Total bit-serial input cycles to stream a batch of inputs.
 
     Without zero-skipping every fragment pays ``input_bits`` cycles; with it,
     each fragment pays its EIC.  Summed over fragments and batch rows — the
     quantity the FPS model divides by throughput.
+
+    The sum is accumulated in int64 on the host: a large batch x K layer
+    (e.g. 4096 rows x 16384 cols at m=1, 32 input bits = 2^31 cycles)
+    overflows an int32 accumulator, and jax sums int32 inputs in int32 by
+    default (x64 is typically disabled), silently wrapping negative.
     """
     eic = fragment_eic(codes, m, input_bits)
     if not zero_skip:
         eic = jnp.full_like(eic, input_bits)
-    return jnp.sum(eic)
+    return np.sum(np.asarray(eic), dtype=np.int64)
 
 
 def speedup_from_skipping(stats: EICStats) -> float:

@@ -17,7 +17,8 @@ package is the only compression surface (see DESIGN.md §9 for the old ->
 new mapping).
 """
 from repro.forms.linear import (FormsLinearParams, apply, apply_simulated,
-                                default_spec, from_dense, to_dense)
+                                default_spec, from_dense, sparsity_stats,
+                                to_dense)
 from repro.forms.spec import FormsSpec
 from repro.forms.tree import (CompressedParams, CompressReport,
                               compress_tree, compressed_paths,
@@ -26,7 +27,8 @@ from repro.forms.tree import (CompressedParams, CompressReport,
 
 __all__ = [
     "FormsSpec", "FormsLinearParams", "from_dense", "to_dense", "apply",
-    "apply_simulated", "default_spec", "compress_tree", "decompress_tree",
+    "apply_simulated", "default_spec", "sparsity_stats", "compress_tree",
+    "decompress_tree",
     "compressed_paths", "CompressReport", "CompressedParams",
     "shard_tree", "tree_sharding_specs", "validate_tree_sharding",
 ]

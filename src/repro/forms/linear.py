@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 from typing import Iterator, Optional, Tuple
 
 import jax
@@ -35,6 +36,7 @@ from repro.core import quantization as quantmod
 from repro.core.fragments import matrix_to_conv, pad_rows
 from repro.forms.spec import FormsSpec
 from repro.kernels import ops as kops
+from repro.kernels.sparsity import SparsityMeter, sparsity_counts
 
 
 @dataclasses.dataclass
@@ -89,6 +91,29 @@ def default_spec(spec: Optional[FormsSpec]) -> Iterator[None]:
         yield
     finally:
         _DEFAULT_SPEC = prev
+
+
+# Ambient sparsity meter, same lifecycle as the ambient spec: installed by
+# the serving engine around decode tracing when zero_skip_stats is on.  Read
+# at trace time — when set, every forms matmul stages a jax.debug.callback
+# that ships a 4-float counters vector (not the activations) to the host
+# meter, keyed by the call-site tag.
+_SPARSITY_METER: Optional[SparsityMeter] = None
+
+
+@contextlib.contextmanager
+def sparsity_stats(meter: Optional[SparsityMeter]) -> Iterator[None]:
+    """Make ``meter`` the ambient sparsity meter for :func:`apply` calls.
+
+    Costs one small host callback per forms matmul per decode step, so the
+    engine only installs it when ``zero_skip_stats`` is requested.
+    """
+    global _SPARSITY_METER
+    prev, _SPARSITY_METER = _SPARSITY_METER, meter
+    try:
+        yield
+    finally:
+        _SPARSITY_METER = prev
 
 
 def _resolve_spec(p: FormsLinearParams, spec: Optional[FormsSpec]) -> FormsSpec:
@@ -159,12 +184,13 @@ def to_dense(p: FormsLinearParams) -> jax.Array:
 
 
 def apply(p: FormsLinearParams, x: jax.Array,
-          spec: Optional[FormsSpec] = None) -> jax.Array:
+          spec: Optional[FormsSpec] = None, tag: str = "linear") -> jax.Array:
     """y = x @ W_forms for x of shape (..., K) via the polarized-matmul kernel.
 
     Requires an unstacked 2-D weight (inside a layer scan the stacked leaves
     arrive pre-sliced).  ``spec`` supplies backend/tiling hints only; the
-    math is fully described by ``p``.
+    math is fully described by ``p``.  ``tag`` names the call site in the
+    sparsity counters (``engine.stats()["sparsity"]["layers"]``).
     """
     if p.mags.ndim != 2:
         raise ValueError(
@@ -172,6 +198,11 @@ def apply(p: FormsLinearParams, x: jax.Array,
             "stacked/conv leaves are consumed via to_dense()")
     spec = _resolve_spec(p, spec)
     x2, lead = _flatten_pad(x, p.mags.shape[0])
+    if _SPARSITY_METER is not None:
+        # tag is static (baked into the trace); only the 4-float counters
+        # vector crosses to the host
+        jax.debug.callback(functools.partial(_SPARSITY_METER.record, tag),
+                           sparsity_counts(x2, p.m))
     # signs stay int8 all the way into the kernel: HBM stores (and the kernel
     # streams) the 1/m-sized int8 sign plane; the f32 cast happens on the
     # (bk/m, bn) tile in VMEM, never on a full materialized sign grid

@@ -34,6 +34,13 @@ VALID_RULES = ("sum", "energy")
 # injected faults (repro.reliability.faults).
 VALID_ENCODINGS = ("binary", "vecom")
 
+# Activation zero-skipping modes (kernels/ops.py, DESIGN.md §6g): "off" is
+# the dense path; "block" predicates each (bm, bk) MXU tile on an input
+# occupancy mask (bit-identical to dense); "compact" gathers live whole
+# fragments into a smaller matmul, falling back to dense when more than
+# ``zero_skip_keep`` of the fragments are live.
+VALID_ZERO_SKIP = ("off", "block", "compact")
+
 
 @dataclasses.dataclass(frozen=True)
 class FormsSpec:
@@ -61,6 +68,13 @@ class FormsSpec:
       encoding: cell-level encoding — "binary" (plain bit-slice) or "vecom"
         (reference-column offset compensation, VECOM arXiv:2312.11042).
 
+    Zero-skipping (paper §IV-B figs 7-9, DESIGN.md §6g):
+      zero_skip: "off", "block" (per-tile MXU skip, bit-identical) or
+        "compact" (gather live fragments into a smaller matmul).
+      zero_skip_keep: fragment budget for compaction as a fraction of F —
+        the compact path runs only when live fragments fit the budget,
+        otherwise the call falls back to dense (exact either way).
+
     Backend / tiling hints (kernels/ops.py dispatch):
       prefer_ref: route to the jnp oracle instead of the Pallas kernel;
         None = automatic (oracle off-TPU).
@@ -83,6 +97,9 @@ class FormsSpec:
 
     encoding: str = "binary"
 
+    zero_skip: str = "off"
+    zero_skip_keep: float = 0.5
+
     prefer_ref: Optional[bool] = None
     bm: int = 128
     bn: int = 128
@@ -102,6 +119,14 @@ class FormsSpec:
             raise ValueError(
                 f"cell encoding must be one of {VALID_ENCODINGS}, "
                 f"got {self.encoding!r}")
+        if self.zero_skip not in VALID_ZERO_SKIP:
+            raise ValueError(
+                f"zero_skip must be one of {VALID_ZERO_SKIP}, "
+                f"got {self.zero_skip!r}")
+        if not 0.0 < self.zero_skip_keep <= 1.0:
+            raise ValueError(
+                f"zero_skip_keep is a fragment-budget fraction in (0, 1], "
+                f"got {self.zero_skip_keep}")
         if self.bits < 1:
             raise ValueError(f"bits must be >= 1, got {self.bits}")
         if self.input_bits < 1:

@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.sparsity import fragment_live
+
 
 DEFAULT_BM = 32
 DEFAULT_BN = 128
@@ -57,7 +59,7 @@ def _kernel(x_ref, cells_ref, signs_ref, acc_ref, eic_ref, *,
     eic = jnp.zeros((bm, f), jnp.int32)
     for b in range(input_bits):                   # static unroll: DAC stream
         xb = ((xf >> b) & 1).astype(jnp.float32)  # (bm, f, m)
-        live = jnp.any((xf >> b) != 0, axis=2)    # (bm, f) fragment still live
+        live = fragment_live(xf >> b)             # (bm, f) fragment still live
         eic = jnp.where(live, b + 1, eic)
         plane = jnp.zeros((bm, bn), jnp.int32)
         for ci in range(c):                       # static unroll: cell planes

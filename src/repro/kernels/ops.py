@@ -20,10 +20,17 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import ref, sparsity
 from repro.kernels.admm_polarize import admm_polarize as _admm_polarize_kernel
 from repro.kernels.bitserial_crossbar import bitserial_crossbar as _bitserial_kernel
 from repro.kernels.polarized_matmul import polarized_matmul as _polarized_kernel
+
+#: zero-skip modes for :func:`polarized_matmul` (DESIGN.md §6g):
+#: ``off`` is the dense path; ``block`` predicates the MXU dot on a
+#: per-(bm, bk)-tile occupancy mask (bit-identical to dense); ``compact``
+#: gathers live whole fragments into a smaller dense matmul when the live
+#: count fits the ``zero_skip_keep`` budget, falling back to dense when not.
+VALID_ZERO_SKIP = ("off", "block", "compact")
 
 
 def on_tpu() -> bool:
@@ -104,29 +111,48 @@ def _validate_polarized_geometry(x: jax.Array, mags: jax.Array,
                 f"parameter trees), or replicate K.")
 
 
-def polarized_matmul(
-    x: jax.Array, mags: jax.Array, signs: jax.Array, scale: jax.Array,
-    *, m: int = 8, prefer_ref: Optional[bool] = None,
-    bm: int = 128, bn: int = 128, bk: int = 512,
-    spec: Optional[Any] = None,
-) -> jax.Array:
-    """y[M,N] = x[M,K] @ (signs*mags)[K,N] * scale[1,N].
+def _compact_matmul(x: jax.Array, mags: jax.Array, signs: jax.Array,
+                    scale: jax.Array, m: int, keep_frac: float,
+                    dense_fn) -> jax.Array:
+    """Fragment-compaction wrapper: smaller dense matmul when sparsity fits.
 
-    ``signs`` may be int8 (the FORMS storage dtype) or float — both backends
-    cast per tile, so HBM only ever stores the 1/m-sized int8 sign plane.
-    ``spec`` (a FormsSpec) overrides ``m``/``prefer_ref``/``bm``/``bn``/``bk``.
+    Gathers the live whole fragments (input columns + magnitude rows + the
+    shared sign row move together, which is what makes the gather
+    sign-consistent) into a static ``keep``-fragment budget and runs
+    ``dense_fn`` on the compacted operands; when more fragments are live
+    than the budget, falls back to the full dense call via ``lax.cond``.
+    Exact because gathered-away fragments have all-zero input columns.
     """
-    if spec is not None:
-        m, prefer_ref = spec.m, spec.prefer_ref
-        bm, bn, bk = spec.bm, spec.bn, spec.bk
     M, K = x.shape
-    _, N = mags.shape
-    _validate_polarized_geometry(x, mags, signs, m, spec=spec)
-    if prefer_ref is None:
-        prefer_ref = not on_tpu()
-    if prefer_ref:
-        return ref.ref_polarized_matmul_fast(x, mags, signs, scale, m)
+    N = mags.shape[1]
+    F = K // m
+    keep = max(1, min(F, int(round(F * keep_frac))))
+    if keep >= F:
+        return dense_fn(x, mags, signs, scale)
+    live = sparsity.fragment_occupancy(x, m)
+    n_live = jnp.sum(live.astype(jnp.int32))
+    idx = sparsity.compact_order(live)[:keep]
 
+    def _compact(operands):
+        x_, mg, sg, sc = operands
+        xg = x_.reshape(M, F, m)[:, idx].reshape(M, keep * m)
+        mg_g = mg.reshape(F, m, N)[idx].reshape(keep * m, N)
+        sg_g = sg[idx]
+        return dense_fn(xg, mg_g, sg_g, sc)
+
+    def _dense(operands):
+        return dense_fn(*operands)
+
+    return jax.lax.cond(n_live <= keep, _compact, _dense,
+                        (x, mags, signs, scale))
+
+
+def _pallas_polarized(x: jax.Array, mags: jax.Array, signs: jax.Array,
+                      scale: jax.Array, *, m: int, bm: int, bn: int, bk: int,
+                      block_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Pad to tile multiples, run the Pallas kernel, unpad."""
+    M, K = x.shape
+    N = mags.shape[1]
     bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
     bk_ = max(m, (bk_ // m) * m)
     xp = _pad_to(x, 0, bm_)
@@ -134,9 +160,66 @@ def polarized_matmul(
     magsp = _pad_to(_pad_to(mags, 0, bk_), 1, bn_)
     signsp = _pad_to(_pad_to(signs, 0, bk_ // m), 1, bn_)
     scalep = _pad_to(scale.reshape(1, -1), 1, bn_)
-    out = _polarized_kernel(xp, magsp, signsp, scalep, m=m,
+    if block_mask is True:  # sentinel: compute the mask from the padded x
+        block_mask = sparsity.block_mask(xp, bm_, bk_)
+    out = _polarized_kernel(xp, magsp, signsp, scalep, block_mask, m=m,
                             bm=bm_, bn=bn_, bk=bk_, interpret=not on_tpu())
     return out[:M, :N]
+
+
+def polarized_matmul(
+    x: jax.Array, mags: jax.Array, signs: jax.Array, scale: jax.Array,
+    *, m: int = 8, prefer_ref: Optional[bool] = None,
+    bm: int = 128, bn: int = 128, bk: int = 512,
+    zero_skip: str = "off", zero_skip_keep: float = 0.5,
+    spec: Optional[Any] = None,
+) -> jax.Array:
+    """y[M,N] = x[M,K] @ (signs*mags)[K,N] * scale[1,N].
+
+    ``signs`` may be int8 (the FORMS storage dtype) or float — both backends
+    cast per tile, so HBM only ever stores the 1/m-sized int8 sign plane.
+    ``spec`` (a FormsSpec) overrides ``m``/``prefer_ref``/``bm``/``bn``/``bk``
+    and the zero-skip knobs.
+
+    ``zero_skip`` (see :data:`VALID_ZERO_SKIP`) exploits activation sparsity:
+    on the Pallas path ``block`` skips whole (bm, bk) input tiles via an SMEM
+    occupancy mask (bit-identical to dense) and ``compact`` gathers live
+    fragments into a smaller kernel launch; on the oracle path both modes
+    lower to the same cond-gated fragment compaction — genuinely fewer FLOPs
+    when at most ``zero_skip_keep`` of the fragments are live, exact always.
+    """
+    if spec is not None:
+        m, prefer_ref = spec.m, spec.prefer_ref
+        bm, bn, bk = spec.bm, spec.bn, spec.bk
+        zero_skip = getattr(spec, "zero_skip", zero_skip)
+        zero_skip_keep = getattr(spec, "zero_skip_keep", zero_skip_keep)
+    if zero_skip not in VALID_ZERO_SKIP:
+        raise ValueError(
+            f"zero_skip must be one of {VALID_ZERO_SKIP}, got "
+            f"{zero_skip!r} (FormsSpec(zero_skip=...) / --zero-skip)")
+    M, K = x.shape
+    _, N = mags.shape
+    _validate_polarized_geometry(x, mags, signs, m, spec=spec)
+    if prefer_ref is None:
+        prefer_ref = not on_tpu()
+    if prefer_ref:
+        if zero_skip == "off":
+            return ref.ref_polarized_matmul_fast(x, mags, signs, scale, m)
+        # off-TPU there is no tile predication to win from, so both modes
+        # lower to fragment compaction: a strictly smaller oracle matmul
+        return _compact_matmul(
+            x, mags, signs, scale, m, zero_skip_keep,
+            lambda x_, mg, sg, sc: ref.ref_polarized_matmul_fast(
+                x_, mg, sg, sc, m))
+
+    if zero_skip == "compact":
+        return _compact_matmul(
+            x, mags, signs, scale, m, zero_skip_keep,
+            lambda x_, mg, sg, sc: _pallas_polarized(
+                x_, mg, sg, sc, m=m, bm=bm, bn=bn, bk=bk))
+    return _pallas_polarized(
+        x, mags, signs, scale, m=m, bm=bm, bn=bn, bk=bk,
+        block_mask=True if zero_skip == "block" else None)
 
 
 # ---------------------------------------------------------------------------

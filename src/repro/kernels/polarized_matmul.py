@@ -16,6 +16,15 @@ while the MXU sees an ordinary dense tile.
 
 Grid: (M/bm, N/bn, K/bk), K innermost for accumulation.  Blocks live in VMEM;
 accumulation in float32; the dequant scale is applied on the final K step.
+
+Zero-skipping (DESIGN.md §6g): pass ``block_mask`` — the (M/bm, K/bk) int32
+tile-occupancy mask from ``kernels.sparsity.block_mask`` — and the kernel
+predicates the sign-fold + MXU dot on the mask entry for the current
+(i, k) tile, read from SMEM.  An all-zero input tile contributes exactly 0
+to the accumulator, so the skip is bit-identical to the dense kernel with
+the same tiling: accumulator init and the final scale step are unchanged,
+only the ``+= x @ w`` of dead tiles is elided.  This is the TPU analogue of
+the paper's per-fragment NOR skip gate (fig 9) lifted to tile granularity.
 """
 from __future__ import annotations
 
@@ -56,6 +65,33 @@ def _kernel(x_ref, mags_ref, signs_ref, scale_ref, out_ref, acc_ref, *, m: int,
         out_ref[...] = (acc_ref[...] * scale).astype(out_ref.dtype)
 
 
+def _kernel_skip(x_ref, mags_ref, signs_ref, scale_ref, mask_ref, out_ref,
+                 acc_ref, *, m: int, n_k_blocks: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # the only difference vs _kernel: the MAC is predicated on the tile
+    # occupancy bit, so dead input tiles never touch the MXU
+    @pl.when(mask_ref[0, 0] != 0)
+    def _mac():
+        x = x_ref[...].astype(jnp.float32)                # (bm, bk)
+        mags = mags_ref[...].astype(jnp.float32)          # (bk, bn)
+        signs = signs_ref[...].astype(jnp.float32)        # (bk//m, bn)
+        bk, bn = mags.shape
+        sgrid = jnp.broadcast_to(signs[:, None, :],
+                                 (bk // m, m, bn)).reshape(bk, bn)
+        acc_ref[...] += jnp.dot(x, mags * sgrid,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k_blocks - 1)
+    def _finish():
+        scale = scale_ref[...].astype(jnp.float32)        # (1, bn)
+        out_ref[...] = (acc_ref[...] * scale).astype(out_ref.dtype)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("m", "bm", "bn", "bk", "interpret", "out_dtype"))
@@ -64,6 +100,7 @@ def polarized_matmul(
     mags: jax.Array,         # (K, N) unsigned magnitude codes
     signs: jax.Array,        # (K/m, N) fragment signs in {+1, -1}
     scale: jax.Array,        # (1, N) dequant scale
+    block_mask: Optional[jax.Array] = None,  # (M/bm, K/bk) int32 occupancy
     *,
     m: int = 8,
     bm: int = DEFAULT_BM,
@@ -91,6 +128,13 @@ def polarized_matmul(
             f"{(K // m, N)} for mags {mags.shape} with m={m}, got "
             f"{tuple(signs.shape)}")
 
+    if block_mask is not None and bk % m != 0:
+        raise ValueError(
+            f"zero-skip block mask needs bk to be a whole number of "
+            f"fragments: bk={bk} is not a multiple of m={m}, so the mask "
+            f"tiling the caller computed would silently disagree with the "
+            f"kernel grid after clamping.  Pick bk a multiple of {m} (e.g. "
+            f"{max(m, (bk // m) * m)}) or use zero_skip='compact' instead.")
     bm = min(bm, M)
     bn = min(bn, N)
     bk = min(bk, K)
@@ -102,17 +146,40 @@ def polarized_matmul(
             f"bk={bk}); use ops.polarized_matmul for automatic padding")
 
     grid = (M // bm, N // bn, K // bk)
+    common_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((bk // m, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+    ]
+    if block_mask is None:
+        return pl.pallas_call(
+            functools.partial(_kernel, m=m, n_k_blocks=grid[2]),
+            grid=grid,
+            in_specs=common_specs,
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            interpret=interpret,
+        )(x, mags, signs, scale)
+
+    if block_mask.shape != grid[:1] + grid[2:]:
+        raise ValueError(
+            f"block_mask shape {tuple(block_mask.shape)} does not match the "
+            f"kernel grid: expected (M//bm, K//bk) = "
+            f"{(M // bm, K // bk)} (kernels.sparsity.block_mask(x, "
+            f"bm={bm}, bk={bk}))")
     return pl.pallas_call(
-        functools.partial(_kernel, m=m, n_k_blocks=grid[2]),
+        functools.partial(_kernel_skip, m=m, n_k_blocks=grid[2]),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((bk // m, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        in_specs=common_specs + [
+            # one scalar occupancy bit per (i, k) tile, in SMEM so the
+            # predicate is readable without a VMEM round-trip
+            pl.BlockSpec((1, 1), lambda i, j, k: (i, k),
+                         memory_space=pltpu.SMEM),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(x, mags, signs, scale)
+    )(x, mags, signs, scale, block_mask.astype(jnp.int32))

@@ -1,0 +1,172 @@
+"""Shared activation-sparsity helpers for the zero-skipping kernels.
+
+FORMS' headline throughput mechanism is input zero-skipping (paper
+SIV-B, figs 7-9): bit-serial input streaming means an all-zero input
+never has to drive the crossbar, and the fine-grained m-row fragments
+make the skip granularity cheap — a NOR over each m-wide input group
+gates the fragment's cycle.  On TPU we have no per-cycle gating, but
+the same structure maps onto two kernel-level mechanisms:
+
+* **block skip** — a per-(bm, bk) tile occupancy mask (`block_mask`),
+  computed once on the VPU before the kernel launch.  The Pallas
+  kernel reads the (1, 1) mask entry from SMEM and wraps the
+  sign-fold + MXU dot in ``pl.when``: an all-zero input tile
+  contributes exactly 0 to the accumulator, so skipping it is
+  *bit-identical* to the dense kernel with the same tiling.
+* **fragment compaction** — when sparsity is high, gather only the
+  live whole fragments (`fragment_occupancy` + a stable argsort) and
+  run a *smaller* dense matmul.  The forms fragment layout makes the
+  gather sign-consistent: one fragment = m consecutive K rows sharing
+  one sign row, so gathering at fragment granularity moves mags,
+  signs and input columns together.
+
+`fragment_live` is the in-kernel building block shared with
+``bitserial_crossbar`` (which counts live fragments per bit-plane for
+its EIC bookkeeping), and `SparsityMeter` is the host-side accumulator
+behind ``engine.stats()["sparsity"]``.
+"""
+from __future__ import annotations
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "block_mask",
+    "fragment_live",
+    "fragment_occupancy",
+    "compact_order",
+    "sparsity_counts",
+    "SparsityMeter",
+]
+
+
+def block_mask(x: jnp.ndarray, bm: int, bk: int) -> jnp.ndarray:
+    """Per-(bm, bk)-tile occupancy mask for a padded 2-D input.
+
+    Returns an int32 array of shape ``(M // bm, K // bk)`` whose entry
+    (i, k) is 1 iff tile (i, k) of ``x`` has any nonzero element.  The
+    kernel reads one entry per grid step from SMEM and predicates the
+    MXU dot on it, so the cost of the mask is a single VPU reduction
+    over x — negligible next to the matmul it can skip.
+    """
+    M, K = x.shape
+    if M % bm or K % bk:
+        raise ValueError(
+            f"block_mask needs tiled input: got x {x.shape} with tiles "
+            f"({bm}, {bk}); pad x to multiples first")
+    tiles = x.reshape(M // bm, bm, K // bk, bk)
+    return jnp.any(tiles != 0, axis=(1, 3)).astype(jnp.int32)
+
+
+def fragment_live(xf: jnp.ndarray) -> jnp.ndarray:
+    """Live mask over the fragment axis of an ``(..., F, m)`` view.
+
+    A fragment is *live* when any of its m input values is nonzero —
+    the TPU analogue of the paper's per-fragment NOR skip gate.  Keeps
+    the leading axes (batch, bit-plane, ...) intact so callers can
+    count live fragments per row or per bit-plane.
+    """
+    return jnp.any(xf != 0, axis=-1)
+
+
+def fragment_occupancy(x: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Batch-collapsed live mask over whole input fragments.
+
+    ``x`` is (M, K) with K divisible by m; returns a bool (K // m,)
+    vector that is True where *any* batch row uses the fragment.  This
+    is the gather predicate for compaction: a fragment only drops when
+    every row in the batch agrees it is zero (the union over rows is
+    what the shared weight matrix forces).
+    """
+    M, K = x.shape
+    if K % m:
+        raise ValueError(f"K={K} not divisible by fragment size m={m}")
+    return jnp.any(x.reshape(M, K // m, m) != 0, axis=(0, 2))
+
+
+def compact_order(live: jnp.ndarray) -> jnp.ndarray:
+    """Fragment gather order with live fragments first (stable).
+
+    ``argsort(~live)`` puts True entries of ``live`` at the front while
+    preserving their relative order, so truncating to a static budget
+    keeps the lowest-indexed live fragments and pads with dead ones —
+    gathering a dead fragment is harmless (its input columns are zero).
+    """
+    return jnp.argsort(~live, stable=True)
+
+
+def sparsity_counts(x: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Counters vector for one kernel call: measured input sparsity.
+
+    Returns float32 ``[zero_elems, elems, dead_frags, frags]`` so a
+    host callback can accumulate exact element- and fragment-level
+    sparsity per layer without shipping activations to the host.
+    """
+    x2 = x.reshape(-1, x.shape[-1])
+    K = x2.shape[-1]
+    zero = jnp.sum(x2 == 0).astype(jnp.float32)
+    elems = jnp.asarray(x2.size, jnp.float32)
+    if K % m == 0:
+        live = fragment_live(x2.reshape(x2.shape[0], K // m, m))
+        dead = jnp.sum(~live).astype(jnp.float32)
+        frags = jnp.asarray(live.size, jnp.float32)
+    else:  # odd geometry: no fragment view, element stats only
+        dead = jnp.asarray(0.0, jnp.float32)
+        frags = jnp.asarray(0.0, jnp.float32)
+    return jnp.stack([zero, elems, dead, frags])
+
+
+class SparsityMeter:
+    """Host-side accumulator for per-layer activation sparsity.
+
+    Filled from inside jitted decode steps via ``jax.debug.callback``
+    (one small counters vector per forms matmul per scan iteration —
+    the activations themselves never leave the device).  Thread-safe
+    because debug callbacks may run on a runtime thread.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._acc: dict[str, np.ndarray] = {}
+
+    def record(self, tag: str, counts) -> None:
+        c = np.asarray(counts, dtype=np.float64)
+        if c.shape == (4,):  # sparsity_counts vector: append a call count
+            c = np.concatenate([c, [1.0]])
+        with self._lock:
+            prev = self._acc.get(tag)
+            self._acc[tag] = c if prev is None else prev + c
+
+    def reset(self) -> None:
+        with self._lock:
+            self._acc.clear()
+
+    def summary(self) -> dict:
+        """Per-tag and overall sparsity fractions.
+
+        Returns ``{"layers": {tag: {...}}, "overall": {...}}`` where
+        each entry has ``elem_sparsity`` (fraction of exactly-zero
+        input elements), ``fragment_sparsity`` (fraction of dead
+        m-fragments — the skippable fraction), and ``calls``.
+        """
+        with self._lock:
+            acc = {k: v.copy() for k, v in self._acc.items()}
+        layers = {}
+        tot = np.zeros(5, dtype=np.float64)
+        for tag, c in sorted(acc.items()):
+            zero, elems, dead, frags, calls = c
+            layers[tag] = {
+                "elem_sparsity": float(zero / elems) if elems else 0.0,
+                "fragment_sparsity": float(dead / frags) if frags else 0.0,
+                "calls": int(calls),
+            }
+            tot += c
+        zero, elems, dead, frags, calls = tot
+        overall = {
+            "elem_sparsity": float(zero / elems) if elems else 0.0,
+            "fragment_sparsity": float(dead / frags) if frags else 0.0,
+            "calls": int(calls),
+        }
+        return {"layers": layers, "overall": overall}

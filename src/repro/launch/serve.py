@@ -23,6 +23,12 @@ with optional FORMS compression, mesh sharding and self-speculative decoding.
       --forms --fault-sigma 0.1 --fault-stuck 0.001 --fault-repair \
       --probe-every 8
 
+  # activation zero-skipping (the paper's headline throughput mechanism):
+  # skip dead input tiles in the compressed matmuls, report measured
+  # per-layer sparsity:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --forms --zero-skip block --zero-skip-stats
+
 With ``--forms`` the weights are compressed via ``repro.forms.compress_tree``
 and the engine decodes directly on the compressed pytree (uint8 magnitudes +
 int8 fragment signs through the polarized-matmul kernel).  ``--decode-block``
@@ -54,6 +60,15 @@ the health monitor: golden-prompt drift probes every ``--probe-every``
 decode rounds, per-leaf scoreboards in ``engine.stats()``, and automatic
 re-encoding of flagged leaves from the clean reference copy without
 dropping in-flight requests.
+
+Zero-skipping (``--forms`` only; DESIGN.md §6g): ``--zero-skip block``
+skips whole all-zero input tiles in the polarized matmul (bit-identical to
+dense), ``--zero-skip compact`` gathers live fragments into a smaller
+matmul when sparsity is high (``--zero-skip-keep`` sets the fragment
+budget; exact either way, dense fallback when the budget is exceeded).
+``--zero-skip-stats`` measures per-layer activation sparsity on the decode
+path and prints it with the final stats (costs one host callback per
+matmul per decode step).
 """
 from __future__ import annotations
 
@@ -118,6 +133,34 @@ def main() -> None:
                     help="disable per-slot adaptive draft length")
     ap.add_argument("--stats-every", type=int, default=0, metavar="ROUNDS",
                     help="print pool/acceptance stats every N decode rounds")
+    ap.add_argument("--zero-skip", default="off",
+                    choices=("off", "block", "compact"),
+                    help="activation zero-skipping in the compressed "
+                         "matmuls: 'block' skips all-zero input tiles "
+                         "(bit-identical), 'compact' gathers live fragments "
+                         "into a smaller matmul (forms serving only)")
+    ap.add_argument("--zero-skip-keep", type=float, default=0.5,
+                    metavar="FRAC",
+                    help="compaction fragment budget as a fraction of K/m; "
+                         "the compact path falls back to dense when more "
+                         "fragments are live")
+    ap.add_argument("--zero-skip-stats", action="store_true",
+                    help="measure per-layer activation sparsity on the "
+                         "decode path (one host callback per matmul per "
+                         "step) and print it with the final stats")
+    ap.add_argument("--mlp-act", default=None,
+                    choices=("silu", "gelu", "relu"),
+                    help="override the MLP activation (relu + "
+                         "--act-sparsity is the regime zero-skipping "
+                         "exploits; changes the model)")
+    ap.add_argument("--act-sparsity", type=float, default=None, metavar="FRAC",
+                    help="fragment-structured activation sparsification: "
+                         "drop this fraction of MLP input fragments per row "
+                         "(keep the strongest by max|x|; changes the model)")
+    ap.add_argument("--act-fragment", type=int, default=None,
+                    help="fragment size for --act-sparsity (align with "
+                         "--fragment so dropped fragments map onto whole "
+                         "skip units; default: ModelConfig's)")
     ap.add_argument("--encoding", default="binary",
                     choices=("binary", "vecom"),
                     help="cell-level encoding of the compressed weights: "
@@ -162,6 +205,12 @@ def main() -> None:
     from repro.serving.engine import Request, ServingEngine
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    act_over = {k: v for k, v in (("mlp_act", args.mlp_act),
+                                  ("act_sparsity", args.act_sparsity),
+                                  ("act_fragment", args.act_fragment))
+                if v is not None}
+    if act_over:
+        cfg = dataclasses.replace(cfg, **act_over)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
     fault_args = (args.fault_sigma, args.fault_stuck, args.fault_drift)
@@ -169,6 +218,9 @@ def main() -> None:
     if (wants_faults or args.fault_repair) and not args.forms:
         raise SystemExit("--fault-*/--encoding model ReRAM cells, which only "
                          "exist for compressed weights: add --forms")
+    if (args.zero_skip != "off" or args.zero_skip_stats) and not args.forms:
+        raise SystemExit("--zero-skip/--zero-skip-stats act on the FORMS "
+                         "matmul path: add --forms")
     spec = (FormsSpec(m=args.fragment, bits=args.bits, rule=args.sign_rule,
                       encoding=args.encoding)
             if args.forms else None)
@@ -199,7 +251,10 @@ def main() -> None:
                                probe_every=args.probe_every,
                                drift_threshold=args.drift_threshold)
                                if args.fault_repair else None),
-                           stats_every=args.stats_every)
+                           stats_every=args.stats_every,
+                           zero_skip=args.zero_skip,
+                           zero_skip_keep=args.zero_skip_keep,
+                           zero_skip_stats=args.zero_skip_stats)
     if engine.compression_report is not None:
         print(f"forms: {engine.compression_report.summary()} "
               f"(encoding={args.encoding})")
@@ -269,12 +324,21 @@ def main() -> None:
         h = stats["health"]
         parts.append(f"probes {h['probes']} repairs {h['repairs']} "
                      f"drift {h['last_drift']:.2e}")
+    if "sparsity" in stats:
+        ov = stats["sparsity"]["overall"]
+        parts.append(f"sparsity elem {ov['elem_sparsity']:.2f} "
+                     f"frag {ov['fragment_sparsity']:.2f} "
+                     f"({ov['calls']} matmuls)")
     print("stats: " + ", ".join(parts))
     if "health" in stats:
         for ev in stats["health"]["events"]:
             print(f"health[{ev['round']}]: "
                   + ", ".join(f"{k}={v}" for k, v in ev.items()
                               if k != "round"))
+    if "sparsity" in stats:
+        for tag, s in stats["sparsity"]["layers"].items():
+            print(f"sparsity[{tag}]: elem {s['elem_sparsity']:.2f} "
+                  f"frag {s['fragment_sparsity']:.2f} calls {s['calls']}")
 
 
 if __name__ == "__main__":

@@ -65,7 +65,7 @@ def linear(p: Params, name: str, x: jax.Array, dtype) -> jax.Array:
     """
     v = p[name]
     if isinstance(v, FormsLinearParams) and v.mags.ndim == 2:
-        return forms_apply(v, x).astype(dtype)
+        return forms_apply(v, x, tag=name).astype(dtype)
     return x @ wload(p, name, dtype)
 
 
@@ -390,10 +390,52 @@ def swiglu_init(key, d: int, f: int) -> Params:
             "down": dense_init(ks[2], f, d)}
 
 
-def swiglu(p: Params, x: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+_MLP_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def sparsify_fragments(x: jax.Array, m: int, drop_frac: float) -> jax.Array:
+    """Zero all but the top-``(1 - drop_frac)`` fragments of each row.
+
+    Fragment-structured activation sparsification (the paper's zero-skip
+    granularity, §IV-B): rank whole m-wide input groups by max |x| and zero
+    the weakest ``drop_frac`` of them, so the sparsity the zero-skipping
+    kernels see is aligned with the fragment layout they can actually skip.
+    Unstructured (per-element) sparsity collapses at fragment granularity —
+    a fragment survives if *any* of its m elements is nonzero — which is why
+    this drops whole fragments.  Ties at the threshold may keep more than
+    the budget (exact zeros never count as kept work).
+    """
+    if drop_frac <= 0.0:
+        return x
+    if not 0.0 < drop_frac < 1.0:
+        raise ValueError(f"drop_frac must be in [0, 1), got {drop_frac}")
+    K = x.shape[-1]
+    if K % m:
+        raise ValueError(
+            f"feature dim {K} does not tile into fragments of m={m}; "
+            f"align act_fragment with the layer width (or pad the model)")
+    F = K // m
+    keep = max(1, int(round(F * (1.0 - drop_frac))))
+    xf = x.reshape(*x.shape[:-1], F, m)
+    strength = jnp.max(jnp.abs(xf.astype(jnp.float32)), axis=-1)  # (..., F)
+    kth = -jnp.sort(-strength, axis=-1)[..., keep - 1:keep]       # threshold
+    mask = strength >= kth
+    return (xf * mask[..., None].astype(xf.dtype)).reshape(x.shape)
+
+
+def swiglu(p: Params, x: jax.Array, dtype=jnp.bfloat16, act: str = "silu",
+           frag_drop: float = 0.0, frag_m: int = 8) -> jax.Array:
+    """Gated MLP; ``act`` picks the gate nonlinearity (silu/gelu/relu).
+
+    ``frag_drop > 0`` sparsifies the hidden activations at whole-fragment
+    granularity before the down projection, so the zero-skipping matmul
+    path (``FormsSpec(zero_skip=...)``) has dead fragments to skip.
+    """
     x = grad_boundary(x, ("batch", "model", None))
     x = constrain(x, "batch", None, None)   # Megatron-SP gather
-    h = jax.nn.silu(linear(p, "gate", x, dtype)) * linear(p, "up", x, dtype)
+    h = _MLP_ACTS[act](linear(p, "gate", x, dtype)) * linear(p, "up", x, dtype)
+    if frag_drop > 0.0:
+        h = sparsify_fragments(h, frag_m, frag_drop)
     h = constrain(h, "batch", None, "model")
     return constrain(linear(p, "down", h, dtype), "batch", "model", None)
 
@@ -426,7 +468,7 @@ def embed_lookup(embed: jax.Array, tokens: jax.Array, dtype=jnp.bfloat16) -> jax
 
 def lm_logits(x: jax.Array, head: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
     if isinstance(head, FormsLinearParams) and head.mags.ndim == 2:
-        logits = forms_apply(head, x).astype(dtype)
+        logits = forms_apply(head, x, tag="head").astype(dtype)
     else:
         logits = x @ head.astype(dtype)
     return constrain(logits, "batch", None, "model")

@@ -60,7 +60,16 @@ def _block_apply(cfg: ModelConfig, bp: Params, x: jax.Array,
         window=cfg.sliding_window, q_chunk=q_chunk,
         cache=cache, cache_pos=cache_pos, return_kv=collect_kv, dtype=dtype)
     x = x + h
-    x = x + L.swiglu(bp["mlp"], L.rmsnorm(x, bp["norm2"], cfg.norm_eps), dtype)
+    mlp_in = L.rmsnorm(x, bp["norm2"], cfg.norm_eps)
+    if cfg.act_sparsity > 0.0:
+        # fragment-structured sparsification of the MLP input: gives the
+        # zero-skipping matmul path (FormsSpec(zero_skip=...)) dead whole
+        # fragments to skip in the gate/up projections, aligned with
+        # act_fragment (DESIGN.md §6g)
+        mlp_in = L.sparsify_fragments(mlp_in, cfg.act_fragment,
+                                      cfg.act_sparsity)
+    x = x + L.swiglu(bp["mlp"], mlp_in, dtype, act=cfg.mlp_act,
+                     frag_drop=cfg.act_sparsity, frag_m=cfg.act_fragment)
     return x, new_cache
 
 

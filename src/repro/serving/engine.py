@@ -64,7 +64,8 @@ from repro.distributed.sharding import (ParallelContext, cache_shardings,
                                         parallel_context, params_shardings,
                                         reshard_state)
 from repro.forms import (CompressReport, FormsSpec, compress_tree,
-                         default_spec)
+                         default_spec, sparsity_stats)
+from repro.kernels.sparsity import SparsityMeter
 from repro.models.registry import Model
 from repro.serving import kv_cache as KV
 
@@ -99,6 +100,11 @@ class ModelRunner:
     keeping donation, on-device sampling, the inner decode scan and the
     mesh path.
     """
+
+    # host-side activation-sparsity accumulator; installed by the engine
+    # (``ServingEngine(zero_skip_stats=True)``) *before the first trace* —
+    # forms.apply stages one debug callback per matmul when it is set
+    meter: Optional[SparsityMeter] = None
 
     def __init__(self, model: Model, params: Any, cache: Any, *,
                  max_len: int,
@@ -145,7 +151,7 @@ class ModelRunner:
         """The shared decode-block scan: ``decode_block`` model steps with
         on-device sampling; ``step(p, toks, cache, pos)`` is the dense or
         block-table-bound paged decode call."""
-        with default_spec(self.spec):
+        with default_spec(self.spec), sparsity_stats(self.meter):
             def body(carry, _):
                 tok, cache, pos, key = carry
                 logits, cache = step(p, tok[:, None], cache, pos)
@@ -594,7 +600,10 @@ class ServingEngine:
                  draft_layer_step: int = 1,
                  adaptive_k: bool = True,
                  health: Optional[Any] = None,
-                 stats_every: int = 0):
+                 stats_every: int = 0,
+                 zero_skip: Optional[str] = None,
+                 zero_skip_keep: float = 0.5,
+                 zero_skip_stats: bool = False):
         self.model = model
         self.cfg = model.config
         self.ctx: Optional[ParallelContext] = (
@@ -602,9 +611,21 @@ class ServingEngine:
         self.spec: Optional[FormsSpec] = None
         self.compression_report: Optional[CompressReport] = None
         self.compression_errors: Dict[str, float] = {}
+        if ((zero_skip not in (None, "off")) or zero_skip_stats) \
+                and not (forms or spec is not None):
+            raise ValueError(
+                "zero_skip / zero_skip_stats act on the FORMS matmul path — "
+                "enable compression too (forms=True, spec=..., or serve "
+                "--forms)")
         if forms or spec is not None:
             self.spec = spec if spec is not None else FormsSpec(m=fragment,
                                                                 bits=bits)
+            if zero_skip is not None:
+                # folded into the spec BEFORE compression/tracing so every
+                # forms matmul in the jitted hot path picks the skip route
+                self.spec = dataclasses.replace(
+                    self.spec, zero_skip=zero_skip,
+                    zero_skip_keep=zero_skip_keep)
             params, self.compression_report = compress_tree(params, self.spec,
                                                             ctx=self.ctx)
             self.compression_errors = self.compression_report.errors
@@ -692,6 +713,13 @@ class ServingEngine:
                                       ctx=self.ctx, decode_block=decode_block,
                                       donate=donate, rng_seed=rng_seed,
                                       cache_shardings=self.cache_shardings)
+        # install the sparsity meter before the first decode trace (the
+        # debug callbacks bake into the traced fn); off by default because
+        # each forms matmul then costs one host round-trip per decode step
+        self.sparsity_meter: Optional[SparsityMeter] = None
+        if zero_skip_stats:
+            self.sparsity_meter = SparsityMeter()
+            self.runner.meter = self.sparsity_meter
         # the health monitor is built LAST, over the exact tree the runner
         # serves (post-compression, post-mesh-placement) — its golden
         # logits and reference planes describe the real serving artifact
@@ -755,6 +783,8 @@ class ServingEngine:
             out["speculate"] = self.runner.spec_stats()
         if self.health is not None:
             out["health"] = self.health.stats()
+        if self.sparsity_meter is not None:
+            out["sparsity"] = self.sparsity_meter.summary()
         return out
 
     def inject_faults(self, fault: Any, paths: Optional[List[str]] = None

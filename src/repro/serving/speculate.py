@@ -54,6 +54,7 @@ import numpy as np
 
 from repro.forms import (CompressReport, FormsLinearParams, FormsSpec,
                          compress_tree, decompress_tree, default_spec)
+from repro.forms import sparsity_stats as forms_sparsity_stats
 from repro.models.registry import Model, build
 from repro.serving.quant_weights import quantize_tree
 
@@ -371,7 +372,7 @@ class SpeculativeRunner(ModelRunner):
 
     def _speculate_impl(self, kk, p_t, c_t, p_d, c_d, toks, pos, tables,
                         k_eligible, temps, key):
-        with default_spec(self.spec):
+        with default_spec(self.spec), forms_sparsity_stats(self.meter):
 
             def draft_body(carry, _):
                 tok, c, dpos, key = carry

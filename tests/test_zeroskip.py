@@ -48,3 +48,13 @@ def test_stats_histogram_sums_to_one():
 def test_zero_inputs_cost_zero_cycles():
     codes = jnp.zeros((3, 16), jnp.int32)
     assert int(Z.layer_cycles(codes, 8, 16)) == 0
+
+
+def test_layer_cycles_no_int32_overflow():
+    """4096 x 16384 at m=1, 32 input bits is exactly 2^31 total cycles —
+    one past int32 max.  A 32-bit accumulator (jnp.sum of an int32 eic
+    tensor) wraps this to -2^31; the int64 host accumulation must not."""
+    codes = jnp.ones((4096, 16384), jnp.int32)
+    total = Z.layer_cycles(codes, 1, 32, zero_skip=False)
+    assert int(total) == 2 ** 31
+    assert int(total) > 0  # the wrapped value is negative

@@ -1,0 +1,111 @@
+"""Zero-skipping on the serving path (DESIGN.md §6g): greedy token parity
+vs the dense FORMS engine, measured-sparsity stats, and engine/CLI guards.
+
+The skip is a scheduling optimization — block-skip masks tiles whose
+inputs are all zero and compaction drops dead fragments before the
+matmul — so a greedy decode must reproduce the unskipped engine token
+for token.  These tests drive the REAL engines end to end (compressed
+weights, paged KV-cache) rather than the kernels in isolation; kernel
+bit-identity lives in test_zeroskip_kernels.py.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models.registry import build
+from repro.serving.engine import Request, ServingEngine
+
+
+def _tiny(arch="yi-9b", **extra):
+    base = dict(num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
+                head_dim=16, d_ff=64, vocab_size=64)
+    if arch != "yi-9b":
+        base = {}
+    return build(dataclasses.replace(get_reduced(arch), dtype="float32",
+                                     **base, **extra))
+
+
+def _reqs(n=3, new=5):
+    return [Request(uid=i, prompt=np.array([1 + i, 2, 3]), max_new_tokens=new)
+            for i in range(n)]
+
+
+def _tokens(results):
+    return {r.uid: r.tokens for r in results}
+
+
+# the fragment-sparse MLP config the zero-skip path is built for: ReLU
+# activations + structured sparsification feed genuinely zero fragments
+# into the down projection
+_SPARSE = dict(mlp_act="relu", act_sparsity=0.5, act_fragment=4)
+
+
+@pytest.mark.parametrize("arch,extra,mode", [
+    ("yi-9b", _SPARSE, "block"),
+    ("yi-9b", _SPARSE, "compact"),
+    ("olmoe-1b-7b", {"capacity_factor": 64.0}, "compact"),
+    ("whisper-small", {}, "compact"),
+])
+def test_zero_skip_greedy_token_identical(arch, extra, mode):
+    """Greedy decode with zero_skip on reproduces the plain FORMS engine
+    token for token across the paged families — the skip must never
+    change what the matmul computes, only what it can avoid."""
+    m = _tiny(arch, **extra)
+    params = m.init(jax.random.PRNGKey(0))
+    kw = dict(max_len=32, batch_slots=2, page_size=8, forms=True, fragment=4)
+    want = _tokens(ServingEngine(m, params, **kw).run(_reqs()))
+    skip = ServingEngine(m, params, zero_skip=mode, zero_skip_keep=0.75, **kw)
+    assert _tokens(skip.run(_reqs())) == want
+    assert skip.spec.zero_skip == mode
+
+
+def test_zero_skip_stats_measures_mlp_sparsity():
+    """zero_skip_stats=True surfaces per-layer measured sparsity in
+    engine.stats(); with ReLU + 50% fragment sparsification the MLP down
+    projection must report substantial fragment sparsity while attention
+    inputs stay dense."""
+    m = _tiny("yi-9b", **_SPARSE)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8,
+                        forms=True, fragment=4, zero_skip="compact",
+                        zero_skip_stats=True)
+    eng.run(_reqs())
+    sp = eng.stats()["sparsity"]
+    assert sp["overall"]["calls"] > 0
+    assert 0.0 <= sp["overall"]["fragment_sparsity"] <= 1.0
+    layers = sp["layers"]
+    assert {"down", "wq"} <= set(layers)
+    # sparsify_fragments keeps >= 1 fragment per row but drops ~half
+    assert layers["down"]["fragment_sparsity"] > 0.2
+    assert layers["wq"]["fragment_sparsity"] < 0.1
+
+
+def test_zero_skip_stats_off_by_default():
+    m = _tiny("yi-9b")
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, max_len=32, batch_slots=2, forms=True)
+    eng.run(_reqs(1, new=2))
+    assert "sparsity" not in eng.stats()
+
+
+def test_zero_skip_requires_forms():
+    """zero_skip acts inside the FORMS matmul; without compression there is
+    nothing to skip, so the engine refuses rather than silently no-op."""
+    m = _tiny("yi-9b")
+    params = m.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="FORMS"):
+        ServingEngine(m, params, max_len=32, zero_skip="compact")
+    with pytest.raises(ValueError, match="FORMS"):
+        ServingEngine(m, params, max_len=32, zero_skip_stats=True)
+    # explicit "off" is not a request to skip: no forms needed
+    ServingEngine(m, params, max_len=32, zero_skip="off")
+
+
+def test_zero_skip_rejects_unknown_mode():
+    m = _tiny("yi-9b")
+    params = m.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="zero_skip"):
+        ServingEngine(m, params, max_len=32, forms=True, zero_skip="banana")
