@@ -42,8 +42,11 @@ def append_trajectory(path: str, rows: List[Tuple[str, float, str]],
 
     Unlike :func:`write_json` (one CI artifact per run), a trajectory file
     lives at the repo root and accumulates one record per benchmark run /
-    PR — the cross-PR perf history.  Existing records are kept; corrupt or
-    legacy single-run files are wrapped rather than clobbered.
+    PR — the cross-PR perf history.  Existing records are kept; legacy
+    single-run files are wrapped.  A corrupt/truncated file (a killed
+    bench mid-write, a bad merge) is moved aside to ``<path>.corrupt``
+    and the trajectory restarts — the history is evidence, never silently
+    clobbered by the next run.
     """
     data: List[Dict] = []
     if os.path.exists(path):
@@ -51,7 +54,15 @@ def append_trajectory(path: str, rows: List[Tuple[str, float, str]],
             with open(path) as f:
                 prev = json.load(f)
             data = prev if isinstance(prev, list) else [prev]
-        except (OSError, ValueError):
+        except (OSError, ValueError) as e:
+            backup = path + ".corrupt"
+            try:
+                os.replace(path, backup)
+                print(f"# {path} is corrupt ({e}); backed up to {backup}, "
+                      f"restarting trajectory", flush=True)
+            except OSError:
+                print(f"# {path} is unreadable ({e}); restarting trajectory",
+                      flush=True)
             data = []
     data.append({
         "date": time.strftime("%Y-%m-%d"),
@@ -98,7 +109,7 @@ def tiny_serving_cfg():
 
 
 def trained_toy_lm(num_layers: int = 6, steps: int = 120, seed: int = 0,
-                   **cfg_overrides) -> Dict:
+                   polarize_every: int = 0, **cfg_overrides) -> Dict:
     """Tiny TRAINED LM for the speculative/zero-skip serving benches.
 
     A 6-layer dense transformer trained on a deterministic token-cycle
@@ -108,10 +119,19 @@ def trained_toy_lm(num_layers: int = 6, steps: int = 120, seed: int = 0,
     bench trains for a few seconds first, exactly like the CNN benches
     train their fixture.  ``cfg_overrides`` replace ModelConfig fields
     (the zero-skip bench needs wider layers + activation sparsity).
-    Returns {cfg, model, params, perm, prompt_fn}.
+
+    ``polarize_every=N`` trains *polarization-aware* (projected SGD: every
+    N steps, and at the end, project the weights onto the FORMS
+    polarized+quantized set) — the cheap stand-in for the paper's ADMM
+    training.  A raw trained model loses its skill AND its layer
+    redundancy under the one-shot polarization projection (~0.5 rel-L2),
+    so FORMS-compressed serving of it decodes noise no draft can track;
+    with projected SGD the final projection is exact and the compressed
+    benches measure a model that is actually good.  Returns
+    {cfg, model, params, perm, prompt_fn}.
     """
-    key = f"toylm-{num_layers}-{steps}-{seed}-" + "-".join(
-        f"{k}={v}" for k, v in sorted(cfg_overrides.items()))
+    key = (f"toylm-{num_layers}-{steps}-{seed}-{polarize_every}-"
+           + "-".join(f"{k}={v}" for k, v in sorted(cfg_overrides.items())))
     if key in _CACHE:
         return _CACHE[key]
     import dataclasses
@@ -150,8 +170,18 @@ def trained_toy_lm(num_layers: int = 6, steps: int = 120, seed: int = 0,
         _, g = jax.value_and_grad(loss_fn)(p, toks)
         return sgd_update(p, g, o, lr=0.3)
 
+    project = None
+    if polarize_every:
+        from repro.forms.spec import FormsSpec
+        from repro.forms.tree import compress_tree, decompress_tree
+        project = lambda p: decompress_tree(compress_tree(p, FormsSpec())[0])
+
     for i in range(steps):
         params, opt = step(params, opt, batch(i))
+        if project is not None and (i + 1) % polarize_every == 0:
+            params = project(params)
+    if project is not None:
+        params = project(params)
 
     def prompt_fn(rng: "np.random.RandomState", n: int = 8) -> "np.ndarray":
         seq = [rng.randint(0, v)]

@@ -64,8 +64,14 @@ def save(path: str, tree: PyTree, step: int,
     """Synchronous atomic save; returns the final checkpoint directory.
 
     ``extra_meta`` (a msgpack-able dict, e.g. ``dataclasses.asdict(spec)``
-    for a FORMS compression spec) is persisted in ``tree.msgpack`` and
-    readable via :func:`read_meta`.
+    for a FORMS compression spec, or ``forms.autobits.plan_to_meta(spec,
+    plan)`` for a heterogeneous mixed-precision tree) is persisted in
+    ``tree.msgpack`` and readable via :func:`read_meta` — pass the
+    reconstructed plan to ``compress_tree(template, spec, plan=plan)`` to
+    rebuild the exact per-leaf restore template (bits and geometry ride in
+    each ``FormsLinearParams``'s metadata, so :func:`restore` round-trips
+    them structurally; the plan meta is how a fresh process builds the
+    matching template without guessing).
     """
     leaves, treedef = _flatten(tree)
     os.makedirs(path, exist_ok=True)

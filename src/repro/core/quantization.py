@@ -39,10 +39,20 @@ class QuantSpec:
     per_channel: bool = True
 
     def __post_init__(self):
-        if self.bits % self.cell_bits != 0:
+        if self.cell_bits < 1:
+            raise ValueError(f"cell_bits must be >= 1, got {self.cell_bits}")
+        if self.bits < 1 or self.bits > 16:
             raise ValueError(
-                f"bits ({self.bits}) must be a multiple of cell_bits ({self.cell_bits}) "
-                "to fully utilize ReRAM cell resolution (paper §III-C)")
+                f"magnitude bits must be in [1, 16], got {self.bits} — the "
+                f"crossbar stores uint8 codes up to 8 bits and int32 codes "
+                f"above (16 is the serving ceiling; the paper uses 8)")
+        if self.bits % self.cell_bits != 0:
+            valid = [b for b in range(self.cell_bits, 17, self.cell_bits)]
+            raise ValueError(
+                f"bits ({self.bits}) must be a multiple of cell_bits "
+                f"({self.cell_bits}) to fully utilize ReRAM cell resolution "
+                f"(paper §III-C); valid bit-widths at cell_bits="
+                f"{self.cell_bits}: {valid}")
 
     @property
     def levels(self) -> int:

@@ -301,6 +301,12 @@ def forms_param_spec(pstr: str, leaf: FormsLinearParams, ctx: ParallelContext,
 
     Leading (scan / expert) axes follow the dense rules and are shared by
     all three planes.
+
+    Every rule reads geometry off the LEAF (``leaf.m``, the plane shapes),
+    never off a global spec — heterogeneous trees from a mixed-precision
+    plan (``forms.autobits``, per-leaf bits and possibly per-leaf fragment
+    sizes) therefore shard correctly leaf by leaf: a leaf whose own ``m``
+    divides its K shard K-shards even when its neighbours replicate.
     """
     shape = tuple(leaf.mags.shape)
     spec = param_spec(pstr, shape, scanned=scanned)

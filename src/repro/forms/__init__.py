@@ -10,19 +10,27 @@ One spec, one compressed representation, one pipeline:
 * :func:`compress_tree` / :func:`decompress_tree` — whole-model compression
   producing pytrees whose crossbar leaves are real ``FormsLinearParams``,
   consumed directly by ``models/layers.linear`` and the serving engine.
+  ``compress_tree(plan={path: FormsSpec})`` compresses heterogeneously —
+  per-leaf overrides resolved by :func:`spec_for_path` — and
+  :mod:`repro.forms.autobits` derives such plans automatically from a
+  Fisher-diagonal sensitivity sweep (``serve --auto-bits``).
 
 The PR-1 deprecation shims (``repro.core.forms_layer``,
 ``repro.serving.engine.forms_compress_params``) have been REMOVED; this
 package is the only compression surface (see DESIGN.md §9 for the old ->
 new mapping).
 """
+from repro.forms.autobits import (AutoBitsConfig, AutoBitsPlan,
+                                  measure_sensitivity, plan_auto_bits,
+                                  plan_draft_bits, plan_from_meta,
+                                  plan_to_meta)
 from repro.forms.linear import (FormsLinearParams, apply, apply_simulated,
                                 default_spec, from_dense, sparsity_stats,
                                 to_dense)
 from repro.forms.spec import FormsSpec
 from repro.forms.tree import (CompressedParams, CompressReport,
                               compress_tree, compressed_paths,
-                              decompress_tree, shard_tree,
+                              decompress_tree, shard_tree, spec_for_path,
                               tree_sharding_specs, validate_tree_sharding)
 
 __all__ = [
@@ -31,4 +39,7 @@ __all__ = [
     "decompress_tree",
     "compressed_paths", "CompressReport", "CompressedParams",
     "shard_tree", "tree_sharding_specs", "validate_tree_sharding",
+    "spec_for_path",
+    "AutoBitsConfig", "AutoBitsPlan", "measure_sensitivity",
+    "plan_auto_bits", "plan_draft_bits", "plan_to_meta", "plan_from_meta",
 ]

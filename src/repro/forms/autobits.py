@@ -1,0 +1,528 @@
+"""Auto mixed-precision compression search (DESIGN.md §6h).
+
+FORMS serves every tree at one global ``FormsSpec`` — uniform 8-bit
+magnitudes — but Block-Wise Mixed-Precision Quantization (arXiv:2310.12182)
+shows per-block bit-widths can drop far below 8 with modest loss on exactly
+this class of ReRAM crossbar accelerator.  This module turns that headroom
+into a first-class compression *plan*:
+
+1. **Sensitivity pass** — a Fisher-diagonal estimate of the loss curvature
+   (a handful of jitted ``jax.grad`` forwards over calibration batches),
+   combined with the exact per-leaf quantization displacement at every
+   candidate bit-width:
+
+       dL(leaf, b)  ~=  1/2 * sum  F  .  (Q_b(W) - W)^2
+
+   The displacement is computed through the real compression pipeline
+   (``compress_tree`` -> ``decompress_tree`` at each candidate width), so
+   polarization, per-column scales and fragment padding are all priced in.
+   Sensitivities are also aggregated per *fragment-column group* (the
+   ``n_sub_cols``-wide sub-array columns of the PR-1 fragment metadata) for
+   the report — the crossbar-level view of where the loss lives.
+
+2. **Allocator** — a greedy bits-down knapsack over the candidate ladder.
+   The cost model is ``core/perfmodel.ThroughputSpec`` conversion-event
+   arithmetic: a leaf's column must be ADC-converted once per (fragment
+   wave x input bit) per stored *cell*, so dropping magnitude bits removes
+   ``cells_per_weight`` conversion events proportionally.  The modeled op
+   counts are cross-checked against the HLO analyzer's loop-aware FLOP
+   count of the jitted forward (``analysis/hlo.analyze_module``).  Two
+   solve modes share one greedy: maximize modeled throughput subject to a
+   predicted-loss budget (``acc_budget``, the ``serve --auto-bits
+   --acc-budget`` path), or minimize predicted loss subject to a modeled
+   cost target (``plan_draft_bits`` — the speculative draft derivation at
+   the cost of a uniform low-bit draft).
+
+3. **Plan artifact** — :class:`AutoBitsPlan` carries the chosen per-leaf
+   bits, the prediction, and the report; ``plan.specs()`` is the
+   ``{path: FormsSpec}`` map ``compress_tree(plan=...)`` consumes, and
+   ``plan_to_meta``/``plan_from_meta`` round-trip it through checkpoint
+   ``extra_meta`` so a reader can rebuild the heterogeneous restore
+   template exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import perfmodel as pm
+from repro.core.paths import path_str
+from repro.forms.linear import FormsLinearParams
+from repro.forms.spec import FormsSpec
+from repro.forms.tree import compress_tree, compressed_paths, decompress_tree
+
+# ---------------------------------------------------------------------------
+# configuration / artifacts
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoBitsConfig:
+    """Knobs of one auto-bits search.
+
+    acc_budget: max predicted loss increase (mean-NLL nats) of the plan
+      over the uniform base-bits tree — the knapsack constraint.
+    candidate_bits: the bit-width ladder (must be cell-aligned; validated
+      per candidate through ``FormsSpec.with_bits``).
+    min_bits: floor a leaf can be driven down to.
+    calib_batches/calib_batch/calib_len/seed: calibration-stream shape when
+      no explicit batches are given (random tokens — fine for curvature,
+      callers with a real stream should pass ``calib=``).
+    """
+
+    acc_budget: float = 0.05
+    candidate_bits: Tuple[int, ...] = (8, 6, 4, 2)
+    min_bits: int = 2
+    calib_batches: int = 2
+    calib_batch: int = 8
+    calib_len: int = 32
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class LeafSensitivity:
+    """Sensitivity + geometry of one crossbar leaf."""
+
+    path: str
+    stack: int                      # leading layer/expert multiplicity
+    kp: int                         # padded input rows
+    n: int                          # output columns
+    m: int                          # fragment size
+    dl: Dict[int, float]            # bits -> predicted loss delta (absolute)
+    group_dl: Dict[int, np.ndarray]  # bits -> per sub-array column group dl
+
+    def dl_rel(self, bits: int, base: int) -> float:
+        """Predicted loss increase of ``bits`` over the ``base`` width."""
+        return max(0.0, self.dl[bits] - self.dl[base])
+
+
+@dataclasses.dataclass
+class SensitivityTable:
+    """Per-leaf sensitivities + the shared cost model of one sweep."""
+
+    leaves: Dict[str, LeafSensitivity]
+    spec: FormsSpec                 # the base spec of the sweep
+    calib_tokens: int = 0           # tokens seen by the Fisher pass
+    hlo_flops: Optional[float] = None   # analyzer FLOPs of one fwd batch
+    modeled_flops: Optional[float] = None  # 2*MACs of the priced leaves
+
+    def leaf_seconds(self, path: str, bits: int) -> float:
+        ls = self.leaves[path]
+        return modeled_leaf_seconds(ls.stack, ls.kp, ls.n, ls.m, bits,
+                                    self.spec)
+
+    def plan_seconds(self, bits: Dict[str, int]) -> float:
+        return sum(self.leaf_seconds(p, b) for p, b in bits.items())
+
+    def plan_dl(self, bits: Dict[str, int]) -> float:
+        base = self.spec.bits
+        return sum(ls.dl_rel(bits[p], base)
+                   for p, ls in self.leaves.items())
+
+
+@dataclasses.dataclass
+class AutoBitsPlan:
+    """The chosen per-leaf bit assignment plus its prediction and report."""
+
+    spec: FormsSpec                 # base spec (non-bits fields shared)
+    bits: Dict[str, int]            # path -> magnitude bits
+    predicted_dl: float             # predicted mean-NLL increase vs base
+    acc_budget: float               # the budget it was solved under
+    modeled_seconds: float          # modeled ADC time of the plan
+    base_seconds: float             # modeled ADC time of uniform base bits
+    matched_uniform: Optional[int] = None   # cost-matched solve target
+    measured_dl: Optional[float] = None     # held-out NLL delta (validated)
+    table: Optional[SensitivityTable] = None
+
+    @property
+    def modeled_speedup(self) -> float:
+        """Modeled decode-throughput gain over the uniform base-bits tree."""
+        return self.base_seconds / max(self.modeled_seconds, 1e-30)
+
+    def specs(self) -> Dict[str, FormsSpec]:
+        """The ``{path: FormsSpec}`` plan ``compress_tree(plan=...)`` takes."""
+        return {p: self.spec.with_bits(b) for p, b in self.bits.items()}
+
+    def histogram(self) -> Dict[int, int]:
+        hist: Dict[int, int] = {}
+        for b in self.bits.values():
+            hist[b] = hist.get(b, 0) + 1
+        return dict(sorted(hist.items()))
+
+    def top_groups(self, k: int = 3) -> List[Tuple[str, int, float]]:
+        """The most loss-sensitive (leaf, column-group) pairs at the chosen
+        widths — the crossbar sub-arrays that pinned their leaves high."""
+        if self.table is None:
+            return []
+        out = []
+        for p, b in self.bits.items():
+            gd = self.table.leaves[p].group_dl.get(b)
+            if gd is None or not len(gd):
+                continue
+            g = int(np.argmax(gd))
+            out.append((p, g, float(gd[g])))
+        out.sort(key=lambda t: -t[2])
+        return out[:k]
+
+    def summary(self) -> str:
+        hist = "/".join(f"{n}x{b}b" for b, n in self.histogram().items())
+        parts = [f"{len(self.bits)} leaves [{hist}]",
+                 f"modeled speedup {self.modeled_speedup:.2f}x vs uniform "
+                 f"{self.spec.bits}b",
+                 f"predicted dNLL {self.predicted_dl:.4f} "
+                 f"(budget {self.acc_budget:g})"]
+        if self.measured_dl is not None:
+            parts.append(f"measured dNLL {self.measured_dl:+.4f}")
+        if self.matched_uniform is not None:
+            parts.append(f"cost-matched to uniform {self.matched_uniform}b")
+        if self.table is not None and self.table.hlo_flops:
+            cov = (self.table.modeled_flops or 0.0) / self.table.hlo_flops
+            parts.append(f"cost model covers {cov:.0%} of HLO fwd FLOPs")
+        return ", ".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# cost model (ThroughputSpec conversion-event arithmetic)
+# ---------------------------------------------------------------------------
+
+#: FORMS periphery constants of ``perfmodel.forms_throughput`` at the paper's
+#: iso-area design point — 4 ADCs per crossbar at 2.1 GHz (paper §IV-C).
+_ADCS_PER_CROSSBAR = 4
+_ADC_FREQ_GHZ = 2.1
+
+
+def modeled_leaf_seconds(stack: int, kp: int, n: int, m: int, bits: int,
+                         spec: FormsSpec) -> float:
+    """Modeled ADC-limited seconds to produce one input vector's outputs.
+
+    A leaf's logical column needs ``(Kp / m)`` fragment waves, each wave
+    converted once per input bit (``ThroughputSpec.events_per_column_per_
+    input``), and a ``bits``-bit magnitude occupies ``bits / cell_bits``
+    physical cell columns — so conversion events scale linearly with the
+    stored cells and dropping bits buys throughput directly (paper §III-C
+    cell slicing + §IV-C event arithmetic).
+    """
+    t = pm.ThroughputSpec(rows=max(kp, 1), fragment=m,
+                          adcs_per_crossbar=_ADCS_PER_CROSSBAR,
+                          adc_freq_ghz=_ADC_FREQ_GHZ,
+                          input_bits=spec.input_bits)
+    cells = max(1, bits // spec.cell_bits)
+    events = stack * n * cells * t.events_per_column_per_input
+    return events / (t.event_rate_gs * 1e9)
+
+
+def uniform_seconds(table: SensitivityTable, bits: int) -> float:
+    return sum(table.leaf_seconds(p, bits) for p in table.leaves)
+
+
+# ---------------------------------------------------------------------------
+# sensitivity pass
+# ---------------------------------------------------------------------------
+
+
+def _is_forms(x) -> bool:
+    return isinstance(x, FormsLinearParams)
+
+
+def _has_forms_leaves(params: Any) -> bool:
+    return any(_is_forms(l) for l in
+               jax.tree_util.tree_leaves(params, is_leaf=_is_forms))
+
+
+def random_calibration(vocab_size: int, cfg: AutoBitsConfig
+                       ) -> List[jnp.ndarray]:
+    """Seeded random token batches — curvature calibration when no real
+    stream is available (``serve --auto-bits`` on an un-finetuned init)."""
+    rng = np.random.RandomState(cfg.seed)
+    return [jnp.asarray(rng.randint(0, vocab_size,
+                                    size=(cfg.calib_batch, cfg.calib_len)),
+                        jnp.int32)
+            for _ in range(cfg.calib_batches)]
+
+
+def _nll(model: Any, p: Any, toks: jnp.ndarray) -> jnp.ndarray:
+    lg, _ = model.forward(p, {"tokens": toks})
+    ll = jax.nn.log_softmax(lg[:, :-1].astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(ll, toks[:, 1:][..., None], -1))
+
+
+def fisher_diag(model: Any, params: Any, batches: Sequence[jnp.ndarray]
+                ) -> Any:
+    """Mean squared NLL gradient per parameter — the Fisher diagonal (under
+    the model's own predictive distribution this is the empirical-Fisher
+    curvature proxy standard for mixed-precision sensitivity).  One jitted
+    grad per calibration batch."""
+    grad_fn = jax.jit(jax.grad(lambda p, t: _nll(model, p, t)))
+    fisher = jax.tree_util.tree_map(jnp.zeros_like, params)
+    for toks in batches:
+        g = grad_fn(params, toks)
+        fisher = jax.tree_util.tree_map(lambda f, gg: f + gg * gg, fisher, g)
+    return jax.tree_util.tree_map(lambda f: f / max(1, len(batches)), fisher)
+
+
+def measured_nll(model: Any, params: Any, batches: Sequence[jnp.ndarray]
+                 ) -> float:
+    """Mean held-out NLL of a (dense or compressed) tree — the measured
+    accuracy observable the bench records next to the predicted budget."""
+    fn = jax.jit(lambda p, t: _nll(model, p, t))
+    return float(np.mean([np.asarray(fn(params, t)) for t in batches]))
+
+
+def _hlo_forward_flops(model: Any, params: Any, batch: jnp.ndarray
+                      ) -> Optional[float]:
+    """Loop-aware analyzer FLOPs of one jitted forward (best effort)."""
+    try:
+        from repro.analysis.hlo import analyze_module
+        txt = (jax.jit(lambda p, t: model.forward(p, {"tokens": t})[0])
+               .lower(params, batch).compile().as_text())
+        return float(analyze_module(txt).flops)
+    except Exception:           # pragma: no cover - backend text drift
+        return None
+
+
+def measure_sensitivity(model: Any, params: Any,
+                        spec: FormsSpec = FormsSpec(),
+                        cfg: AutoBitsConfig = AutoBitsConfig(),
+                        calib: Optional[Sequence[jnp.ndarray]] = None
+                        ) -> SensitivityTable:
+    """The full sensitivity sweep: Fisher pass + per-leaf displacement at
+    every candidate width.
+
+    The Fisher pass is ``len(calib)`` jitted grad-forwards; the per-width
+    displacements reuse the real compression pipeline (one
+    ``compress_tree`` per candidate) and reduce elementwise — no further
+    forwards.  Already-compressed input trees are reconstructed first so
+    the sweep prices what the target actually serves.
+    """
+    if _has_forms_leaves(params):
+        params = decompress_tree(params)
+    if calib is None:
+        calib = random_calibration(model.config.vocab_size, cfg)
+    fisher = fisher_diag(model, params, calib)
+
+    candidates = sorted({int(b) for b in cfg.candidate_bits} | {spec.bits},
+                        reverse=True)
+    for b in candidates:
+        spec.with_bits(b)       # fail fast on off-ladder candidates
+
+    # per-column quadratic loss: 1/2 sum_rows F * (Q_b(W) - W)^2
+    col_dl = jax.jit(lambda f, d: 0.5 * jnp.sum(
+        (f * d * d).reshape(-1, d.shape[-1]).astype(jnp.float32), axis=0))
+
+    flat_dense = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_fisher = jax.tree_util.tree_flatten(fisher)[0]
+    leaves: Dict[str, LeafSensitivity] = {}
+    for b in candidates:
+        comp, _ = compress_tree(params, spec.with_bits(b))
+        proj = decompress_tree(comp, validate=False)
+        flat_proj = jax.tree_util.tree_flatten(proj)[0]
+        geom = compressed_paths(comp)
+        for (path, w), f, q in zip(flat_dense, flat_fisher, flat_proj):
+            pstr = path_str(path)
+            if pstr not in geom:
+                continue
+            fp = geom[pstr]
+            cols = np.asarray(col_dl(f, q - w))
+            edges = np.arange(0, cols.shape[0], spec.n_sub_cols)
+            groups = np.add.reduceat(cols, edges) if cols.size else cols
+            ls = leaves.get(pstr)
+            if ls is None:
+                stack = int(np.prod(fp.mags.shape[:-2], dtype=np.int64))
+                ls = leaves[pstr] = LeafSensitivity(
+                    path=pstr, stack=max(1, stack),
+                    kp=int(fp.mags.shape[-2]), n=int(fp.mags.shape[-1]),
+                    m=fp.m, dl={}, group_dl={})
+            ls.dl[b] = float(cols.sum())
+            ls.group_dl[b] = groups
+    modeled = sum(2.0 * ls.stack * ls.kp * ls.n for ls in leaves.values())
+    tokens_per_batch = int(calib[0].shape[0] * calib[0].shape[1])
+    hlo = _hlo_forward_flops(model, params, calib[0])
+    return SensitivityTable(
+        leaves=leaves, spec=spec,
+        calib_tokens=sum(int(t.shape[0] * t.shape[1]) for t in calib),
+        hlo_flops=hlo, modeled_flops=modeled * tokens_per_batch)
+
+
+# ---------------------------------------------------------------------------
+# allocator (greedy bits-down knapsack)
+# ---------------------------------------------------------------------------
+
+
+def _ladder(table: SensitivityTable, cfg: AutoBitsConfig) -> List[int]:
+    base = table.spec.bits
+    steps = sorted({b for b in cfg.candidate_bits
+                    if cfg.min_bits <= b <= base}, reverse=True)
+    if not steps or steps[0] != base:
+        steps = [base] + steps
+    return steps
+
+
+def solve_bits(table: SensitivityTable, cfg: AutoBitsConfig = AutoBitsConfig(),
+               acc_budget: Optional[float] = None,
+               seconds_target: Optional[float] = None) -> Dict[str, int]:
+    """Greedy bits-down: repeatedly take the (leaf, step-down) with the best
+    modeled-seconds-saved per unit predicted loss.
+
+    Stop condition is one of two duals sharing the same greedy order:
+    cumulative predicted loss would exceed ``acc_budget`` (throughput-max
+    mode), or modeled seconds reached ``seconds_target`` (loss-min mode,
+    the draft derivation).
+    """
+    if (acc_budget is None) == (seconds_target is None):
+        raise ValueError("pass exactly one of acc_budget / seconds_target")
+    base = table.spec.bits
+    ladder = _ladder(table, cfg)
+    bits = {p: base for p in table.leaves}
+    total_dl = 0.0
+    eps = 1e-12
+    while True:
+        if seconds_target is not None \
+                and table.plan_seconds(bits) <= seconds_target:
+            break
+        best, best_score = None, -1.0
+        for p, ls in table.leaves.items():
+            i = ladder.index(bits[p])
+            if i + 1 >= len(ladder):
+                continue
+            nb = ladder[i + 1]
+            ddl = ls.dl_rel(nb, base) - ls.dl_rel(bits[p], base)
+            if acc_budget is not None and total_dl + ddl > acc_budget:
+                continue
+            dsec = (table.leaf_seconds(p, bits[p])
+                    - table.leaf_seconds(p, nb))
+            score = dsec / max(ddl, eps)
+            if score > best_score:
+                best, best_score = (p, nb, ddl), score
+        if best is None:
+            break
+        p, nb, ddl = best
+        bits[p] = nb
+        total_dl += ddl
+    return bits
+
+
+def uniform_bits_for_budget(table: SensitivityTable,
+                            acc_budget: float,
+                            cfg: AutoBitsConfig = AutoBitsConfig()) -> int:
+    """The lowest uniform width whose predicted loss fits the budget — the
+    matched-budget baseline the mixed plan must beat on modeled cost."""
+    best = table.spec.bits
+    for b in _ladder(table, cfg):
+        if table.plan_dl({p: b for p in table.leaves}) <= acc_budget:
+            best = b
+    return best
+
+
+def plan_auto_bits(model: Any, params: Any,
+                   spec: FormsSpec = FormsSpec(),
+                   cfg: AutoBitsConfig = AutoBitsConfig(),
+                   calib: Optional[Sequence[jnp.ndarray]] = None,
+                   table: Optional[SensitivityTable] = None,
+                   validate: bool = True) -> AutoBitsPlan:
+    """The headline search: sensitivity pass + throughput-max allocation
+    under ``cfg.acc_budget``.  Pass ``table=`` to reuse one sweep across
+    several budgets (e.g. a serving plan and its speculative draft).
+
+    With ``validate=True`` (default) the plan's NLL delta is MEASURED on
+    the calibration stream and the allocation backs off when the quadratic
+    model underestimated: the Fisher expansion is local, so a 2-bit step is
+    far outside its trust region and the predicted delta can be a large
+    undercount.  Each backoff rescales the greedy's internal budget by the
+    measured/predicted miss ratio and re-solves — a few compress+forward
+    passes, converging to a plan whose *measured* delta fits
+    ``cfg.acc_budget`` (or to the uniform base tree in the limit).
+    """
+    if table is None:
+        table = measure_sensitivity(model, params, spec, cfg, calib)
+    if not validate:
+        bits = solve_bits(table, cfg, acc_budget=cfg.acc_budget)
+        return AutoBitsPlan(
+            spec=table.spec, bits=bits, predicted_dl=table.plan_dl(bits),
+            acc_budget=cfg.acc_budget,
+            modeled_seconds=table.plan_seconds(bits),
+            base_seconds=uniform_seconds(table, table.spec.bits),
+            table=table)
+    if _has_forms_leaves(params):
+        params = decompress_tree(params)
+    if calib is None:
+        calib = random_calibration(model.config.vocab_size, cfg)
+    base_comp, _ = compress_tree(params, table.spec)
+    nll_base = measured_nll(model, base_comp, calib)
+    internal = cfg.acc_budget
+    bits = {p: table.spec.bits for p in table.leaves}
+    measured = 0.0
+    for _ in range(4):
+        cand = solve_bits(table, cfg, acc_budget=internal)
+        predicted = table.plan_dl(cand)
+        if all(b == table.spec.bits for b in cand.values()):
+            bits, measured = cand, 0.0
+            break
+        comp, _ = compress_tree(params, table.spec,
+                                plan={p: table.spec.with_bits(b)
+                                      for p, b in cand.items()})
+        delta = measured_nll(model, comp, calib) - nll_base
+        if delta <= cfg.acc_budget:
+            bits, measured = cand, delta
+            break
+        # undercount: shrink the internal budget by the miss ratio (with a
+        # safety margin) and re-solve on the same table
+        miss = delta / max(predicted, 1e-12)
+        internal = min(internal * 0.5, 0.8 * cfg.acc_budget / miss)
+    return AutoBitsPlan(
+        spec=table.spec, bits=bits, predicted_dl=table.plan_dl(bits),
+        acc_budget=cfg.acc_budget, modeled_seconds=table.plan_seconds(bits),
+        base_seconds=uniform_seconds(table, table.spec.bits),
+        measured_dl=measured, table=table)
+
+
+def plan_draft_bits(table: SensitivityTable, match_bits: int = 4,
+                    cfg: AutoBitsConfig = AutoBitsConfig()) -> AutoBitsPlan:
+    """Allocator-derived speculative draft: minimize predicted loss at the
+    modeled cost of a *uniform* ``match_bits`` draft.
+
+    Guarantees meets-or-beats in prediction: if the greedy lands above the
+    uniform plan's predicted loss (possible — greedy is not optimal), the
+    uniform plan itself is returned, so the derived draft is never worse
+    than PR-5's hand-picked uniform draft on the model's own terms.
+    """
+    target = uniform_seconds(table, match_bits)
+    bits = solve_bits(table, cfg, seconds_target=target)
+    uniform = {p: match_bits for p in table.leaves}
+    if table.plan_dl(bits) > table.plan_dl(uniform):
+        bits = uniform
+    return AutoBitsPlan(
+        spec=table.spec, bits=bits, predicted_dl=table.plan_dl(bits),
+        acc_budget=float("inf"), modeled_seconds=table.plan_seconds(bits),
+        base_seconds=uniform_seconds(table, table.spec.bits),
+        matched_uniform=match_bits, table=table)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip (extra_meta helpers)
+# ---------------------------------------------------------------------------
+
+
+def plan_to_meta(spec: FormsSpec, plan: Dict[str, FormsSpec]) -> dict:
+    """msgpack-able checkpoint metadata for a heterogeneous-spec tree: the
+    base spec's fields plus per-path overrides (diff vs base only)."""
+    base = dataclasses.asdict(spec)
+    overrides = {}
+    for p, s in plan.items():
+        d = dataclasses.asdict(s)
+        overrides[p] = {k: v for k, v in d.items() if v != base[k]}
+    return {"spec": base, "plan": overrides}
+
+
+def plan_from_meta(meta: dict) -> Tuple[FormsSpec, Dict[str, FormsSpec]]:
+    """Inverse of :func:`plan_to_meta` — rebuild ``(base_spec, plan)`` from
+    checkpoint metadata so ``compress_tree(init, spec, plan=plan)`` yields
+    the exact restore template (per-leaf bits and geometry included)."""
+    spec = FormsSpec(**{k: (tuple(v) if isinstance(v, list) else v)
+                        for k, v in meta["spec"].items()})
+    plan = {p: dataclasses.replace(spec, **ov)
+            for p, ov in meta["plan"].items()}
+    return spec, plan

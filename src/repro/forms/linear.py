@@ -59,6 +59,7 @@ class FormsLinearParams:
     policy: str = "W"                             # conv row-ordering policy
     out_dtype: str = "float32"                    # dense dtype on decompress
     encoding: str = "binary"                      # cell encoding (spec field)
+    bits: int = 8                                 # magnitude bits of the codes
 
     @property
     def n(self) -> int:
@@ -67,7 +68,8 @@ class FormsLinearParams:
 
 jax.tree_util.register_dataclass(
     FormsLinearParams, data_fields=["mags", "signs", "scale"],
-    meta_fields=["k", "m", "orig_shape", "policy", "out_dtype", "encoding"])
+    meta_fields=["k", "m", "orig_shape", "policy", "out_dtype", "encoding",
+                 "bits"])
 
 
 # Ambient spec for call sites that cannot thread one explicitly (the model
@@ -117,13 +119,19 @@ def sparsity_stats(meter: Optional[SparsityMeter]) -> Iterator[None]:
 
 
 def _resolve_spec(p: FormsLinearParams, spec: Optional[FormsSpec]) -> FormsSpec:
+    # per-leaf geometry stays authoritative: m mismatches are a hard error
+    # (the math would be wrong), while bits is baked into the stored codes —
+    # a mixed-precision tree serves under ONE ambient spec, so the bit-width
+    # is adapted to the leaf rather than trusted from the caller
     if spec is not None:
         if spec.m != p.m:
             raise ValueError(f"spec.m={spec.m} does not match params m={p.m}")
+        if spec.bits != p.bits:
+            spec = dataclasses.replace(spec, bits=p.bits)
         return spec
     if _DEFAULT_SPEC is not None:
-        return dataclasses.replace(_DEFAULT_SPEC, m=p.m)
-    return FormsSpec(m=p.m)
+        return dataclasses.replace(_DEFAULT_SPEC, m=p.m, bits=p.bits)
+    return FormsSpec(m=p.m, bits=p.bits)
 
 
 def _flatten_pad(x: jax.Array, kp: int) -> Tuple[jax.Array, Tuple[int, ...]]:
@@ -158,7 +166,7 @@ def from_dense(w: jax.Array, spec: FormsSpec = FormsSpec()
     params = FormsLinearParams(mags=mags, signs=signs.astype(jnp.int8),
                                scale=scale.reshape(1, -1).astype(jnp.float32),
                                k=int(w.shape[0]), m=spec.m, policy=spec.policy,
-                               encoding=spec.encoding)
+                               encoding=spec.encoding, bits=spec.bits)
     return params, err
 
 

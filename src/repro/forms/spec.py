@@ -109,9 +109,26 @@ class FormsSpec:
 
     def __post_init__(self):
         # fragment/quant validation is delegated to the view constructors so
-        # the rules live in exactly one place (fragments.py / quantization.py)
-        _ = self.fragment
-        _ = self.quant
+        # the rules live in exactly one place (fragments.py / quantization.py);
+        # re-raise with the FormsSpec fields named so a per-leaf override in a
+        # mixed-precision plan fails with the offending combination spelled
+        # out, not a bare QuantSpec/FragmentSpec message
+        try:
+            _ = self.fragment
+        except ValueError as e:
+            raise ValueError(
+                f"invalid fragment geometry m={self.m}, "
+                f"policy={self.policy!r}, n_sub_cols={self.n_sub_cols}: {e}"
+            ) from e
+        try:
+            _ = self.quant
+        except ValueError as e:
+            raise ValueError(
+                f"unsupported bit-width bits={self.bits} at cell_bits="
+                f"{self.cell_bits} (fragment m={self.m}): {e}. "
+                f"Mixed-precision plans must pick per-leaf bits from the "
+                f"cell-aligned ladder (e.g. 2/4/6/8 at 2-bit cells)."
+            ) from e
         if self.rule not in VALID_RULES:
             raise ValueError(
                 f"sign rule must be one of {VALID_RULES}, got {self.rule!r}")
@@ -127,8 +144,6 @@ class FormsSpec:
             raise ValueError(
                 f"zero_skip_keep is a fragment-budget fraction in (0, 1], "
                 f"got {self.zero_skip_keep}")
-        if self.bits < 1:
-            raise ValueError(f"bits must be >= 1, got {self.bits}")
         if self.input_bits < 1:
             raise ValueError(f"input_bits must be >= 1, got {self.input_bits}")
         if self.adc_bits is not None and self.adc_bits < 1:
@@ -165,6 +180,13 @@ class FormsSpec:
         return cls(m=frag.m, policy=frag.policy, n_sub_cols=frag.n_sub_cols,
                    bits=quant.bits, cell_bits=quant.cell_bits,
                    per_channel=quant.per_channel, **kw)
+
+    def with_bits(self, bits: int) -> "FormsSpec":
+        """This spec at a different magnitude bit-width — the per-leaf
+        override the mixed-precision allocator emits (``forms.autobits``).
+        Validation re-runs, so an off-ladder width fails loudly here rather
+        than deep inside ``from_dense``."""
+        return dataclasses.replace(self, bits=bits)
 
     # -- derived quantities (delegated to the canonical spec types) ----------
 

@@ -43,6 +43,8 @@ class CompressReport:
     bytes_compressed: int = 0         # bytes of their FORMS representation
     shardings: Dict[str, str] = dataclasses.field(default_factory=dict)
     # path -> mags PartitionSpec string, when compressed onto a mesh (ctx)
+    bits: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # path -> magnitude bits (heterogeneous under a mixed-precision plan)
 
     @property
     def ratio(self) -> float:
@@ -53,9 +55,18 @@ class CompressReport:
     def max_error(self) -> float:
         return max(self.errors.values()) if self.errors else 0.0
 
+    def bits_histogram(self) -> Dict[int, int]:
+        """bits -> number of compressed leaves stored at that width."""
+        hist: Dict[int, int] = {}
+        for b in self.bits.values():
+            hist[b] = hist.get(b, 0) + 1
+        return dict(sorted(hist.items()))
+
     def summary(self) -> str:
+        hist = self.bits_histogram()
+        bits_str = "/".join(f"{n}x{b}b" for b, n in hist.items()) or "-"
         return (f"{self.num_compressed} leaves compressed "
-                f"({self.num_skipped} left dense), "
+                f"({self.num_skipped} left dense, bits {bits_str}), "
                 f"{self.bytes_dense / 1e6:.2f} MB -> "
                 f"{self.bytes_compressed / 1e6:.2f} MB "
                 f"({self.ratio:.2f}x), max rel-L2 err {self.max_error:.4f}")
@@ -69,6 +80,54 @@ def _is_forms_leaf(x) -> bool:
 # tensors (L, E, in, out) — one crossbar matrix per (layer, expert) — not
 # conv kernels (models/moe.py naming)
 EXPERT_WEIGHT_NAMES = ("w_gate", "w_up", "w_down")
+
+
+def spec_for_path(plan: Optional[Dict[str, FormsSpec]], pstr: str,
+                  default: Optional[FormsSpec] = None) -> FormsSpec:
+    """Resolve the spec of the leaf at ``pstr`` under a per-leaf plan.
+
+    Lookup is by exact path, then by whole-segment suffix (a plan keyed
+    ``"attn/wq"`` matches ``"blocks/attn/wq"``).  The failure modes are
+    loud by design — a per-leaf override must never silently fall back to
+    the global spec:
+
+    * a suffix that matches more than one plan entry raises (ambiguous);
+    * no match and no ``default`` raises ``KeyError`` naming the leaf and
+      the plan's keys (a plan used without a global spec must be total).
+
+    ``compress_tree`` additionally rejects plan entries that matched NO
+    compressed leaf, so a typo'd path fails the compression instead of
+    quietly serving the global spec.
+    """
+    if plan:
+        if pstr in plan:
+            return plan[pstr]
+        hits = [key for key in plan if pstr.endswith("/" + key)]
+        if len(hits) > 1:
+            raise ValueError(
+                f"plan entries {sorted(hits)} all match leaf {pstr!r} — "
+                f"disambiguate with fuller paths (e.g. the exact "
+                f"'{pstr}')")
+        if hits:
+            return plan[hits[0]]
+    if default is None:
+        raise KeyError(
+            f"no spec for leaf {pstr!r}: not covered by the plan "
+            f"(keys: {sorted(plan or {})}) and no global default given")
+    return default
+
+
+def _check_plan_covered(plan: Dict[str, FormsSpec],
+                        compressed: Dict[str, Any]) -> None:
+    """Every plan entry must have matched at least one compressed leaf."""
+    unmatched = [key for key in plan
+                 if key not in compressed
+                 and not any(p.endswith("/" + key) for p in compressed)]
+    if unmatched:
+        raise ValueError(
+            f"plan entries {sorted(unmatched)} matched no compressed leaf — "
+            f"per-leaf overrides never fall back silently.  Compressed "
+            f"leaves: {sorted(compressed)}")
 
 
 def _compress_leaf(pstr: str, leaf: jax.Array,
@@ -90,9 +149,10 @@ def _compress_leaf(pstr: str, leaf: jax.Array,
 
 def compress_tree(
     params: Any,
-    spec: FormsSpec = FormsSpec(),
+    spec: Optional[FormsSpec] = FormsSpec(),
     predicate: Callable[[str, Tuple[int, ...]], bool] = is_crossbar_weight,
     ctx: Optional[Any] = None,
+    plan: Optional[Dict[str, FormsSpec]] = None,
 ) -> Tuple[CompressedParams, CompressReport]:
     """Compress every crossbar-mappable weight of a params pytree.
 
@@ -102,26 +162,43 @@ def compress_tree(
     so the function is idempotent.  ``predicate(path, shape)`` selects the
     leaves to compress (default: the shared crossbar-weight heuristic).
 
+    ``plan`` (a ``{path: FormsSpec}`` map, e.g. from
+    ``forms.autobits.plan_auto_bits``) overrides the spec per leaf — the
+    heterogeneous mixed-precision tree.  Lookup follows
+    :func:`spec_for_path` (exact path, then unambiguous suffix); entries
+    that match no compressed leaf raise, so a typo'd override can never
+    silently fall back to the global ``spec``.  Per-leaf bit-widths land in
+    ``report.bits`` and in each leaf's ``bits`` metadata, which
+    ``to_dense``/``apply`` and the checkpoint round-trip treat as
+    authoritative.
+
     ``ctx`` (a ``distributed.sharding.ParallelContext``) places every
     compressed leaf straight onto its mesh sharding — mags/signs/scale
     co-sharded along N, K sharded only at whole-fragment granularity
-    (``spec.k_shard_unit``) — and records the chosen specs in
-    ``report.shardings``.  Dense (skipped) leaves are left where they are;
-    use :func:`shard_tree` to place the whole tree.
+    (``spec.k_shard_unit``, per leaf when the plan varies ``m``) — and
+    records the chosen specs in ``report.shardings``.  Dense (skipped)
+    leaves are left where they are; use :func:`shard_tree` to place the
+    whole tree.
     """
     flat, treedef = jax.tree_util.tree_flatten_with_path(
         params, is_leaf=_is_forms_leaf)
     report = CompressReport(errors={})
     new_leaves = []
+    compressed: Dict[str, Any] = {}
     for path, leaf in flat:
         pstr = _path_str(path)
         if (_is_forms_leaf(leaf) or not hasattr(leaf, "ndim")
                 or not predicate(pstr, tuple(leaf.shape))):
-            if hasattr(leaf, "ndim") and not _is_forms_leaf(leaf):
+            if _is_forms_leaf(leaf):
+                # idempotent pass-through still counts toward plan coverage
+                compressed[pstr] = leaf
+                report.bits[pstr] = leaf.bits
+            elif hasattr(leaf, "ndim"):
                 report.num_skipped += 1
             new_leaves.append(leaf)
             continue
-        fp = _compress_leaf(pstr, leaf, spec)
+        leaf_spec = spec_for_path(plan, pstr, spec)
+        fp = _compress_leaf(pstr, leaf, leaf_spec)
         if ctx is not None:
             fp = _place_forms_leaf(pstr, fp, ctx)
             report.shardings[pstr] = str(fp.mags.sharding.spec)
@@ -129,12 +206,16 @@ def compress_tree(
         err = float(jnp.linalg.norm(recon - leaf) /
                     jnp.maximum(jnp.linalg.norm(leaf), 1e-12))
         report.errors[pstr] = err
+        report.bits[pstr] = leaf_spec.bits
         report.num_compressed += 1
         report.bytes_dense += leaf.size * leaf.dtype.itemsize
         report.bytes_compressed += (fp.mags.size * fp.mags.dtype.itemsize
                                     + fp.signs.size * fp.signs.dtype.itemsize
                                     + fp.scale.size * fp.scale.dtype.itemsize)
+        compressed[pstr] = fp
         new_leaves.append(fp)
+    if plan:
+        _check_plan_covered(plan, compressed)
     return jax.tree_util.tree_unflatten(treedef, new_leaves), report
 
 

@@ -29,6 +29,18 @@ with optional FORMS compression, mesh sharding and self-speculative decoding.
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --forms --zero-skip block --zero-skip-stats
 
+  # auto mixed precision: Fisher-sensitivity sweep + modeled-throughput
+  # knapsack picks per-leaf magnitude bits under an accuracy budget; the
+  # engine serves the heterogeneous tree and reports greedy parity vs the
+  # uniform width that fits the same budget:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --forms --auto-bits --acc-budget 0.05
+
+  # ... and derive the speculative draft from the same sensitivity table
+  # (per-leaf bits at the modeled cost of a uniform --draft-bits draft):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --forms --auto-bits --speculate --auto-draft --draft-bits 4
+
 With ``--forms`` the weights are compressed via ``repro.forms.compress_tree``
 and the engine decodes directly on the compressed pytree (uint8 magnitudes +
 int8 fragment signs through the polarized-matmul kernel).  ``--decode-block``
@@ -69,6 +81,17 @@ budget; exact either way, dense fallback when the budget is exceeded).
 ``--zero-skip-stats`` measures per-layer activation sparsity on the decode
 path and prints it with the final stats (costs one host callback per
 matmul per decode step).
+
+Auto mixed precision (``--forms`` only; DESIGN.md §6h): ``--auto-bits``
+runs ``forms.autobits`` — a Fisher-diagonal sensitivity sweep over the
+crossbar leaves plus a greedy bits-down knapsack on the modeled ADC
+throughput — and serves the resulting ``{path: FormsSpec}`` plan as a
+heterogeneous compressed tree.  ``--acc-budget`` bounds the predicted
+NLL increase; the launcher also serves the *uniform* width that fits the
+same budget and reports greedy token parity between the two (asserted
+exact when the plan degenerates to that uniform width).  With
+``--speculate --auto-draft`` the draft's per-leaf bits come from the same
+sensitivity table at the modeled cost of a uniform ``--draft-bits`` draft.
 """
 from __future__ import annotations
 
@@ -94,6 +117,18 @@ def main() -> None:
     ap.add_argument("--fragment", type=int, default=8)
     ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--sign-rule", default="energy", choices=("sum", "energy"))
+    ap.add_argument("--auto-bits", action="store_true",
+                    help="auto mixed precision: Fisher-sensitivity sweep + "
+                         "modeled-throughput knapsack assigns per-leaf "
+                         "magnitude bits under --acc-budget (forms serving "
+                         "only)")
+    ap.add_argument("--acc-budget", type=float, default=0.05, metavar="NATS",
+                    help="predicted mean-NLL increase budget of the "
+                         "--auto-bits plan vs the uniform --bits tree")
+    ap.add_argument("--auto-draft", action="store_true",
+                    help="derive the speculative draft's per-leaf bits from "
+                         "the --auto-bits sensitivity table at the modeled "
+                         "cost of a uniform --draft-bits draft")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--decode-block", type=int, default=4,
                     help="tokens decoded per jitted dispatch (host syncs "
@@ -224,6 +259,30 @@ def main() -> None:
     spec = (FormsSpec(m=args.fragment, bits=args.bits, rule=args.sign_rule,
                       encoding=args.encoding)
             if args.forms else None)
+    if (args.auto_bits or args.auto_draft) and not args.forms:
+        raise SystemExit("--auto-bits/--auto-draft pick per-leaf FORMS "
+                         "bit-widths: add --forms")
+    if args.auto_draft and not args.auto_bits:
+        raise SystemExit("--auto-draft reuses the --auto-bits sensitivity "
+                         "table: add --auto-bits")
+    auto = plan = draft_plan = None
+    if args.auto_bits:
+        from repro.forms import autobits as AB
+        acfg = AB.AutoBitsConfig(acc_budget=args.acc_budget)
+        auto = AB.plan_auto_bits(model, params, spec, acfg)
+        plan = auto.specs()
+        print(f"auto-bits: {auto.summary()}")
+        for pth, grp, dl in auto.top_groups():
+            print(f"auto-bits: most sensitive {pth} col-group {grp} "
+                  f"(dl {dl:.2e})")
+        if args.auto_draft:
+            if args.draft_mode != "forms":
+                raise SystemExit("--auto-draft plans FORMS bit-widths: use "
+                                 "--draft-mode forms")
+            dplan = AB.plan_draft_bits(auto.table,
+                                       match_bits=args.draft_bits)
+            draft_plan = dplan.specs()
+            print(f"auto-bits draft: {dplan.summary()}")
     mesh = None
     if args.mesh:
         from repro.launch.mesh import make_mesh, parse_mesh_arg
@@ -236,6 +295,7 @@ def main() -> None:
         mesh = make_mesh(mesh_cfg)
     engine = ServingEngine(model, params, max_len=args.max_len,
                            batch_slots=args.slots, spec=spec,
+                           plan=plan, draft_plan=draft_plan,
                            decode_block=args.decode_block,
                            donate=not args.no_donate, mesh=mesh,
                            page_size=args.page_size or None,
@@ -339,6 +399,41 @@ def main() -> None:
         for tag, s in stats["sparsity"]["layers"].items():
             print(f"sparsity[{tag}]: elem {s['elem_sparsity']:.2f} "
                   f"frag {s['fragment_sparsity']:.2f} calls {s['calls']}")
+    if auto is not None and args.temperature == 0.0:
+        # greedy parity vs the uniform width that fits the same budget: the
+        # mixed plan must never cost more (modeled) than that uniform tree,
+        # and when the allocator degenerates to exactly that width the two
+        # engines must emit identical tokens (same weights -> same greedy
+        # argmax).  A genuinely mixed plan serves different weights, so
+        # token agreement is reported, not asserted.
+        from repro.forms import autobits as AB
+        u = AB.uniform_bits_for_budget(auto.table, args.acc_budget)
+        u_seconds = AB.uniform_seconds(auto.table, u)
+        assert auto.modeled_seconds <= u_seconds + 1e-12, \
+            f"mixed plan modeled slower than uniform {u}b at equal budget"
+        uni = ServingEngine(model, params, max_len=args.max_len,
+                            batch_slots=args.slots,
+                            spec=dataclasses.replace(spec, bits=u),
+                            decode_block=args.decode_block,
+                            donate=not args.no_donate,
+                            page_size=args.page_size or None,
+                            num_pages=args.num_pages)
+        ures = {r.uid: list(r.tokens) for r in uni.run(
+            [Request(uid=r.uid, prompt=np.asarray(r.prompt),
+                     max_new_tokens=args.max_new_tokens)
+             for r in reqs])}
+        got = {r.uid: list(r.tokens) for r in results}
+        pairs = [(got[u_], ures[u_]) for u_ in got]
+        agree = (sum(sum(a == b for a, b in zip(x, y)) for x, y in pairs)
+                 / max(1, sum(len(x) for x, _ in pairs)))
+        degenerate = set(auto.bits.values()) == {u}
+        if degenerate:
+            assert all(x == y for x, y in pairs), \
+                "plan degenerated to the uniform width but tokens differ"
+        print(f"auto-bits parity: matched-budget uniform {u}b, modeled "
+              f"{u_seconds / max(auto.modeled_seconds, 1e-30):.2f}x slower "
+              f"than plan, greedy token agreement {agree:.2f}"
+              + (" (exact, asserted)" if degenerate else ""))
 
 
 if __name__ == "__main__":

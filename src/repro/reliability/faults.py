@@ -179,11 +179,13 @@ def inject_leaf(fp: FormsLinearParams, fault: FaultModel, pstr: str,
     Operates in the leaf's native domain — uint8 magnitude codes and int8
     fragment signs — and returns a leaf of identical structure (shapes,
     dtypes, shardings, metadata) whose codes are the corrupted read-back.
-    ``spec`` supplies the quantization-grid geometry (bits / cell_bits);
-    the readout discipline comes from ``fp.encoding``.
+    ``spec`` supplies the quantization-grid geometry (cell_bits etc.); the
+    readout discipline comes from ``fp.encoding``, and — like the serving
+    path — the leaf's own ``m``/``bits`` metadata override the caller's so
+    a mixed-precision tree injects into each leaf's actual cell count.
     """
-    spec = dataclasses.replace(spec, m=fp.m) if spec is not None \
-        else FormsSpec(m=fp.m)
+    spec = dataclasses.replace(spec, m=fp.m, bits=fp.bits) \
+        if spec is not None else FormsSpec(m=fp.m, bits=fp.bits)
     rng = _leaf_rng(fault.seed, pstr)
     mags = np.asarray(jax.device_get(fp.mags))
     signs = np.asarray(jax.device_get(fp.signs))

@@ -576,6 +576,13 @@ class ServingEngine:
     verify routes B*(K+1) tokens per step, so identity needs a capacity
     that drops neither path's tokens.
 
+    ``plan={path: FormsSpec}`` serves a *heterogeneous* compressed tree:
+    per-leaf spec overrides (bit-widths, fragment geometry) resolved by
+    ``forms.spec_for_path`` on top of the engine spec —
+    ``forms.autobits.plan_auto_bits`` derives one from a sensitivity sweep
+    (``serve --auto-bits``).  ``draft_plan`` does the same for the
+    speculative draft's quantization (``plan_draft_bits``).
+
     ``health=HealthConfig(...)`` (compressed trees only) arms the
     reliability loop of DESIGN.md §6f: golden-probe drift detection every
     ``probe_every`` rounds plus automatic re-encoding of corrupted leaves
@@ -587,6 +594,7 @@ class ServingEngine:
     def __init__(self, model: Model, params: Any, *, max_len: int = 512,
                  batch_slots: int = 8, forms: bool = False,
                  spec: Optional[FormsSpec] = None,
+                 plan: Optional[Dict[str, FormsSpec]] = None,
                  fragment: int = 8, bits: int = 8, rng_seed: int = 0,
                  decode_block: int = 4, donate: bool = True,
                  mesh: Optional[Any] = None,
@@ -596,6 +604,7 @@ class ServingEngine:
                  speculate: bool = False,
                  draft_k: int = 4, draft_bits: int = 4,
                  draft_mode: str = "forms",
+                 draft_plan: Optional[Dict[str, FormsSpec]] = None,
                  draft_fragment: Optional[int] = None,
                  draft_layer_step: int = 1,
                  adaptive_k: bool = True,
@@ -617,6 +626,11 @@ class ServingEngine:
                 "zero_skip / zero_skip_stats act on the FORMS matmul path — "
                 "enable compression too (forms=True, spec=..., or serve "
                 "--forms)")
+        if plan is not None and not (forms or spec is not None):
+            raise ValueError(
+                "plan= is a per-leaf override map over the engine's FORMS "
+                "spec — enable compression too (forms=True, spec=..., or "
+                "serve --forms)")
         if forms or spec is not None:
             self.spec = spec if spec is not None else FormsSpec(m=fragment,
                                                                 bits=bits)
@@ -626,8 +640,8 @@ class ServingEngine:
                 self.spec = dataclasses.replace(
                     self.spec, zero_skip=zero_skip,
                     zero_skip_keep=zero_skip_keep)
-            params, self.compression_report = compress_tree(params, self.spec,
-                                                            ctx=self.ctx)
+            params, self.compression_report = compress_tree(
+                params, self.spec, ctx=self.ctx, plan=plan)
             self.compression_errors = self.compression_report.errors
         self.max_len = max_len
         self.slots = batch_slots
@@ -689,7 +703,8 @@ class ServingEngine:
             # float projection of the compressed tree when forms is on)
             draft_model, draft_params, self.draft_report = SP.make_draft(
                 model, params, spec_cfg,
-                ctx=self.ctx if draft_mode == "forms" else None)
+                ctx=self.ctx if draft_mode == "forms" else None,
+                plan=draft_plan)
             draft_cache = draft_model.init_paged_cache(
                 num_pages, self.page_size, batch_slots, max_len)
             if self.ctx is not None:

@@ -143,7 +143,8 @@ def skip_layers(model: Model, params: Any, layer_step: int
 
 def make_draft_tree(params: Any, spec: Optional[FormsSpec] = None, *,
                     bits: int = 4, mode: str = "forms",
-                    ctx: Optional[Any] = None
+                    ctx: Optional[Any] = None,
+                    plan: Optional[Dict[str, FormsSpec]] = None
                     ) -> Tuple[Any, CompressReport]:
     """Derive a low-bit draft pytree from the target's weights.
 
@@ -157,28 +158,39 @@ def make_draft_tree(params: Any, spec: Optional[FormsSpec] = None, *,
     An already-compressed target is reconstructed first (``compress_tree``
     is idempotent on ``FormsLinearParams`` leaves, so a 4-bit draft of an
     8-bit tree must re-quantize the float projection, not alias the 8-bit
-    leaves).  Returns ``(tree, CompressReport)``.
+    leaves).  ``plan`` makes the draft heterogeneous: a ``{path:
+    FormsSpec}`` per-leaf override map (``forms.autobits.plan_draft_bits``
+    derives one at the modeled cost of the uniform ``bits`` draft).
+    Returns ``(tree, CompressReport)``.
     """
     if _has_forms_leaves(params):
         params = decompress_tree(params)
     if mode == "int":
+        if plan is not None:
+            raise ValueError("per-leaf plans are a forms-mode feature; "
+                             "mode='int' drafts are uniform")
         tree, before, after = quantize_tree(params, bits=bits)
         return tree, CompressReport(errors={}, bytes_dense=before,
                                     bytes_compressed=after)
     if mode != "forms":
         raise ValueError(f"draft mode must be 'forms' or 'int', got {mode!r}")
     spec = spec if spec is not None else FormsSpec(bits=bits)
-    return compress_tree(params, spec, ctx=ctx)
+    return compress_tree(params, spec, ctx=ctx, plan=plan)
 
 
 def make_draft(model: Model, params: Any, cfg: SpeculateConfig, *,
-               ctx: Optional[Any] = None
+               ctx: Optional[Any] = None,
+               plan: Optional[Dict[str, FormsSpec]] = None
                ) -> Tuple[Model, Any, CompressReport]:
     """Full draft derivation: optional layer skipping + low-bit weights.
 
     Returns ``(draft_model, draft_params, report)``.  The float projection
     of a compressed target is reconstructed before slicing so the draft
-    approximates what the target actually serves.
+    approximates what the target actually serves.  ``plan`` rides through
+    to :func:`make_draft_tree` — an allocator-derived per-leaf bits map
+    replaces the uniform ``cfg.bits`` quantization (``plan`` lives outside
+    :class:`SpeculateConfig` because the config is a frozen hashable the
+    jitted rounds key on, and the plan is per-tree data, not policy).
     """
     if _has_forms_leaves(params):
         params = decompress_tree(params)
@@ -186,7 +198,7 @@ def make_draft(model: Model, params: Any, cfg: SpeculateConfig, *,
     spec = (FormsSpec(m=cfg.fragment, bits=cfg.bits)
             if cfg.fragment is not None else FormsSpec(bits=cfg.bits))
     draft_params, report = make_draft_tree(draft_params, spec, bits=cfg.bits,
-                                           mode=cfg.mode, ctx=ctx)
+                                           mode=cfg.mode, ctx=ctx, plan=plan)
     return draft_model, draft_params, report
 
 

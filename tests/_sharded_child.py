@@ -226,6 +226,71 @@ def check_restore():
     print("restore ok")
 
 
+def check_mixed_precision():
+    """Heterogeneous mixed-precision serving on the mesh: a per-leaf plan
+    (varying bits AND fragment geometry) shards every leaf by its OWN
+    geometry — the m=16 override forces its K axis to replicate (8-row
+    shards would split fragments) while m=8 neighbours shard N — greedy
+    decode is token-identical to the single-device engine, and a sharded
+    checkpoint restore rebuilds the mixed template from plan_from_meta
+    metadata and places it straight onto the mesh."""
+    import tempfile
+
+    from repro.checkpoint import manager as ckpt
+    from repro.distributed import sharding as shd
+    from repro.forms import FormsSpec, compress_tree
+    from repro.forms.autobits import plan_from_meta, plan_to_meta
+
+    m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    spec = FormsSpec(m=8)
+    plan = {"attn/wq": spec.with_bits(4),
+            "mlp/gate": spec.with_bits(2),
+            "attn/wo": dataclasses.replace(spec, m=16, bits=6)}
+
+    ref = ServingEngine(m, params, max_len=32, batch_slots=4, spec=spec,
+                        plan=plan)
+    assert ref.compression_report.bits["blocks/attn/wq"] == 4
+    want = {r.uid: r.tokens for r in ref.run(_requests())}
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    eng = ServingEngine(m, params, max_len=32, batch_slots=4, spec=spec,
+                        plan=plan, mesh=mesh)
+    wq = eng.params["blocks"]["attn"]["wq"]
+    assert wq.bits == 4 and _spec_entries(wq.mags)[-1] == "model", \
+        (wq.bits, wq.mags.sharding)
+    assert eng.params["blocks"]["mlp"]["gate"].bits == 2
+    # wo carries its own geometry: K=32 over the 4-way model axis gives
+    # 8-row shards — whole fragments at m=8, but NOT at this leaf's m=16,
+    # so the per-leaf granularity rule must replicate K here
+    wo = eng.params["blocks"]["attn"]["wo"]
+    assert (wo.m, wo.bits) == (16, 6)
+    assert _spec_entries(wo.mags)[-2] is None, wo.mags.sharding
+    assert _spec_entries(wo.signs)[-2] is None, wo.signs.sharding
+    got = {r.uid: r.tokens for r in eng.run(_requests())}
+    assert got == want, (got, want)
+
+    # sharded restore of the mixed tree, template rebuilt from the meta
+    comp, _ = compress_tree(params, spec, plan=plan)
+    ctx = shd.ParallelContext.for_mesh(mesh)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, comp, step=1, extra_meta=plan_to_meta(spec, plan))
+        spec2, plan2 = plan_from_meta(ckpt.read_meta(d)["extra"])
+        template, _ = compress_tree(m.init(jax.random.PRNGKey(1)), spec2,
+                                    plan=plan2)
+        sh = shd.params_shardings(template, ctx, fsdp=False)
+        out, _ = ckpt.restore(d, template, shardings=sh)
+    rwq = out["blocks"]["attn"]["wq"]
+    assert rwq.bits == 4 and _spec_entries(rwq.mags)[-1] == "model"
+    assert out["blocks"]["attn"]["wo"].m == 16
+    np.testing.assert_array_equal(
+        np.asarray(rwq.mags), np.asarray(comp["blocks"]["attn"]["wq"].mags))
+    eng2 = ServingEngine(m, out, max_len=32, batch_slots=4, mesh=mesh)
+    got2 = {r.uid: r.tokens for r in eng2.run(_requests())}
+    assert got2 == want, (got2, want)
+    print("mixed_precision ok:", want)
+
+
 def check_repair():
     """Self-healing on an 8-device mesh: stuck-at faults injected into one
     mesh-sharded compressed leaf drift the health probes, the scan's

@@ -1,0 +1,285 @@
+"""Auto mixed-precision search (repro.forms.autobits, DESIGN.md §6h).
+
+Covers the allocator on a synthetic sensitivity table (budget monotonicity,
+the dual solve modes, the draft's meets-or-beats guard), per-leaf plan
+resolution (``spec_for_path`` and ``compress_tree(plan=...)`` failure
+modes), ``with_bits`` ladder validation, the checkpoint-meta round-trip,
+and one end-to-end sensitivity sweep + plan on a tiny trained-shape model.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import pytest
+
+from repro.forms import FormsSpec, compress_tree, compressed_paths, \
+    decompress_tree, spec_for_path
+from repro.forms import autobits as AB
+
+
+# ---------------------------------------------------------------------------
+# synthetic sensitivity table (no model needed)
+# ---------------------------------------------------------------------------
+
+def _leaf(path, kp, n, dl, m=8):
+    return AB.LeafSensitivity(
+        path=path, stack=1, kp=kp, n=n, m=m, dl=dict(dl),
+        group_dl={b: np.asarray([v], np.float32) for b, v in dl.items()})
+
+
+def _table():
+    spec = FormsSpec(m=8, bits=8)
+    leaves = {
+        # cheap to drop, big crossbar (the greedy should hit this first)
+        "blocks/mlp/gate": _leaf("blocks/mlp/gate", 128, 256,
+                                 {8: 0.01, 6: 0.011, 4: 0.013, 2: 0.02}),
+        # moderately sensitive
+        "blocks/attn/wq": _leaf("blocks/attn/wq", 64, 64,
+                                {8: 0.02, 6: 0.03, 4: 0.08, 2: 0.4}),
+        # very sensitive (should be pinned high under tight budgets)
+        "head": _leaf("head", 64, 64,
+                      {8: 0.05, 6: 0.3, 4: 1.5, 2: 6.0}),
+    }
+    return AB.SensitivityTable(leaves=leaves, spec=spec)
+
+
+def test_solve_bits_requires_exactly_one_mode():
+    t = _table()
+    with pytest.raises(ValueError):
+        AB.solve_bits(t)
+    with pytest.raises(ValueError):
+        AB.solve_bits(t, acc_budget=0.1, seconds_target=1.0)
+
+
+def test_solve_bits_budget_monotone_and_feasible():
+    t = _table()
+    prev_sec = None
+    for budget in (0.0, 0.005, 0.05, 0.5, 100.0):
+        bits = AB.solve_bits(t, acc_budget=budget)
+        assert t.plan_dl(bits) <= budget + 1e-12
+        sec = t.plan_seconds(bits)
+        if prev_sec is not None:
+            assert sec <= prev_sec + 1e-18  # more budget never costs more
+        prev_sec = sec
+    # zero budget: nothing moves; huge budget: everything bottoms out
+    assert set(AB.solve_bits(t, acc_budget=0.0).values()) == {8}
+    assert set(AB.solve_bits(t, acc_budget=100.0).values()) == {2}
+
+
+def test_solve_bits_spends_budget_where_it_is_cheap():
+    bits = AB.solve_bits(_table(), acc_budget=0.05)
+    # the big cheap leaf drops below the expensive sensitive one
+    assert bits["blocks/mlp/gate"] < bits["head"]
+    assert bits["head"] == 8
+
+
+def test_draft_plan_meets_or_beats_uniform():
+    t = _table()
+    for match in (4, 6):
+        draft = AB.plan_draft_bits(t, match_bits=match)
+        uniform = {p: match for p in t.leaves}
+        assert draft.matched_uniform == match
+        assert draft.predicted_dl <= t.plan_dl(uniform) + 1e-12
+        assert draft.modeled_seconds <= AB.uniform_seconds(t, match) + 1e-12
+    # matching the base width degenerates to the base tree (nothing to buy)
+    at_base = AB.plan_draft_bits(t, match_bits=8)
+    assert set(at_base.bits.values()) == {8}
+    assert at_base.predicted_dl == 0.0
+
+
+def test_uniform_bits_for_budget():
+    t = _table()
+    dl_at = {b: t.plan_dl({p: b for p in t.leaves}) for b in (6, 4, 2)}
+    assert AB.uniform_bits_for_budget(t, 0.0) == 8
+    assert AB.uniform_bits_for_budget(t, dl_at[6] + 1e-9) == 6
+    assert AB.uniform_bits_for_budget(t, dl_at[2] + 1e-9) == 2
+
+
+def test_modeled_seconds_scale_with_cells_and_size():
+    spec = FormsSpec(m=8, bits=8)
+    s8 = AB.modeled_leaf_seconds(1, 64, 64, 8, 8, spec)
+    s4 = AB.modeled_leaf_seconds(1, 64, 64, 8, 4, spec)
+    s2 = AB.modeled_leaf_seconds(1, 64, 64, 8, 2, spec)
+    # conversion events are linear in stored cells: 8b=4 cells, 4b=2, 2b=1
+    assert s8 == pytest.approx(2 * s4) and s4 == pytest.approx(2 * s2)
+    assert AB.modeled_leaf_seconds(2, 64, 64, 8, 8, spec) \
+        == pytest.approx(2 * s8)
+
+
+def test_plan_histogram_and_summary():
+    t = _table()
+    plan = AB.AutoBitsPlan(
+        spec=t.spec, bits={"blocks/mlp/gate": 2, "blocks/attn/wq": 4,
+                           "head": 8},
+        predicted_dl=0.01, acc_budget=0.05,
+        modeled_seconds=t.plan_seconds({"blocks/mlp/gate": 2,
+                                        "blocks/attn/wq": 4, "head": 8}),
+        base_seconds=AB.uniform_seconds(t, 8), table=t)
+    assert plan.histogram() == {2: 1, 4: 1, 8: 1}
+    assert plan.modeled_speedup > 1.0
+    # groups are ranked by loss AT THE CHOSEN widths: wq pushed to 4 bits
+    # (dl 0.08) outranks head kept at 8 (dl 0.05)
+    top = plan.top_groups(k=1)
+    assert top and top[0][0] == "blocks/attn/wq"
+    assert top[0][2] == pytest.approx(0.08)
+    s = plan.summary()
+    assert "1x2b/1x4b/1x8b" in s and "budget 0.05" in s
+
+
+# ---------------------------------------------------------------------------
+# per-leaf plan resolution
+# ---------------------------------------------------------------------------
+
+def test_spec_for_path_exact_suffix_and_failures():
+    s8, s4 = FormsSpec(bits=8), FormsSpec(bits=4)
+    plan = {"blocks/attn/wq": s4, "wo": s8}
+    assert spec_for_path(plan, "blocks/attn/wq") is s4       # exact
+    assert spec_for_path(plan, "blocks/attn/wo") is s8       # suffix
+    assert spec_for_path(plan, "blocks/mlp/up", default=s8) is s8
+    with pytest.raises(KeyError):                            # no silent miss
+        spec_for_path(plan, "blocks/mlp/up")
+    with pytest.raises(KeyError):
+        spec_for_path(None, "blocks/mlp/up")
+    # suffix matches whole segments only — "q" must not match "wq"
+    with pytest.raises(KeyError):
+        spec_for_path({"q": s4}, "blocks/attn/wq")
+    # two entries matching one leaf is ambiguous, not first-wins
+    with pytest.raises(ValueError):
+        spec_for_path({"attn/wq": s4, "wq": s8}, "blocks/attn/wq")
+
+
+def test_compress_tree_plan_mixed_bits():
+    params = {"blocks": {"attn": {"wq": jnp.ones((2, 32, 16))},
+                         "mlp": {"gate": jnp.ones((2, 32, 32))}},
+              "fc1": jax.random.normal(jax.random.PRNGKey(0), (64, 16))}
+    spec = FormsSpec(m=8)
+    plan = {"attn/wq": spec.with_bits(4), "mlp/gate": spec.with_bits(2)}
+    comp, rep = compress_tree(params, spec, plan=plan)
+    assert rep.bits == {"blocks/attn/wq": 4, "blocks/mlp/gate": 2,
+                        "fc1": 8}
+    assert rep.bits_histogram() == {2: 1, 4: 1, 8: 1}
+    leaves = compressed_paths(comp)
+    assert leaves["blocks/attn/wq"].bits == 4
+    assert leaves["blocks/mlp/gate"].bits == 2
+    assert leaves["fc1"].bits == 8
+    # each leaf equals its own uniform-spec compression, exactly
+    solo, _ = compress_tree(params, spec.with_bits(4))
+    np.testing.assert_array_equal(
+        np.asarray(leaves["blocks/attn/wq"].mags),
+        np.asarray(compressed_paths(solo)["blocks/attn/wq"].mags))
+    # and the mixed tree decompresses without an ambient spec
+    dec = decompress_tree(comp)
+    assert dec["blocks"]["attn"]["wq"].shape == (2, 32, 16)
+
+
+def test_compress_tree_rejects_uncovered_plan_entries():
+    params = {"fc": jnp.ones((32, 16))}
+    spec = FormsSpec(m=8)
+    with pytest.raises(ValueError, match="matched no compressed leaf"):
+        compress_tree(params, spec, plan={"attn/wq": spec.with_bits(4)})
+
+
+def test_compress_tree_plan_without_default_must_be_total():
+    params = {"fc": jnp.ones((32, 16)), "fc2": jnp.ones((32, 16))}
+    spec = FormsSpec(m=8)
+    with pytest.raises(KeyError):
+        compress_tree(params, None, plan={"fc": spec.with_bits(4)})
+
+
+def test_with_bits_validates_ladder():
+    spec = FormsSpec(m=8, cell_bits=2)
+    assert spec.with_bits(6).cells_per_weight == 3
+    for bad in (3, 5, 0, 17):
+        with pytest.raises(ValueError, match="bits"):
+            spec.with_bits(bad)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint meta round-trip
+# ---------------------------------------------------------------------------
+
+def test_plan_meta_roundtrip_through_msgpack():
+    spec = FormsSpec(m=8, bits=8, rule="sum", input_bits=12)
+    plan = {"attn/wq": spec.with_bits(4),
+            "mlp/gate": dataclasses.replace(spec, bits=2, m=16)}
+    meta = AB.plan_to_meta(spec, plan)
+    # overrides are diffs vs base only
+    assert meta["plan"]["attn/wq"] == {"bits": 4}
+    assert meta["plan"]["mlp/gate"] == {"bits": 2, "m": 16}
+    # survive the checkpoint serialization boundary
+    meta2 = msgpack.unpackb(msgpack.packb(meta))
+    spec2, plan2 = AB.plan_from_meta(meta2)
+    assert spec2 == spec
+    assert plan2 == plan
+
+
+# ---------------------------------------------------------------------------
+# end-to-end on a tiny model
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    from repro.configs import get_reduced
+    from repro.models.registry import build
+
+    cfg = dataclasses.replace(get_reduced("yi-9b"), num_layers=2, d_model=32,
+                              num_heads=2, num_kv_heads=2, head_dim=16,
+                              d_ff=64, vocab_size=64, dtype="float32")
+    m = build(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def test_measure_sensitivity_and_plan(tiny_lm):
+    model, params = tiny_lm
+    spec = FormsSpec(m=8)
+    cfg = AB.AutoBitsConfig(acc_budget=0.05, calib_batches=2, calib_batch=4,
+                            calib_len=16)
+    table = AB.measure_sensitivity(model, params, spec, cfg)
+    comp, _ = compress_tree(params, spec)
+    assert set(table.leaves) == set(compressed_paths(comp))
+    for ls in table.leaves.values():
+        assert set(ls.dl) == {8, 6, 4, 2}
+        assert all(v >= 0.0 for v in ls.dl.values())
+        # displacement loss grows as bits drop
+        assert ls.dl_rel(2, 8) >= ls.dl_rel(4, 8) >= 0.0
+        assert ls.group_dl[2].shape == \
+            ((ls.n + spec.n_sub_cols - 1) // spec.n_sub_cols,)
+    assert table.calib_tokens == 2 * 4 * 16
+
+    plan = AB.plan_auto_bits(model, params, spec, cfg, table=table,
+                             validate=False)
+    assert plan.predicted_dl <= cfg.acc_budget + 1e-12
+    assert plan.modeled_seconds <= plan.base_seconds + 1e-18
+    assert set(plan.bits) == set(table.leaves)
+    # the plan feeds compress_tree directly and lands its widths
+    comp2, rep2 = compress_tree(params, spec, plan=plan.specs())
+    assert rep2.bits == plan.bits
+
+
+def test_plan_auto_bits_validated_measures_delta(tiny_lm):
+    model, params = tiny_lm
+    cfg = AB.AutoBitsConfig(acc_budget=10.0, calib_batches=1, calib_batch=4,
+                            calib_len=16)
+    plan = AB.plan_auto_bits(model, params, FormsSpec(m=8), cfg)
+    assert plan.measured_dl is not None
+    assert plan.measured_dl <= cfg.acc_budget
+
+
+def test_engine_plan_requires_compression(tiny_lm):
+    from repro.serving.engine import ServingEngine
+
+    model, params = tiny_lm
+    with pytest.raises(ValueError, match="plan="):
+        ServingEngine(model, params, max_len=16,
+                      plan={"attn/wq": FormsSpec(m=8, bits=4)})
+
+
+def test_speculate_int_mode_rejects_plan(tiny_lm):
+    from repro.serving import speculate as SP
+
+    model, params = tiny_lm
+    with pytest.raises(ValueError, match="plan"):
+        SP.make_draft_tree(params, mode="int",
+                           plan={"attn/wq": FormsSpec(m=8, bits=4)})

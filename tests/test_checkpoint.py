@@ -64,6 +64,50 @@ def test_manager_async(tmp_path):
     assert s == 3
 
 
+def test_heterogeneous_forms_plan_roundtrip(tmp_path):
+    """A mixed-precision compressed tree (per-leaf bit-widths from an
+    autobits plan) checkpoints with its plan in ``extra_meta``; a fresh
+    reader rebuilds the exact template via ``plan_from_meta`` +
+    ``compress_tree(plan=...)``, restores every leaf's bits/geometry/codes
+    bit-exactly, and the restored tree serves token-identically."""
+    from repro.forms import FormsSpec, compress_tree, compressed_paths
+    from repro.forms.autobits import plan_from_meta, plan_to_meta
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = dataclasses.replace(get_reduced("yi-9b"), num_layers=2, d_model=32,
+                              num_heads=2, num_kv_heads=2, head_dim=16,
+                              d_ff=64, vocab_size=64, dtype="float32")
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    spec = FormsSpec(m=8)
+    plan = {"attn/wq": spec.with_bits(4), "mlp/gate": spec.with_bits(2)}
+    comp, rep = compress_tree(params, spec, plan=plan)
+    assert rep.bits["blocks/attn/wq"] == 4
+    assert rep.bits["blocks/mlp/gate"] == 2
+    ckpt.save(str(tmp_path), comp, step=7,
+              extra_meta=plan_to_meta(spec, plan))
+
+    # fresh-process protocol: meta -> (spec, plan) -> template -> restore
+    spec2, plan2 = plan_from_meta(ckpt.read_meta(str(tmp_path))["extra"])
+    assert spec2 == spec and plan2 == plan
+    template, _ = compress_tree(m.init(jax.random.PRNGKey(1)), spec2,
+                                plan=plan2)
+    restored, step = ckpt.restore(str(tmp_path), template)
+    assert step == 7
+    got = compressed_paths(restored)
+    for p, fp in compressed_paths(comp).items():
+        assert (got[p].bits, got[p].m) == (fp.bits, fp.m), p
+        for plane in ("mags", "signs", "scale"):
+            a, b = getattr(fp, plane), getattr(got[p], plane)
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            assert a.dtype == b.dtype
+
+    reqs = [Request(uid=0, prompt=np.array([3, 4, 5]), max_new_tokens=6)]
+    want = ServingEngine(m, comp, max_len=32, batch_slots=2).run(reqs)
+    got_r = ServingEngine(m, restored, max_len=32, batch_slots=2).run(reqs)
+    assert got_r[0].tokens == want[0].tokens
+
+
 def test_bit_exact_resume(tmp_path):
     """Train 6 steps; vs train 3 + checkpoint + restore + 3: identical params.
 

@@ -68,6 +68,15 @@ def test_restore_straight_into_sharded_layout():
     assert "restore ok" in out
 
 
+def test_mixed_precision_plan_on_mesh_parity_and_restore():
+    """A heterogeneous per-leaf plan (mixed bits + an m=16 geometry
+    override) serves token-identically to the single-device engine, shards
+    each leaf by its own geometry, and restores onto the mesh from
+    plan_from_meta checkpoint metadata."""
+    out = _run_child("mixed_precision")
+    assert "mixed_precision ok" in out
+
+
 def test_forms_param_spec_granularity_unit():
     """In-process unit check of the co-sharding rule (no devices needed):
     K shards must hold whole fragments, scale never shards its row axis."""
