@@ -1,0 +1,210 @@
+"""Sustained-load serving benchmark: chunked fleet scheduler vs bulk admit.
+
+The FORMS claim the fleet scheduler serves (DESIGN.md §6i) is about tails
+under continuous load, so this bench measures exactly that: one seeded
+open-loop trace (serving/loadgen.py — Poisson arrivals, mixed prompt and
+output lengths, an interactive/batch priority mix) with ONE adversarial
+long prompt planted mid-trace, played twice through the SAME weights:
+
+* ``baseline`` — the fleet scheduler in whole-prompt mode
+  (``prefill_chunk=0``): admission bulk-prefills the entire prompt while
+  every active decode slot stalls — the pre-fleet behavior, with the
+  fleet's SLO instrumentation.
+* ``chunked`` — page-aligned chunked prefill under a per-round token
+  budget, priorities and preemption armed.
+
+Both runs are greedy and must emit IDENTICAL token sequences (asserted) —
+the scheduler moves *when* work happens, never *what* is computed.  The
+interesting rows are the interactive-class tails: the adversarial prompt's
+bulk prefill lands in the baseline's inter-token p99, while the chunked
+scheduler bounds it at one chunk per round.
+
+Rows append to the repo-root ``BENCH_serving.json`` trajectory under the
+``load-smoke`` label (us_per_call carries microseconds for latencies and
+raw counts/ratios otherwise — see each row's ``derived`` note).  With
+``--check-regression`` (the CI load-smoke job) the run FAILS if the
+chunked scheduler's interactive deadline misses exceed the last committed
+``load-smoke`` record by more than 2 — the committed history is the
+baseline, so an SLO regression has to be deliberate.
+
+  PYTHONPATH=src python -m benchmarks.bench_load --smoke
+  PYTHONPATH=src python -m benchmarks.bench_load --smoke --check-regression
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Any, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit, header, tiny_serving_cfg
+
+TRAJECTORY = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serving.json")
+LABEL = "load-smoke"
+MISS_TOLERANCE = 2      # allowed deadline-miss slack vs the committed row
+
+
+def _engines(smoke: bool):
+    from repro.models.registry import build
+    from repro.serving.engine import ServingEngine
+
+    cfg = tiny_serving_cfg()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len, page = (512, 4) if smoke else (1024, 8)
+    # 4 slots so several interactive decodes are live while the adversarial
+    # prompt prefills — the baseline's stall has to land in their windows
+    mk = lambda slo: ServingEngine(model, params, max_len=max_len,
+                                   batch_slots=4, page_size=page, slo=slo)
+    # the baseline is the pre-fleet behavior (whole-prompt admission, no
+    # preemption) with the fleet's SLO instrumentation bolted on
+    baseline = mk({"prefill_chunk": 0, "step_token_budget": 0,
+                   "preempt": False})
+    # chunk = 4 pages: big enough that per-round dispatch overhead stays
+    # small vs the chunk's compute, small enough to bound the decode stall
+    chunked = mk({"prefill_chunk": 4 * page, "step_token_budget": 16 * page})
+    return cfg, baseline, chunked, max_len
+
+
+def _trace(vocab: int, smoke: bool):
+    from repro.serving.loadgen import LoadGenConfig, generate
+
+    cfg = LoadGenConfig(
+        n_requests=32 if smoke else 64,
+        rate=200.0, seed=0,
+        prompt_len=(2, 12), out_len=(16, 32),
+        batch_frac=0.25,
+        deadline_ms=1500.0,              # interactive SLO
+        adversarial_len=480 if smoke else 960,
+        adversarial_count=4,             # a sustained stall, not a one-shot
+        vocab=vocab)
+    return cfg, generate(cfg)
+
+
+def _warm(engine, adv_len: int, vocab: int) -> None:
+    """Compile every shape the measured trace will touch (chunk widths,
+    decode round, and — baseline — the adversarial prompt's prefill
+    bucket), so the tails measure scheduling, not tracing."""
+    from repro.serving.engine import Request
+
+    rng = np.random.RandomState(7)
+    # one run() per length: a batched chunk dispatch pads every slot to the
+    # round's largest width bucket, so co-admitting these would compile only
+    # the biggest bucket and leave the smaller ones to compile mid-trace
+    for n in (2, 12, adv_len):
+        engine.run([Request(uid=f"warm-{n}",
+                            prompt=rng.randint(1, vocab, size=n),
+                            max_new_tokens=3)])
+    engine.scheduler.reset_slo_stats()   # tails measure the trace only
+
+
+def _run(engine, reqs) -> Tuple[Dict[str, Any], float, Dict[Any, List[int]]]:
+    t0 = time.perf_counter()
+    results = engine.run(reqs)
+    dt = time.perf_counter() - t0
+    return engine.stats()["slo"], dt, {r.uid: list(r.tokens) for r in results}
+
+
+def _emit_side(tag: str, slo: Dict[str, Any], dt: float) -> None:
+    ia = slo["per_class"]["interactive"]
+    in_deadline = ia["completed"] - ia["deadline_misses"]
+    emit(f"serving_slo.{tag}.interactive_itl_p99",
+         ia["inter_token_ms"]["p99"] * 1e3, "us, inter-token p99")
+    emit(f"serving_slo.{tag}.interactive_ttft_p99",
+         ia["ttft_ms"]["p99"] * 1e3, "us, time-to-first-token p99")
+    emit(f"serving_slo.{tag}.deadline_misses",
+         float(ia["deadline_misses"]), "count, interactive class")
+    emit(f"serving_slo.{tag}.goodput",
+         in_deadline / max(dt, 1e-9), "req/s completed within deadline")
+    emit(f"serving_slo.{tag}.preemptions", float(slo["preemptions"]),
+         "count, all classes")
+
+
+def _committed_misses() -> float:
+    """Interactive deadline misses of the last committed load-smoke row."""
+    if not os.path.exists(TRAJECTORY):
+        return float("inf")
+    try:
+        with open(TRAJECTORY) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return float("inf")
+    if not isinstance(data, list):
+        data = [data]
+    for rec in reversed(data):
+        if rec.get("label") != LABEL:
+            continue
+        for row in rec.get("rows", []):
+            if row.get("name") == "serving_slo.chunked.deadline_misses":
+                return float(row["us_per_call"])
+    return float("inf")
+
+
+def run(smoke: bool = True, check_regression: bool = False) -> None:
+    cfg, baseline, chunked, _ = _engines(smoke)
+    lg_cfg, _ = _trace(cfg.vocab_size, smoke)
+    print(f"# load: {lg_cfg.n_requests} reqs at {lg_cfg.rate:.0f}/s, "
+          f"adversarial prompt {lg_cfg.adversarial_len} tok, "
+          f"deadline {lg_cfg.deadline_ms:.0f}ms", flush=True)
+
+    from repro.serving.loadgen import generate
+    prev_misses = _committed_misses()
+
+    _warm(baseline, lg_cfg.adversarial_len, cfg.vocab_size)
+    slo_b, dt_b, toks_b = _run(baseline, generate(lg_cfg))
+    _warm(chunked, lg_cfg.adversarial_len, cfg.vocab_size)
+    slo_c, dt_c, toks_c = _run(chunked, generate(lg_cfg))
+
+    assert toks_b == toks_c, (
+        "chunked scheduler diverged from bulk admission on the same greedy "
+        "trace — scheduling must never change the computed tokens")
+
+    _emit_side("baseline", slo_b, dt_b)
+    _emit_side("chunked", slo_c, dt_c)
+    p99_b = slo_b["per_class"]["interactive"]["inter_token_ms"]["p99"]
+    p99_c = slo_c["per_class"]["interactive"]["inter_token_ms"]["p99"]
+    emit("serving_slo.itl_p99_improvement", p99_b / max(p99_c, 1e-9),
+         "x, baseline/chunked interactive inter-token p99 (>1 = chunked "
+         "wins)")
+
+    slo_rows = [r for r in common.rows() if r[0].startswith("serving_slo.")]
+    common.append_trajectory(TRAJECTORY, slo_rows, label=LABEL)
+
+    if check_regression:
+        cur = float(slo_c["per_class"]["interactive"]["deadline_misses"])
+        if prev_misses == float("inf"):
+            print("# no committed load-smoke record yet — this run seeds "
+                  "the baseline", flush=True)
+        elif cur > prev_misses + MISS_TOLERANCE:
+            print(f"# REGRESSION: interactive deadline misses {cur:.0f} > "
+                  f"committed {prev_misses:.0f} + {MISS_TOLERANCE}",
+                  flush=True)
+            sys.exit(1)
+        else:
+            print(f"# deadline misses {cur:.0f} vs committed "
+                  f"{prev_misses:.0f} (+{MISS_TOLERANCE} allowed) — OK",
+                  flush=True)
+    print("# LOAD BENCH OK", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small seeded trace (the CI load-smoke job)")
+    ap.add_argument("--check-regression", action="store_true",
+                    help="fail if interactive deadline misses regress vs "
+                         "the last committed load-smoke record")
+    args = ap.parse_args()
+    header()
+    run(smoke=args.smoke, check_regression=args.check_regression)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,13 @@ with optional FORMS compression, mesh sharding and self-speculative decoding.
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --forms --mesh data=2,model=4 --fake-devices 8
 
+  # SLO fleet scheduling (DESIGN.md §6i): chunked prefill + priorities +
+  # deadlines under seeded open-loop sustained load with one adversarial
+  # long prompt in the mix:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --prefill-chunk 32 --step-token-budget 128 --deadline-ms 500 \
+      --loadgen n=64,rate=100,batch-frac=0.25,adversarial=96
+
   # fault-tolerant serving: inject ReRAM faults into the live compressed
   # weights, probe for logit drift every 8 rounds, auto-repair:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
@@ -147,6 +154,37 @@ def main() -> None:
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share page-aligned prompt prefixes across "
                          "concurrent requests (paged serving only)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    metavar="TOKENS",
+                    help="SLO fleet scheduler (serving/sched.py): prefill "
+                         "prompts in page-aligned chunks of ~TOKENS "
+                         "interleaved with decode rounds, so one long "
+                         "prompt can't stall every active decode "
+                         "(0 = whole-prompt admission); any SLO flag "
+                         "switches the engine to the fleet scheduler")
+    ap.add_argument("--step-token-budget", type=int, default=None,
+                    metavar="TOKENS",
+                    help="fleet scheduler per-round token budget shared by "
+                         "decode and chunked prefill (0 = unbounded)")
+    ap.add_argument("--priority-default", default=None,
+                    choices=("interactive", "batch"),
+                    help="fleet scheduler priority class for requests that "
+                         "don't set one (interactive preempts batch by "
+                         "page eviction)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="fleet scheduler default completion deadline "
+                         "relative to arrival; admission is "
+                         "earliest-deadline-first within priority, misses "
+                         "are counted per class in stats()['slo']")
+    ap.add_argument("--loadgen", default=None, metavar="SPEC",
+                    help="drive the engine with the seeded open-loop load "
+                         "generator (serving/loadgen.py) instead of the "
+                         "--requests batch: comma-separated keys, e.g. "
+                         "'n=64,rate=100,seed=0,batch-frac=0.25,"
+                         "adversarial=96' (n, rate, seed, prompt-lo, "
+                         "prompt-hi, out-lo, out-hi, batch-frac, "
+                         "deadline-ms, batch-deadline-ms, adversarial, "
+                         "adversarial-count)")
     ap.add_argument("--speculate", action="store_true",
                     help="self-speculative decoding: low-bit draft + "
                          "one-forward verification (paged families only)")
@@ -256,6 +294,71 @@ def main() -> None:
     if (args.zero_skip != "off" or args.zero_skip_stats) and not args.forms:
         raise SystemExit("--zero-skip/--zero-skip-stats act on the FORMS "
                          "matmul path: add --forms")
+    slo_flags = [n for n, v in (("--prefill-chunk", args.prefill_chunk),
+                                ("--step-token-budget",
+                                 args.step_token_budget),
+                                ("--priority-default", args.priority_default),
+                                ("--deadline-ms", args.deadline_ms),
+                                ("--loadgen", args.loadgen))
+                 if v is not None]
+    if slo_flags:
+        if not args.page_size:
+            raise SystemExit(f"{'/'.join(slo_flags)} need the SLO fleet "
+                             "scheduler, which schedules KV pages (chunked "
+                             "prefill, preemption-by-page-eviction): drop "
+                             "--page-size 0")
+        if not model.supports_paged:
+            raise SystemExit(f"{'/'.join(slo_flags)} need the SLO fleet "
+                             f"scheduler, but family {cfg.family!r} has no "
+                             "paged path (O(1) recurrent state — nothing to "
+                             "chunk or evict): pick an attention family")
+    if args.loadgen is not None and args.prompt_len is not None:
+        raise SystemExit("--loadgen draws its own prompt-length mix from "
+                         "the seed: drop --prompt-len (or drop --loadgen "
+                         "for fixed-length prompts)")
+    lg_cfg = None
+    if args.loadgen is not None:
+        from repro.serving.loadgen import LoadGenConfig
+        kv: dict = {}
+        for part in filter(None, args.loadgen.split(",")):
+            if "=" not in part:
+                raise SystemExit(f"--loadgen: expected key=value, "
+                                 f"got {part!r}")
+            k, v = part.split("=", 1)
+            kv[k.strip()] = v.strip()
+        known = {"n": int, "rate": float, "seed": int, "prompt-lo": int,
+                 "prompt-hi": int, "out-lo": int, "out-hi": int,
+                 "batch-frac": float, "deadline-ms": float,
+                 "batch-deadline-ms": float, "adversarial": int,
+                 "adversarial-count": int}
+        bad = sorted(set(kv) - set(known))
+        if bad:
+            raise SystemExit(f"--loadgen: unknown key(s) {bad}; "
+                             f"known: {sorted(known)}")
+        g = {k: known[k](v) for k, v in kv.items()}
+        lg_cfg = LoadGenConfig(
+            n_requests=g.get("n", args.requests),
+            rate=g.get("rate", 100.0), seed=g.get("seed", 0),
+            prompt_len=(g.get("prompt-lo", 2), g.get("prompt-hi", 8)),
+            out_len=(g.get("out-lo", 4),
+                     g.get("out-hi", args.max_new_tokens)),
+            batch_frac=g.get("batch-frac", 0.25),
+            deadline_ms=g.get("deadline-ms"),
+            batch_deadline_ms=g.get("batch-deadline-ms"),
+            adversarial_len=g.get("adversarial", 0),
+            adversarial_count=g.get("adversarial-count", 1),
+            vocab=cfg.vocab_size, temperature=args.temperature)
+    slo = None
+    if slo_flags:
+        from repro.serving.sched import SLOConfig
+        slo = SLOConfig(
+            prefill_chunk=(args.prefill_chunk
+                           if args.prefill_chunk is not None else 32),
+            step_token_budget=(args.step_token_budget
+                               if args.step_token_budget is not None
+                               else 128),
+            default_priority=args.priority_default or "interactive",
+            default_deadline_ms=args.deadline_ms)
     spec = (FormsSpec(m=args.fragment, bits=args.bits, rule=args.sign_rule,
                       encoding=args.encoding)
             if args.forms else None)
@@ -314,7 +417,8 @@ def main() -> None:
                            stats_every=args.stats_every,
                            zero_skip=args.zero_skip,
                            zero_skip_keep=args.zero_skip_keep,
-                           zero_skip_stats=args.zero_skip_stats)
+                           zero_skip_stats=args.zero_skip_stats,
+                           slo=slo)
     if engine.compression_report is not None:
         print(f"forms: {engine.compression_report.summary()} "
               f"(encoding={args.encoding})")
@@ -349,12 +453,22 @@ def main() -> None:
             and any(e is not None for e in tuple(s.spec)))
         print(f"mesh: {dict(mesh.shape)} over {jax.device_count()} devices, "
               f"{n_sharded} param leaves sharded")
-    rng = np.random.RandomState(0)
-    plen = lambda: (args.prompt_len if args.prompt_len else rng.randint(2, 6))
-    reqs = [Request(uid=i, prompt=rng.randint(0, cfg.vocab_size, size=plen()),
-                    max_new_tokens=args.max_new_tokens,
-                    temperature=args.temperature)
-            for i in range(args.requests)]
+    if lg_cfg is not None:
+        from repro.serving.loadgen import generate
+        reqs = generate(lg_cfg)
+        print(f"loadgen: {lg_cfg.n_requests} requests at "
+              f"{lg_cfg.rate:.0f}/s (seed {lg_cfg.seed}, "
+              f"batch_frac {lg_cfg.batch_frac}, "
+              f"adversarial {lg_cfg.adversarial_len})")
+    else:
+        rng = np.random.RandomState(0)
+        plen = lambda: (args.prompt_len if args.prompt_len
+                        else rng.randint(2, 6))
+        reqs = [Request(uid=i,
+                        prompt=rng.randint(0, cfg.vocab_size, size=plen()),
+                        max_new_tokens=args.max_new_tokens,
+                        temperature=args.temperature)
+                for i in range(args.requests)]
     t0 = time.perf_counter()
     results = engine.run(reqs)
     dt = time.perf_counter() - t0
@@ -390,6 +504,23 @@ def main() -> None:
                      f"frag {ov['fragment_sparsity']:.2f} "
                      f"({ov['calls']} matmuls)")
     print("stats: " + ", ".join(parts))
+    if "slo" in stats:
+        s = stats["slo"]
+        print(f"slo: ttft p50 {s['ttft_ms']['p50']:.1f}ms "
+              f"p99 {s['ttft_ms']['p99']:.1f}ms, "
+              f"itl p50 {s['inter_token_ms']['p50']:.2f}ms "
+              f"p99 {s['inter_token_ms']['p99']:.2f}ms, "
+              f"preempt {s['preemptions']} (resumed {s['resumes']}), "
+              f"miss {s['deadline_misses']}, "
+              f"chunks {s['chunked_prefill']['calls']}"
+              f"/{s['chunked_prefill']['tokens']}tok")
+        for cls, c in s["per_class"].items():
+            print(f"slo[{cls}]: {c['completed']} done, "
+                  f"ttft p99 {c['ttft_ms']['p99']:.1f}ms, "
+                  f"itl p99 {c['inter_token_ms']['p99']:.2f}ms, "
+                  f"miss {c['deadline_misses']}, "
+                  f"preempt {c['preemptions']}, "
+                  f"queue peak {c['queue_peak']}")
     if "health" in stats:
         for ev in stats["health"]["events"]:
             print(f"health[{ev['round']}]: "

@@ -39,6 +39,7 @@ device.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -51,6 +52,8 @@ from repro.distributed.sharding import parallel_context
 from repro.forms.linear import FormsLinearParams, default_spec
 from repro.forms.tree import compressed_paths
 from repro.reliability.faults import FaultModel, FaultReport, inject_tree
+
+EVENT_LOG_WINDOW = 256    # health events retained; older ones are counted
 
 __all__ = ["HealthConfig", "HealthMonitor"]
 
@@ -114,7 +117,11 @@ class HealthMonitor:
         self.repairs = 0
         self.last_drift = 0.0
         self.flagged: Dict[str, Dict[str, Any]] = {}   # last scan's scoreboard
-        self.events: List[Dict[str, Any]] = []
+        # rotating window: a sustained-load run ticks for hours — keep the
+        # recent events, count (don't keep) the ones that rolled off
+        self.events: "collections.deque[Dict[str, Any]]" = collections.deque(
+            maxlen=EVENT_LOG_WINDOW)
+        self.events_dropped = 0
         self._chaos: List[Tuple[int, FaultModel, Optional[Sequence[str]]]] = []
         self.fault_reports: List[FaultReport] = []
 
@@ -250,8 +257,8 @@ class HealthMonitor:
             runner.params, report = inject_tree(runner.params, fault,
                                                 spec=self.spec, paths=paths)
             self.fault_reports.append(report)
-            self.events.append({"round": round_, "event": "chaos",
-                                "detail": report.summary()})
+            self._log_event({"round": round_, "event": "chaos",
+                             "detail": report.summary()})
 
     # ------------------------------------------------------------------
     # the scheduler hook
@@ -267,17 +274,22 @@ class HealthMonitor:
             return
         t0 = time.perf_counter()
         board = self.scan(runner.params)
-        self.events.append({
+        self._log_event({
             "round": round_, "event": "drift", "drift": drift,
             "leaves": sorted(board)})
         if not self.config.auto_repair or not board:
             return
         runner.params = self.repair(runner.params, sorted(board))
         drift_after = self.probe(runner.params)
-        self.events.append({
+        self._log_event({
             "round": round_, "event": "repair", "leaves": sorted(board),
             "drift_after": drift_after,
             "ms": (time.perf_counter() - t0) * 1e3})
+
+    def _log_event(self, event: Dict[str, Any]) -> None:
+        if len(self.events) == self.events.maxlen:
+            self.events_dropped += 1
+        self.events.append(event)
 
     def stats(self) -> Dict[str, Any]:
         """The ``engine.stats()["health"]`` payload."""
@@ -287,6 +299,7 @@ class HealthMonitor:
             "last_drift": self.last_drift,
             "flagged": self.flagged,
             "events": list(self.events),
+            "events_dropped": self.events_dropped,
         }
 
 

@@ -52,6 +52,8 @@ advance by the runner-reported counts, never by an assumed fixed block.
 """
 from __future__ import annotations
 
+import collections
+import copy
 import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Tuple
@@ -76,6 +78,14 @@ class Request:
     prompt: np.ndarray            # (prompt_len,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0
+    # SLO fields, consumed by the fleet scheduler (serving/sched.py) and
+    # ignored by the plain Scheduler: priority class ("interactive"/"batch";
+    # "" = the fleet's default), a completion deadline relative to arrival,
+    # and an open-loop arrival offset relative to run() start (the load
+    # generator stamps these; 0.0 = available immediately).
+    priority: str = ""
+    deadline_ms: Optional[float] = None
+    arrival_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -87,6 +97,11 @@ class Result:
 
 
 _MIN_BUCKET = 8
+
+# rotating-window cap on the scheduler's admission log (satellite of the
+# fleet-scheduler PR: a sustained-load run() admits tens of thousands of
+# requests; the log exists for tests/debugging, not as an unbounded history)
+ADMISSION_LOG_WINDOW = 1024
 
 
 class ModelRunner:
@@ -146,6 +161,7 @@ class ModelRunner:
                                donate_argnums=(1,) if donate else (),
                                **self._out_shardings_kw())
         self._prefill_fns: Dict[int, Any] = {}
+        self._chunk_fns: Dict[int, Any] = {}
 
     def _decode_impl(self, p, c, toks, pos, temps, key, step):
         """The shared decode-block scan: ``decode_block`` model steps with
@@ -264,6 +280,77 @@ class ModelRunner:
         return int(tok)
 
     # ------------------------------------------------------------------
+    # chunked (incremental) prefill — the fleet scheduler's admission path
+    # ------------------------------------------------------------------
+
+    def chunk_width(self, n: int) -> int:
+        """Power-of-two chunk bucket (min ``_MIN_BUCKET``) so the fleet
+        scheduler compiles one chunk variant per width, like prefill
+        buckets.  Chunks never exceed ``max_len``."""
+        b = _MIN_BUCKET
+        while b < n:
+            b *= 2
+        return min(b, self.max_len)
+
+    def _get_chunk(self, width: int):
+        """The jitted chunked-prefill step at ``width`` padded columns.
+
+        One bounded multi-token ``decode_paged`` call advances every
+        prefilling slot by its granted chunk: token ``(b, t)`` lands at
+        cache position ``pos[b] + t`` through the slot's block table
+        (in-chunk causality falls out of decode attention's
+        ``kpos <= pos`` mask — the same path the speculative verify
+        already proves exact), and the sampled token at per-slot column
+        ``cols[b]`` is the request's first generated token when the chunk
+        reaches the prompt end (discarded otherwise).  Padded columns and
+        non-prefilling slots commit into scratch-redirected/garbage rows
+        that the padded-bucket invariant makes dead: every row is
+        rewritten before any mask can admit its position.
+        """
+        fn = self._chunk_fns.get(width)
+        if fn is None:
+            def _chunk_fn(p, c, toks, pos, tables, cols, temps, key):
+                with default_spec(self.spec), sparsity_stats(self.meter):
+                    logits, c = self.model.decode_paged(p, toks, c, pos,
+                                                        tables)
+                    lg = jnp.take_along_axis(
+                        logits, cols[:, None, None],
+                        axis=1)[:, 0].astype(jnp.float32)
+                    tok = _sample_on_device(lg, temps, key)
+                return tok, c
+
+            fn = jax.jit(_chunk_fn,
+                         donate_argnums=(1,) if self.donate else (),
+                         **self._out_shardings_kw())
+            self._chunk_fns[width] = fn
+        return fn
+
+    def prefill_chunk(self, tokens: np.ndarray, positions: np.ndarray,
+                      block_tables: np.ndarray, cols: np.ndarray,
+                      temps: np.ndarray) -> np.ndarray:
+        """Advance chunked prefill for a batch of slots; returns the (B,)
+        sampled tokens (valid only for slots whose chunk covers the last
+        prompt position).  ``tokens``: (B, width) chunk rows starting at
+        per-slot cache position ``positions[b]``; ``block_tables`` must
+        zero the rows of slots not prefilling this call (their commits are
+        then scratch-redirected).  Requires the paged cache — the fleet
+        scheduler falls back to whole-prompt admission otherwise."""
+        if not self.paged:
+            raise ValueError("chunked prefill needs the paged cache "
+                             "(page_size=...)")
+        self._key, sub = jax.random.split(self._key)
+        fn = self._get_chunk(tokens.shape[1])
+        with parallel_context(self.ctx):
+            tok, self.cache = fn(
+                self.params, self.cache,
+                jnp.array(tokens, jnp.int32, copy=True),
+                jnp.array(positions, jnp.int32, copy=True),
+                jnp.array(block_tables, jnp.int32, copy=True),
+                jnp.array(cols, jnp.int32, copy=True),
+                jnp.array(temps, jnp.float32, copy=True), sub)
+        return np.asarray(tok)
+
+    # ------------------------------------------------------------------
     # decode
     # ------------------------------------------------------------------
 
@@ -347,7 +434,14 @@ class Scheduler:
         self.log_every = int(log_every)  # decode rounds between stat lines
         self.rounds = 0
         self.max_concurrent = 0          # peak simultaneously-active slots
-        self.admissions: List[Tuple[int, Tuple[int, ...]]] = []
+        # rotating admission log: (uid, pages) of the most recent
+        # ADMISSION_LOG_WINDOW admissions; older entries roll off and are
+        # counted in ``admissions_dropped`` (stats()) instead of growing
+        # without bound across a sustained-load run
+        self.admissions: "collections.deque[Tuple[int, Tuple[int, ...]]]" = \
+            collections.deque(maxlen=ADMISSION_LOG_WINDOW)
+        self.admissions_dropped = 0
+        self.last_shared = 0             # prefix pages of the last reservation
         if self.paged:
             ps = runner.page_size
             self.n_tables = KV.pages_for(max_len, ps)
@@ -364,29 +458,44 @@ class Scheduler:
     # ------------------------------------------------------------------
 
     def _reserve_pages(self, uid: int, slot: int, prompt: np.ndarray,
-                       max_new: int) -> Optional[np.ndarray]:
+                       max_new: int, *, shared_cap: Optional[int] = None,
+                       rows: Optional[int] = None) -> Optional[np.ndarray]:
         """Reserve every page the request can touch (prefill bucket +
         decode budget, capped at max_len); returns the prefill
         destination-page vector, or None if the free-page budget blocks.
         Prefix-shared pages are refcounted instead of allocated, and their
         prefill destinations are redirected to scratch so the shared
-        contents are never rewritten."""
+        contents are never rewritten.
+
+        ``shared_cap`` bounds how many prefix pages may be shared (the
+        fleet scheduler's chunked admission SKIPS shared positions instead
+        of recomputing into scratch, so it must keep the last prompt token
+        on an owned page); ``rows`` overrides the reserved-row count (the
+        chunked path never writes a whole prefill bucket, so it reserves
+        exactly ``prompt + max_new`` rows).  ``self.last_shared`` reports
+        the shared-page count of this reservation."""
         ps = self.runner.page_size
         n = len(prompt)
         bucket = self.runner.bucket_for(n)
-        rows = min(max(bucket, n + max_new), self.max_len)
+        if rows is None:
+            rows = min(max(bucket, n + max_new), self.max_len)
         need = KV.pages_for(rows, ps)
         shared = self.prefix.match(prompt) if self.prefix is not None else []
+        if shared_cap is not None:
+            shared = shared[:shared_cap]
         own = self.allocator.alloc(need - len(shared))
         if own is None:
             return None
         self.allocator.share(shared)
         pages = shared + own
+        self.last_shared = len(shared)
         self.slot_pages[slot] = pages
         self.block_tables[slot] = 0
         self.block_tables[slot, :need] = pages
+        if len(self.admissions) == self.admissions.maxlen:
+            self.admissions_dropped += 1
         self.admissions.append((uid, tuple(pages)))
-        n_bucket_pages = KV.pages_for(bucket, ps)
+        n_bucket_pages = min(KV.pages_for(bucket, ps), need)
         return np.asarray(
             [KV.SCRATCH_PAGE if j < len(shared) else pages[j]
              for j in range(n_bucket_pages)], np.int32)
@@ -612,7 +721,8 @@ class ServingEngine:
                  stats_every: int = 0,
                  zero_skip: Optional[str] = None,
                  zero_skip_keep: float = 0.5,
-                 zero_skip_stats: bool = False):
+                 zero_skip_stats: bool = False,
+                 slo: Optional[Any] = None):
         self.model = model
         self.cfg = model.config
         self.ctx: Optional[ParallelContext] = (
@@ -649,6 +759,12 @@ class ServingEngine:
 
         self.paged = bool(page_size) and model.supports_paged
         self.page_size = int(page_size) if self.paged else None
+        if slo is not None and not self.paged:
+            raise ValueError(
+                "slo= (the SLO-aware fleet scheduler) schedules pages: "
+                "chunked prefill and preemption-by-page-eviction need the "
+                "paged KV cache — pass page_size=... and an attention "
+                "family (recurrent families have no paged path)")
         # speculation needs the bounded multi-token paged verify; recurrent
         # families (and page_size=0) fall back to the plain engine, like the
         # paged-cache fallback itself
@@ -743,10 +859,19 @@ class ServingEngine:
             from repro.reliability.health import HealthMonitor
             self.health = HealthMonitor(model, self.runner.params, health,
                                         spec=self.spec, ctx=self.ctx)
-        self.scheduler = Scheduler(self.runner, slots=batch_slots,
-                                   max_len=max_len, allocator=allocator,
-                                   prefix=prefix, health=self.health,
-                                   log_every=stats_every)
+        if slo is not None:
+            from repro.serving.sched import FleetScheduler, SLOConfig
+            if isinstance(slo, dict):
+                slo = SLOConfig(**slo)
+            self.scheduler: Scheduler = FleetScheduler(
+                self.runner, slots=batch_slots, max_len=max_len,
+                allocator=allocator, prefix=prefix, health=self.health,
+                log_every=stats_every, cfg=slo)
+        else:
+            self.scheduler = Scheduler(self.runner, slots=batch_slots,
+                                       max_len=max_len, allocator=allocator,
+                                       prefix=prefix, health=self.health,
+                                       log_every=stats_every)
 
     # --- delegation (the engine surface tests/benches/launchers consume) ---
 
@@ -784,11 +909,19 @@ class ServingEngine:
 
     def stats(self) -> Dict[str, Any]:
         """Serving counters: scheduler occupancy, page-pool occupancy
-        (free/used/shared/high-water), prefix-cache hits, and — with
-        speculation on — acceptance-rate/tokens-per-round."""
+        (free/used/shared/high-water), prefix-cache hits, with speculation
+        on acceptance-rate/tokens-per-round, and with the fleet scheduler
+        the ``"slo"`` block (TTFT/inter-token percentiles, preemption and
+        deadline-miss counts, queue depths per class).
+
+        The returned dict is a DEEP-COPIED snapshot: the health/sparsity/
+        SLO sub-dicts are mutated by the serving loop, and a caller polling
+        mid-run (the load generator does) must never observe partial
+        mutation or have its snapshot change under it."""
         out: Dict[str, Any] = {
             "max_concurrent": self.scheduler.max_concurrent,
             "rounds": self.scheduler.rounds,
+            "admissions_dropped": self.scheduler.admissions_dropped,
         }
         if self.page_allocator is not None:
             out["pages"] = self.page_allocator.stats()
@@ -800,7 +933,9 @@ class ServingEngine:
             out["health"] = self.health.stats()
         if self.sparsity_meter is not None:
             out["sparsity"] = self.sparsity_meter.summary()
-        return out
+        if hasattr(self.scheduler, "slo_stats"):
+            out["slo"] = self.scheduler.slo_stats()
+        return copy.deepcopy(out)
 
     def inject_faults(self, fault: Any, paths: Optional[List[str]] = None
                       ) -> Any:

@@ -231,6 +231,11 @@ class PageAllocator:
         # pop() hands out low page ids first (stable tests/debugging)
         self._free: List[int] = list(range(num_pages - 1, SCRATCH_PAGE, -1))
         self.high_water = 0          # peak pages simultaneously in use
+        # lifetime accounting (eviction/restore churn shows up here: a
+        # preempted-then-resumed request allocates its pages twice)
+        self.total_allocated = 0     # pages handed out over the lifetime
+        self.total_freed = 0         # pages returned to the free list
+        self.failed_allocs = 0       # alloc() calls refused for lack of pages
 
     @property
     def capacity(self) -> int:
@@ -255,15 +260,20 @@ class PageAllocator:
             "used": self.used_pages,
             "shared": int((self._refs[SCRATCH_PAGE + 1:] > 1).sum()),
             "high_water": self.high_water,
+            "total_allocated": self.total_allocated,
+            "total_freed": self.total_freed,
+            "failed_allocs": self.failed_allocs,
         }
 
     def alloc(self, n: int) -> Optional[List[int]]:
         """Allocate ``n`` pages (refcount 1 each), or None if short."""
         if n > len(self._free):
+            self.failed_allocs += 1
             return None
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             self._refs[p] = 1
+        self.total_allocated += n
         self.high_water = max(self.high_water, self.used_pages)
         return pages
 
@@ -286,6 +296,7 @@ class PageAllocator:
                 freed.append(p)
             elif self._refs[p] < 0:
                 raise ValueError(f"page {p} released more times than held")
+        self.total_freed += len(freed)
         return freed
 
 
@@ -306,6 +317,7 @@ class PrefixCache:
         self.page_size = page_size
         self._entries: Dict[bytes, List[int]] = {}
         self.hits = 0
+        self.evictions = 0           # entries dropped because a page freed
 
     @staticmethod
     def _key(tokens: np.ndarray) -> bytes:
@@ -332,5 +344,12 @@ class PrefixCache:
         """Drop every entry that references a freed page."""
         freed = set(freed)
         if freed:
+            before = len(self._entries)
             self._entries = {k: v for k, v in self._entries.items()
                              if not freed.intersection(v)}
+            self.evictions += before - len(self._entries)
+
+    def stats(self) -> Dict[str, int]:
+        """Registry snapshot: live entries, lifetime hits and evictions."""
+        return {"entries": len(self._entries), "hits": self.hits,
+                "evictions": self.evictions}

@@ -359,6 +359,7 @@ class SpeculativeRunner(ModelRunner):
         self.accepted = 0
         self.emitted = 0
         self._draft_prefill_fns: Dict[int, Any] = {}
+        self._draft_chunk_fns: Dict[int, Any] = {}
         self._spec_steps: Dict[int, Any] = {}
 
     def _get_spec_step(self, kk: int):
@@ -498,6 +499,42 @@ class SpeculativeRunner(ModelRunner):
                                   jnp.asarray(slot, jnp.int32),
                                   jnp.asarray(n, jnp.int32))
         return tok
+
+    def prefill_chunk(self, tokens: np.ndarray, positions: np.ndarray,
+                      block_tables: np.ndarray, cols: np.ndarray,
+                      temps: np.ndarray) -> np.ndarray:
+        """Chunked admission advances BOTH pools: after the target's chunk,
+        one jitted draft ``decode_paged`` writes the same rows into the
+        draft cache (identical tokens/positions/tables), so a request that
+        finishes chunked prefill enters the speculative rounds with the
+        draft pool position-synced — exactly the bulk-admission state."""
+        tok = super().prefill_chunk(tokens, positions, block_tables, cols,
+                                    temps)
+        fn = self._get_draft_chunk(tokens.shape[1])
+        with parallel_context(self.ctx):
+            self.draft_cache = fn(self.draft_params, self.draft_cache,
+                                  jnp.array(tokens, jnp.int32, copy=True),
+                                  jnp.array(positions, jnp.int32, copy=True),
+                                  jnp.array(block_tables, jnp.int32,
+                                            copy=True))
+        return tok
+
+    def _get_draft_chunk(self, width: int):
+        fn = self._draft_chunk_fns.get(width)
+        if fn is None:
+            def _fn(p, c, toks, pos, tables):
+                with default_spec(self.spec):
+                    _, c = self.draft_model.decode_paged(p, toks, c, pos,
+                                                         tables)
+                return c
+
+            kw: Dict[str, Any] = {}
+            if self.ctx is not None:
+                kw["out_shardings"] = self.draft_cache_shardings
+            fn = jax.jit(_fn, donate_argnums=(1,) if self.donate else (),
+                         **kw)
+            self._draft_chunk_fns[width] = fn
+        return fn
 
     def _get_draft_prefill(self, bucket: int):
         fn = self._draft_prefill_fns.get(bucket)

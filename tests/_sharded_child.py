@@ -291,6 +291,37 @@ def check_mixed_precision():
     print("mixed_precision ok:", want)
 
 
+def check_fleet():
+    """The SLO fleet scheduler on the mesh: chunked prefill + a per-round
+    token budget under data=2,model=4 sharding is token-identical to the
+    single-device plain paged engine, the page pool keeps its sharding
+    across chunked rounds, and the SLO stats account every request."""
+    m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    reqs = lambda: [Request(uid=i,
+                            prompt=(np.arange(1 + i, 4 + i * 4) % 64)
+                            .astype(np.int32),
+                            max_new_tokens=5) for i in range(3)]
+    ref = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=4,
+                        forms=True)
+    want = {r.uid: r.tokens for r in ref.run(reqs())}
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    eng = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=4,
+                        forms=True, mesh=mesh,
+                        slo={"prefill_chunk": 4, "step_token_budget": 8})
+    assert _spec_entries(eng.cache.pool["k"])[1] == "data", \
+        eng.cache.pool["k"].sharding
+    got = {r.uid: r.tokens for r in eng.run(reqs())}
+    assert got == want, (got, want)
+    slo = eng.stats()["slo"]
+    assert slo["completed"] == 3, slo
+    assert slo["chunked_prefill"]["calls"] > 0, slo
+    # chunked commits kept the pool donated and mesh-placed
+    assert _spec_entries(eng.cache.pool["k"])[1] == "data"
+    print("fleet ok:", want)
+
+
 def check_repair():
     """Self-healing on an 8-device mesh: stuck-at faults injected into one
     mesh-sharded compressed leaf drift the health probes, the scan's

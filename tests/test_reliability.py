@@ -233,7 +233,7 @@ def test_health_requires_compressed_tree_and_surfaces_stats():
                         page_size=8, health=HealthConfig())
     st = eng.stats()["health"]
     assert set(st) == {"probes", "repairs", "last_drift", "flagged",
-                       "events"}
+                       "events", "events_dropped"}
     # engines without health keep their stats surface unchanged
     plain = ServingEngine(m, params, max_len=64, batch_slots=2, forms=True)
     assert "health" not in plain.stats()

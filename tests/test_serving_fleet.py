@@ -1,0 +1,475 @@
+"""SLO fleet scheduler: chunked-prefill token identity per family,
+priority/EDF admission, preemption-resume identity, deadlines, the seeded
+load generator, SLO stats snapshots, and the rotating log windows."""
+import collections
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models.registry import build
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.loadgen import LoadGenConfig, generate
+from repro.serving.sched import SLOConfig
+
+
+def _tiny(arch="yi-9b", **extra):
+    base = dict(num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
+                head_dim=16, d_ff=64, vocab_size=64)
+    if arch != "yi-9b":
+        base = {}
+    return build(dataclasses.replace(get_reduced(arch), dtype="float32",
+                                     **base, **extra))
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    m = _tiny()
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _tokens(results):
+    return {r.uid: r.tokens for r in results}
+
+
+def _mixed_reqs(n=3, new=5):
+    """Prompts straddling the chunk size (shorter, equal, longer)."""
+    return [Request(uid=i, prompt=(np.arange(1 + i, 4 + i * 4) % 64)
+                    .astype(np.int32), max_new_tokens=new)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# token identity: chunking must move WHEN work happens, never WHAT
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,extra", [
+    ("yi-9b", {}),
+    ("olmoe-1b-7b", {"capacity_factor": 64.0}),
+    ("deepseek-v3-671b", {"capacity_factor": 64.0}),
+    ("whisper-small", {}),
+])
+def test_fleet_chunked_token_identical_per_family(arch, extra):
+    """Chunked prefill under a per-round token budget emits the exact
+    greedy tokens of the plain paged scheduler on every paged family.
+
+    MoE families need a non-dropping capacity: bulk prefill routes one
+    (1, bucket) token batch while a chunk routes (slots, width), so a
+    capacity that drops tokens drops DIFFERENT tokens on the two paths
+    (the same caveat bulk-vs-dense parity already carries for olmoe)."""
+    m = _tiny(arch, **extra)
+    params = m.init(jax.random.PRNGKey(0))
+    base = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=4)
+    want = _tokens(base.run(_mixed_reqs()))
+    fleet = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=4,
+                          slo={"prefill_chunk": 4, "step_token_budget": 8})
+    got = _tokens(fleet.run(_mixed_reqs()))
+    assert got == want
+    slo = fleet.stats()["slo"]
+    assert slo["completed"] == 3
+    # every prompt token went through the chunked path
+    assert slo["chunked_prefill"]["calls"] > 0
+    assert slo["chunked_prefill"]["tokens"] == \
+        sum(len(r.prompt) for r in _mixed_reqs())
+
+
+def test_fleet_bulk_mode_matches_base(tiny):
+    """prefill_chunk=0 is the instrumented pre-fleet baseline: whole-prompt
+    admission, identical tokens, no chunk dispatches."""
+    m, params = tiny
+    base = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=4)
+    want = _tokens(base.run(_mixed_reqs()))
+    fleet = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=4,
+                          slo={"prefill_chunk": 0, "step_token_budget": 0,
+                               "preempt": False})
+    got = _tokens(fleet.run(_mixed_reqs()))
+    assert got == want
+    slo = fleet.stats()["slo"]
+    assert slo["chunked_prefill"]["calls"] == 0
+    assert slo["completed"] == 3 and slo["ttft_ms"]["n"] == 3
+
+
+def test_preempt_resume_token_identity(tiny):
+    """A preempted-then-resumed request completes with the identical greedy
+    token sequence: eviction returns its pages, the generated prefix is
+    retained host-side, and the resume re-prefills prompt + generated.
+
+    Preemption needs an interactive arrival to land mid-decode of the
+    batch request, so the engine is warmed (rounds become ms-scale) and
+    the arrival offset laddered; token identity is asserted on EVERY
+    attempt, a resume must land on at least one."""
+    m, params = tiny
+    reqs = lambda arr=0.0: [
+        Request(uid="long", prompt=np.arange(1, 5), max_new_tokens=40,
+                priority="batch"),
+        Request(uid="int", prompt=np.array([5, 6, 7]), max_new_tokens=4,
+                priority="interactive", arrival_s=arr)]
+    base = ServingEngine(m, params, max_len=64, batch_slots=2, page_size=4)
+    want = _tokens(base.run(reqs()))
+    fleet = ServingEngine(m, params, max_len=64, batch_slots=1, page_size=4,
+                          slo={"prefill_chunk": 4, "step_token_budget": 4})
+    fleet.run([Request(uid="w", prompt=np.arange(1, 6), max_new_tokens=3)])
+    hit = False
+    for arr in (0.003, 0.01, 0.03, 0.1, 0.3):
+        before = fleet.scheduler.resumes
+        got = _tokens(fleet.run(reqs(arr)))
+        assert got == want, f"preempt-resume diverged at arrival={arr}"
+        if fleet.scheduler.resumes > before:
+            hit = True
+            break
+    assert hit, "no arrival offset landed mid-decode (machine too slow?)"
+    slo = fleet.stats()["slo"]
+    assert slo["preemptions"] >= 1 and slo["resumes"] >= 1
+    assert slo["per_class"]["batch"]["preemptions"] >= 1
+    # eviction/restore churn shows in the allocator's lifetime accounting
+    st = fleet.page_allocator.stats()
+    assert st["total_allocated"] > st["high_water"]
+    assert st["used"] == 0 and st["total_freed"] == st["total_allocated"]
+
+
+def test_fleet_composes_with_speculate(tiny):
+    """The speculative runner advances its draft pool chunk-for-chunk, so
+    chunked prefill + speculation still matches the plain paged engine."""
+    m, params = tiny
+    reqs = lambda: [Request(uid=i, prompt=np.arange(1 + i, 12 + i),
+                            max_new_tokens=6) for i in range(4)]
+    base = ServingEngine(m, params, max_len=64, batch_slots=2, page_size=4,
+                         forms=True, speculate=True, draft_k=3)
+    want = _tokens(base.run(reqs()))
+    fleet = ServingEngine(m, params, max_len=64, batch_slots=2, page_size=4,
+                          forms=True, speculate=True, draft_k=3,
+                          slo={"prefill_chunk": 4, "step_token_budget": 16})
+    got = _tokens(fleet.run(reqs()))
+    assert got == want
+    assert fleet.stats()["speculate"]["rounds"] > 0
+
+
+def test_fleet_composes_with_zero_skip(tiny):
+    m, params = tiny
+    reqs = lambda: [Request(uid=i, prompt=np.arange(1 + i, 12 + i),
+                            max_new_tokens=6) for i in range(4)]
+    base = ServingEngine(m, params, max_len=64, batch_slots=2, page_size=4,
+                         forms=True, zero_skip="block")
+    want = _tokens(base.run(reqs()))
+    fleet = ServingEngine(m, params, max_len=64, batch_slots=2, page_size=4,
+                          forms=True, zero_skip="block",
+                          slo={"prefill_chunk": 4, "step_token_budget": 16})
+    got = _tokens(fleet.run(reqs()))
+    assert got == want
+
+
+def test_fleet_with_prefix_cache_matches_and_skips_shared_pages(tiny):
+    """Chunked admission skips prefix-shared pages outright (filled starts
+    past them) instead of recomputing into scratch.  The sharer must admit
+    while the holder is still live (entries die with their pages), so slot
+    scarcity forces the overlap: 2 slots, a long-running holder, a filler
+    sized to finish after the holder's prefill completes (registration
+    happens at the first token) but well before the holder does — its
+    freed slot admits the queued sharer mid-holder-decode."""
+    m, params = tiny
+    shared = np.arange(1, 9).astype(np.int32)        # 2 full 4-row pages
+    reqs = lambda: [
+        Request(uid="holder", prompt=np.concatenate([shared, [20]]),
+                max_new_tokens=30),
+        Request(uid="filler", prompt=np.array([9, 8]), max_new_tokens=20),
+        Request(uid="sharer", prompt=np.concatenate([shared, [21]]),
+                max_new_tokens=5),
+    ]
+    base = ServingEngine(m, params, max_len=64, batch_slots=2, page_size=4,
+                         prefix_cache=True)
+    want = _tokens(base.run(reqs()))
+    fleet = ServingEngine(m, params, max_len=64, batch_slots=2, page_size=4,
+                          prefix_cache=True, slo={"prefill_chunk": 4})
+    got = _tokens(fleet.run(reqs()))
+    assert got == want
+    assert fleet.prefix_cache.hits >= 1
+    # the sharer's 2 shared pages (8 tokens) never went through a chunk
+    total = sum(len(r.prompt) for r in reqs())
+    assert fleet.stats()["slo"]["chunked_prefill"]["tokens"] == total - 8
+
+
+# ---------------------------------------------------------------------------
+# admission policy: priorities, EDF, deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_interactive_admits_before_batch(tiny):
+    """With one slot and simultaneous arrivals, the interactive request is
+    admitted (and completes) before the batch one."""
+    m, params = tiny
+    fleet = ServingEngine(m, params, max_len=32, batch_slots=1, page_size=4,
+                          slo={"prefill_chunk": 4})
+    fleet.run([
+        Request(uid="b", prompt=np.array([9, 8, 7]), max_new_tokens=4,
+                priority="batch"),
+        Request(uid="i", prompt=np.array([1, 2, 3]), max_new_tokens=4,
+                priority="interactive"),
+    ])
+    order = [uid for uid, _ in fleet.scheduler.admissions]
+    assert order == ["i", "b"]
+    pc = fleet.stats()["slo"]["per_class"]
+    assert pc["interactive"]["completed"] == 1
+    assert pc["batch"]["completed"] == 1
+
+
+def test_edf_within_priority_class(tiny):
+    """Same class, same arrival: the tighter deadline admits first."""
+    m, params = tiny
+    fleet = ServingEngine(m, params, max_len=32, batch_slots=1, page_size=4,
+                          slo={"prefill_chunk": 4})
+    fleet.run([
+        Request(uid="lax", prompt=np.array([1, 2, 3]), max_new_tokens=4,
+                deadline_ms=60_000.0),
+        Request(uid="tight", prompt=np.array([4, 5, 6]), max_new_tokens=4,
+                deadline_ms=500.0),
+    ])
+    order = [uid for uid, _ in fleet.scheduler.admissions]
+    assert order == ["tight", "lax"]
+
+
+def test_deadline_misses_counted_per_class(tiny):
+    """An unmeetable deadline counts a miss for its class (completion is
+    never blocked — the deadline is an SLO measure, not a drop policy)."""
+    m, params = tiny
+    fleet = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=4,
+                          slo={"prefill_chunk": 4})
+    fleet.run([
+        Request(uid="doomed", prompt=np.array([1, 2, 3]), max_new_tokens=4,
+                deadline_ms=0.001),
+        Request(uid="fine", prompt=np.array([4, 5, 6]), max_new_tokens=4,
+                deadline_ms=60_000.0, priority="batch"),
+    ])
+    slo = fleet.stats()["slo"]
+    assert slo["completed"] == 2 and slo["deadline_misses"] == 1
+    assert slo["per_class"]["interactive"]["deadline_misses"] == 1
+    assert slo["per_class"]["batch"]["deadline_misses"] == 0
+
+
+def test_default_priority_and_deadline_applied(tiny):
+    """Requests leaving priority/deadline unset inherit the config
+    defaults — here an unmeetable default deadline, so the miss proves the
+    default was stamped."""
+    m, params = tiny
+    fleet = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=4,
+                          slo={"prefill_chunk": 4, "default_priority": "batch",
+                               "default_deadline_ms": 0.001})
+    fleet.run([Request(uid=0, prompt=np.array([1, 2, 3]), max_new_tokens=4)])
+    pc = fleet.stats()["slo"]["per_class"]
+    assert pc["batch"]["completed"] == 1
+    assert pc["batch"]["deadline_misses"] == 1
+    assert pc["interactive"]["completed"] == 0
+
+
+def test_unknown_priority_rejected(tiny):
+    m, params = tiny
+    fleet = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=4,
+                          slo={"prefill_chunk": 4})
+    with pytest.raises(ValueError, match="priority"):
+        fleet.run([Request(uid=0, prompt=np.array([1, 2]), max_new_tokens=2,
+                           priority="realtime")])
+
+
+# ---------------------------------------------------------------------------
+# config + engine guards
+# ---------------------------------------------------------------------------
+
+
+def test_slo_config_validation():
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        SLOConfig(prefill_chunk=-1)
+    with pytest.raises(ValueError, match="step_token_budget"):
+        SLOConfig(step_token_budget=-8)
+    with pytest.raises(ValueError, match="default_priority"):
+        SLOConfig(default_priority="urgent")
+    with pytest.raises(ValueError, match="default_deadline_ms"):
+        SLOConfig(default_deadline_ms=0.0)
+    with pytest.raises(ValueError, match="window"):
+        SLOConfig(window=1)
+
+
+def test_fleet_requires_paged_cache(tiny):
+    m, params = tiny
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(m, params, max_len=32, batch_slots=2,
+                      slo={"prefill_chunk": 4})
+
+
+def test_fleet_rejects_recurrent_families():
+    """xlstm has no paged path (O(1) recurrent state): page_size falls back
+    to the dense cache, so the fleet scheduler must refuse."""
+    m = _tiny("xlstm-350m")
+    params = m.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(m, params, max_len=32, batch_slots=2, page_size=4,
+                      slo={"prefill_chunk": 4})
+
+
+# ---------------------------------------------------------------------------
+# stats: snapshots, rotating windows, reset
+# ---------------------------------------------------------------------------
+
+
+def test_stats_returns_deep_copied_snapshots(tiny):
+    """engine.stats() must hand back a snapshot — mutating it (or the
+    serving loop mutating the live dicts) must not alias."""
+    m, params = tiny
+    fleet = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=4,
+                          slo={"prefill_chunk": 4})
+    fleet.run(_mixed_reqs())
+    st = fleet.stats()
+    st["pages"]["free"] = -999
+    st["slo"]["per_class"]["interactive"]["completed"] = -999
+    st["slo"]["chunked_prefill"]["calls"] = -999
+    again = fleet.stats()
+    assert again["pages"]["free"] != -999
+    assert again["slo"]["per_class"]["interactive"]["completed"] != -999
+    assert again["slo"]["chunked_prefill"]["calls"] != -999
+
+
+def test_admission_log_rotates_and_counts_drops(tiny):
+    """The admission log is a rotating window: old entries roll off and are
+    counted in stats()["admissions_dropped"], not kept."""
+    m, params = tiny
+    fleet = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=4,
+                          slo={"prefill_chunk": 4})
+    fleet.scheduler.admissions = collections.deque(maxlen=2)
+    fleet.run([Request(uid=i, prompt=np.array([1 + i, 2]), max_new_tokens=2)
+               for i in range(5)])
+    assert len(fleet.scheduler.admissions) == 2
+    assert fleet.stats()["admissions_dropped"] == 3
+
+
+def test_latency_windows_rotate_and_count_drops(tiny):
+    """window=2 forces the latency sample windows to roll: percentiles come
+    from the retained samples, ``n`` still counts every sample taken."""
+    m, params = tiny
+    fleet = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=4,
+                          slo={"prefill_chunk": 4, "window": 2})
+    fleet.run(_mixed_reqs(n=4))
+    slo = fleet.stats()["slo"]
+    assert slo["window_dropped"] > 0
+    assert slo["ttft_ms"]["n"] == 4          # drops counted, not lost
+    assert slo["inter_token_ms"]["n"] > 2
+
+
+def test_reset_slo_stats_zeroes_counters_and_windows(tiny):
+    m, params = tiny
+    fleet = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=4,
+                          slo={"prefill_chunk": 4})
+    fleet.run(_mixed_reqs())
+    assert fleet.stats()["slo"]["completed"] == 3
+    fleet.scheduler.reset_slo_stats()
+    slo = fleet.stats()["slo"]
+    assert slo["completed"] == 0 and slo["ttft_ms"]["n"] == 0
+    assert slo["inter_token_ms"]["n"] == 0 and slo["window_dropped"] == 0
+    # the scheduler still serves after a reset
+    assert len(fleet.run(_mixed_reqs(n=1))) == 1
+
+
+def test_health_event_log_rotates():
+    """HealthMonitor's event log is the same rotating-window shape: capped,
+    newest retained, rolled-off events counted."""
+    from repro.reliability.health import EVENT_LOG_WINDOW, HealthMonitor
+
+    assert EVENT_LOG_WINDOW > 0
+    hm = HealthMonitor.__new__(HealthMonitor)
+    hm.events = collections.deque(maxlen=3)
+    hm.events_dropped = 0
+    for i in range(5):
+        hm._log_event({"i": i})
+    assert [e["i"] for e in hm.events] == [2, 3, 4]
+    assert hm.events_dropped == 2
+
+
+# ---------------------------------------------------------------------------
+# the load generator
+# ---------------------------------------------------------------------------
+
+
+def test_loadgen_is_a_pure_function_of_the_config():
+    cfg = LoadGenConfig(n_requests=16, rate=50.0, seed=3, batch_frac=0.3,
+                        deadline_ms=800.0, batch_deadline_ms=5000.0,
+                        adversarial_len=40)
+    a, b = generate(cfg), generate(cfg)
+    assert len(a) == len(b) == 16
+    for ra, rb in zip(a, b):
+        assert ra.uid == rb.uid and ra.arrival_s == rb.arrival_s
+        assert ra.priority == rb.priority
+        assert ra.deadline_ms == rb.deadline_ms
+        assert ra.max_new_tokens == rb.max_new_tokens
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+    other = generate(dataclasses.replace(cfg, seed=4))
+    assert any(not np.array_equal(x.prompt, y.prompt)
+               for x, y in zip(a, other))
+
+
+def test_loadgen_trace_shape():
+    """Arrivals are sorted Poisson times, lengths respect their ranges,
+    classes carry their deadlines, and the adversarial prompt is planted
+    mid-trace in the batch class."""
+    cfg = LoadGenConfig(n_requests=20, rate=100.0, seed=0,
+                        prompt_len=(2, 8), out_len=(3, 6), batch_frac=0.4,
+                        deadline_ms=700.0, batch_deadline_ms=9000.0,
+                        adversarial_len=50, vocab=32)
+    reqs = generate(cfg)
+    arr = [r.arrival_s for r in reqs]
+    assert arr == sorted(arr) and arr[0] > 0
+    adv = reqs[10]
+    assert len(adv.prompt) == 50 and adv.priority == "batch"
+    for i, r in enumerate(reqs):
+        if i != 10:
+            assert 2 <= len(r.prompt) <= 8
+        assert 3 <= r.max_new_tokens <= 6
+        assert r.prompt.min() >= 1 and r.prompt.max() < 32
+        assert r.deadline_ms == (9000.0 if r.priority == "batch" else 700.0)
+    assert {r.priority for r in reqs} == {"interactive", "batch"}
+
+
+def test_loadgen_validation():
+    with pytest.raises(ValueError, match="n_requests"):
+        LoadGenConfig(n_requests=0)
+    with pytest.raises(ValueError, match="rate"):
+        LoadGenConfig(rate=0.0)
+    with pytest.raises(ValueError, match="prompt_len"):
+        LoadGenConfig(prompt_len=(5, 2))
+    with pytest.raises(ValueError, match="batch_frac"):
+        LoadGenConfig(batch_frac=1.5)
+    with pytest.raises(ValueError, match="vocab"):
+        LoadGenConfig(vocab=1)
+    with pytest.raises(ValueError, match="adversarial_len"):
+        LoadGenConfig(adversarial_len=-1)
+    with pytest.raises(ValueError, match="adversarial_count"):
+        LoadGenConfig(adversarial_count=0)
+
+
+def test_loadgen_multiple_adversarial_prompts():
+    """adversarial_count > 1 plants that many batch-class giants at evenly
+    spaced trace positions — the sustained-stall trace bench_load uses."""
+    cfg = LoadGenConfig(n_requests=20, rate=100.0, seed=0,
+                        prompt_len=(2, 8), out_len=(3, 6),
+                        adversarial_len=50, adversarial_count=3, vocab=32)
+    reqs = generate(cfg)
+    giant_idx = [i for i, r in enumerate(reqs) if len(r.prompt) == 50]
+    assert giant_idx == [5, 10, 15]
+    assert all(reqs[i].priority == "batch" for i in giant_idx)
+    for i, r in enumerate(reqs):
+        if i not in giant_idx:
+            assert 2 <= len(r.prompt) <= 8
+
+
+def test_loadgen_trace_serves_end_to_end(tiny):
+    """A seeded trace runs through the fleet engine: every request
+    completes with its requested token budget, and the arrival schedule
+    actually gated admission (open loop, not all-at-once)."""
+    m, params = tiny
+    cfg = LoadGenConfig(n_requests=6, rate=300.0, seed=1, prompt_len=(2, 6),
+                        out_len=(2, 4), deadline_ms=5000.0, vocab=64)
+    fleet = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=4,
+                          slo={"prefill_chunk": 4, "step_token_budget": 8})
+    results = fleet.run(generate(cfg))
+    want = {r.uid: r.max_new_tokens for r in generate(cfg)}
+    assert {r.uid: len(r.tokens) for r in results} == want
+    assert fleet.stats()["slo"]["completed"] == 6

@@ -290,7 +290,8 @@ def test_temperature_decode_dense_paged_parity_under_fixed_key():
 def test_page_allocator_stats_and_high_water():
     a = KV.PageAllocator(6)          # 5 usable + scratch
     assert a.stats() == {"capacity": 5, "free": 5, "used": 0, "shared": 0,
-                         "high_water": 0}
+                         "high_water": 0, "total_allocated": 0,
+                         "total_freed": 0, "failed_allocs": 0}
     p1 = a.alloc(3)
     a.share(p1[:1])
     st = a.stats()
@@ -301,6 +302,117 @@ def test_page_allocator_stats_and_high_water():
     st = a.stats()
     assert st["used"] == 0 and st["free"] == 5 and st["shared"] == 0
     assert st["high_water"] == 3     # the mark survives the release
+
+
+def test_page_allocator_lifetime_accounting():
+    """The lifetime counters separate churn from occupancy: an evicted-and-
+    restored request allocates its pages twice, a refused alloc counts a
+    failure, and a refcounted release frees nothing until the last holder."""
+    a = KV.PageAllocator(5)          # 4 usable + scratch
+    p = a.alloc(3)
+    assert a.stats()["total_allocated"] == 3
+    assert a.alloc(2) is None        # only 1 page left
+    assert a.stats()["failed_allocs"] == 1
+    a.share(p[:1])
+    a.release(p)                     # shared page survives its first holder
+    assert a.stats()["total_freed"] == 2
+    a.release(p[:1])
+    assert a.stats()["total_freed"] == 3
+    q = a.alloc(3)                   # the eviction/restore second life
+    st = a.stats()
+    assert sorted(q) == sorted(p)
+    assert st["total_allocated"] == 6 and st["total_freed"] == 3
+    assert st["high_water"] == 3     # churn never inflated the peak
+
+
+def test_high_water_monotone_under_eviction_churn():
+    """stats()["high_water"] is monotone non-decreasing across any
+    alloc/release interleaving and always equals the true peak."""
+    a = KV.PageAllocator(9)          # 8 usable + scratch
+    marks, peak = [], 0
+    held = []
+    for n_alloc, n_release in [(2, 0), (3, 2), (1, 1), (4, 0), (0, 5)]:
+        if n_alloc:
+            held.extend(a.alloc(n_alloc))
+            peak = max(peak, a.used_pages)
+        for _ in range(n_release):
+            a.release([held.pop()])
+        marks.append(a.stats()["high_water"])
+    assert marks == sorted(marks), marks
+    assert marks[-1] == peak == 7
+
+
+def test_prefix_cache_stats_track_hits_and_evictions():
+    pc = KV.PrefixCache(page_size=4)
+    prompt = np.arange(8, dtype=np.int32)
+    pc.register(prompt, [3, 4])      # entries for 1 and 2 full pages
+    assert pc.stats() == {"entries": 2, "hits": 0, "evictions": 0}
+    assert pc.match(prompt) == [3, 4]
+    assert pc.stats()["hits"] == 1
+    pc.evict([4])                    # kills only the 2-page entry
+    assert pc.stats() == {"entries": 1, "hits": 1, "evictions": 1}
+    pc.evict([3])
+    assert pc.stats() == {"entries": 0, "hits": 1, "evictions": 2}
+
+
+def test_eviction_restore_round_trip_bit_identical_pages():
+    """The preemption contract at the page level: evict a slot (pages back
+    to the pool), restore by re-prefilling the same tokens into the
+    recycled pages — the restored page rows are BIT-identical to the
+    evicted ones (deterministic prefill), and the allocator's lifetime
+    counters show the double life."""
+    m = _tiny()
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, max_len=32, batch_slots=2, page_size=8)
+    sched = eng.scheduler
+    prompt = (np.arange(12) % 64).astype(np.int32)   # 2 pages of prefill
+    pages = sched._reserve_pages(0, 0, prompt, 4)
+    eng.runner.prefill_slot(0, prompt, pages=pages)
+    ids0 = list(sched.slot_pages[0])
+    # destination page j holds cache rows [j*ps, (j+1)*ps): snapshot in
+    # block-table order so the comparison is position-by-position
+    before = {name: np.asarray(pool)[:, ids0].copy()
+              for name, pool in eng.cache.pool.items()}
+    need = len(ids0)
+    sched._release_slot(0)                           # evict
+    assert eng.page_allocator.stats()["total_freed"] == need
+    pages2 = sched._reserve_pages(1, 1, prompt, 4)   # restore (other slot)
+    ids1 = list(sched.slot_pages[1])
+    assert sorted(ids1) == sorted(ids0), "freed pages were not recycled"
+    eng.runner.prefill_slot(1, prompt, pages=pages2)
+    after = {name: np.asarray(pool)[:, ids1]
+             for name, pool in eng.cache.pool.items()}
+    for name in before:
+        np.testing.assert_array_equal(after[name], before[name])
+    st = eng.page_allocator.stats()
+    assert st["total_allocated"] == 2 * need and st["failed_allocs"] == 0
+
+
+def test_shared_prefix_pages_survive_preemption_of_one_sharer():
+    """Preemption-by-eviction releases a slot's pages while a sharer still
+    refcounts the prefix pages: those pages must NOT free (the sharer's
+    block table still maps them), and the PrefixCache entry must survive
+    so later admissions keep hitting it."""
+    a = KV.PageAllocator(9)
+    pc = KV.PrefixCache(4)
+    prompt = np.arange(8, dtype=np.int32)        # 2 full pages
+    owner = a.alloc(3)                           # prefix + decode tail
+    pc.register(prompt, owner)
+    shared = pc.match(prompt)
+    a.share(shared)                              # the sharer's refcounts
+    # the OWNER is preempted: only its unshared tail page frees
+    freed = a.release(owner)
+    pc.evict(freed)
+    assert freed == [owner[2]]
+    assert a.stats()["used"] == 2                # prefix pages still live
+    assert pc.match(prompt) == owner[:2]         # entry survived
+    assert pc.stats()["evictions"] == 0          # no entry maps the tail
+    # the sharer finishes: now the prefix pages free and the entry dies
+    freed = a.release(shared)
+    pc.evict(freed)
+    assert sorted(freed) == sorted(owner[:2])
+    assert pc.match(prompt) == []
+    assert a.stats()["used"] == 0
 
 
 def test_engine_stats_report_pool_occupancy():

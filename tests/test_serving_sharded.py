@@ -61,6 +61,14 @@ def test_speculative_decode_on_mesh_parity():
     assert "speculative ok" in out
 
 
+def test_fleet_chunked_prefill_on_mesh_parity():
+    """The SLO fleet scheduler's chunked prefill under data=2,model=4:
+    token-identical to the single-device plain paged engine, page pool
+    sharding preserved across chunked rounds."""
+    out = _run_child("fleet")
+    assert "fleet ok" in out
+
+
 def test_restore_straight_into_sharded_layout():
     """checkpoint.restore(shardings=...) places compressed leaves onto the
     mesh without a replicated intermediate, and the engine serves from it."""
